@@ -1,0 +1,86 @@
+"""Shared benchmark plumbing: a trained draft/target pair (cached on disk)
+and roofline-derived stage-time models for the wall-clock figures."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core.speculative import ModelBundle
+from repro.data import ByteCorpus, DataConfig, batch_iterator, synthetic_corpus
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+CACHE = os.path.join(os.path.dirname(__file__), ".bench_cache")
+
+TARGET_CFG = ModelConfig(name="bench-target", family="dense", num_layers=4,
+                         d_model=256, num_heads=8, num_kv_heads=2, d_ff=704,
+                         vocab_size=260)
+DRAFT_CFG = ModelConfig(name="bench-draft", family="dense", num_layers=2,
+                        d_model=128, num_heads=4, num_kv_heads=2, d_ff=352,
+                        vocab_size=260, tie_embeddings=True)
+
+
+def _train(cfg: ModelConfig, steps: int, seed: int):
+    from repro.launch.train import train
+    # seed=0 for BOTH: identical corpus (the draft/target premise)
+    params, losses = train(cfg, steps=steps, batch=8, seq=64, lr=2e-3,
+                           seed=0, log_every=0, corpus_bytes=1 << 17)
+    return params, losses
+
+
+def trained_pair(steps: int = 400):
+    """Returns (target ModelBundle, draft ModelBundle), cached on disk.
+
+    Both models are trained on the SAME synthetic Markov corpus, so the
+    draft genuinely predicts the target (realistic acceptance rates) —
+    the paper's LLaMA-1B/70B relationship at laptop scale.
+    """
+    path = f"{CACHE}_pair_{steps}.npz"
+    if os.path.exists(path):
+        blob = load_pytree(path)
+        tp, dp = blob["target"], blob["draft"]
+        tp = jax.tree.map(jnp.asarray, tp)
+        dp = jax.tree.map(jnp.asarray, dp)
+    else:
+        tp, tl = _train(TARGET_CFG, steps, seed=0)
+        dp, dl = _train(DRAFT_CFG, steps, seed=1)
+        save_pytree(path, {"target": tp, "draft": dp})
+    return ModelBundle(tp, TARGET_CFG), ModelBundle(dp, DRAFT_CFG)
+
+
+def eval_prompts(n: int = 6, length: int = 32, seed: int = 3):
+    """Held-out prompts from the same corpus family."""
+    text = synthetic_corpus(1 << 14, seed=seed)
+    corpus = ByteCorpus(text, DataConfig(seq_len=length, batch_size=1))
+    return [corpus.example(i)[0] for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# roofline-derived hardware model for the paper's deployment (Fig. 5/8)
+# --------------------------------------------------------------------------
+def layer_decode_time(cfg: ModelConfig, *, width: int, kv_len: int = 2048,
+                      batch: int = 1) -> float:
+    """Dominant roofline term for ONE decoder layer verifying ``width``
+    tokens (decode is memory-bound: params + KV stream from HBM)."""
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    p_layer = (h * hd + 2 * kv * hd) * d + h * hd * d + 3 * d * ff
+    bytes_layer = 2 * p_layer + 2 * kv_len * kv * hd * 2 * batch
+    flops_layer = 2 * p_layer * width * batch
+    return max(bytes_layer / HBM_BW, flops_layer / PEAK_FLOPS)
+
+
+def model_decode_time(cfg: ModelConfig, *, width: int,
+                      kv_len: int = 2048) -> float:
+    return cfg.num_layers * layer_decode_time(cfg, width=width,
+                                              kv_len=kv_len)
+
+
+def activation_bytes(cfg: ModelConfig, width: int) -> float:
+    return width * cfg.d_model * 2.0  # bf16 activations between stages

@@ -1,0 +1,44 @@
+"""Fig. 3 — the "scale effect": top-k accuracy of the draft model's
+predictions against the target's greedy choice, k ∈ {1..8}."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.models import transformer as tf
+
+
+def run(verbose: bool = True):
+    target, draft = common.trained_pair()
+    prompts = common.eval_prompts(n=4, length=48)
+    ks = [1, 2, 4, 8]
+    hits = {k: 0 for k in ks}
+    total = 0
+    t0 = time.perf_counter()
+    for p in prompts:
+        tl, _ = tf.forward(target.params, target.cfg, jnp.asarray(p)[None])
+        dl, _ = tf.forward(draft.params, draft.cfg, jnp.asarray(p)[None])
+        t_arg = np.asarray(jnp.argmax(tl[0], -1))           # [S]
+        d_top = np.asarray(jax.lax.top_k(dl[0], max(ks))[1])  # [S, 8]
+        for k in ks:
+            hits[k] += int((d_top[:, :k] == t_arg[:, None]).any(-1).sum())
+        total += len(t_arg)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows = []
+    accs = {k: hits[k] / total for k in ks}
+    if verbose:
+        print("# Fig3: draft top-k containment of target argmax")
+        for k in ks:
+            print(f"  top-{k}: {accs[k]:.3f}")
+    for k in ks:
+        rows.append((f"fig3_topk_{k}", dt / len(ks), f"acc={accs[k]:.3f}"))
+    assert accs[max(ks)] >= accs[min(ks)], "top-k accuracy must be monotone"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

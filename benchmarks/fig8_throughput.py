@@ -1,0 +1,38 @@
+"""Fig. 8 — throughput vs concurrency: PipeDec serialises tasks (latency
+priority) while PP/STPP overlap batches; modelled with the same roofline
+stage times as Fig. 5, acceptance from real runs."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.fig5_latency import hardware, measure_acceptance
+from repro.core import sim
+
+
+def run(verbose: bool = True, n_stages: int = 14, w: int = 16):
+    t0 = time.perf_counter()
+    tps, acc, stpp_acc = measure_acceptance(n_stages, w=w)
+    hw = hardware(n_stages, w)
+    rows = []
+    if verbose:
+        print("# Fig8: throughput (tokens/s, modelled) vs concurrency")
+    for batch in (1, 2, 4, 8):
+        thr_pp = sim.pp_throughput(hw, batch)
+        thr_pd = sim.pipedec_throughput(hw, batch, tps)
+        thr_st = sim.stpp_throughput(hw, batch, depth=4,
+                                     mean_accepted=stpp_acc)
+        rows.append((f"fig8_batch{batch}",
+                     (time.perf_counter() - t0) * 1e6,
+                     f"pp={thr_pp:.1f};stpp={thr_st:.1f};"
+                     f"pipedec={thr_pd:.1f}"))
+        if verbose:
+            print(f"  batch={batch}: PP {thr_pp:8.1f}  STPP {thr_st:8.1f}  "
+                  f"PipeDec {thr_pd:8.1f} tok/s")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Kernel micro-benchmarks (CPU interpret mode: correctness-grade timing;
+the numbers that matter on hardware come from the dry-run roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters: int = 3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    b, h, kv, n, hd, lmax, t = 1, 8, 2, 32, 128, 2048, 64
+    q = jnp.asarray(rng.normal(size=(b, h, n, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(b, kv, lmax, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(b, kv, lmax, hd)), jnp.float32)
+    kt = jnp.asarray(rng.normal(size=(b, kv, t, hd)), jnp.float32)
+    vt = jnp.asarray(rng.normal(size=(b, kv, t, hd)), jnp.float32)
+    mask = jnp.asarray(rng.random((n, t)) > 0.4)
+
+    us_kernel = _time(lambda: ops.tree_attention(q, kp, vp, kt, vt, mask,
+                                                 1024))
+    us_ref = _time(lambda: ref.tree_attention_ref(q, kp, vp, kt, vt, mask,
+                                                  1024))
+    dq = q[:, :, :1]
+    us_dec = _time(lambda: ops.decode_attention(dq, kp, vp, 1024))
+    us_dref = _time(lambda: ref.decode_attention_ref(dq, kp, vp, 1024))
+    rows = [
+        ("tree_attention_pallas_interp", us_kernel, f"ref_us={us_ref:.0f}"),
+        ("decode_attention_pallas_interp", us_dec, f"ref_us={us_dref:.0f}"),
+    ]
+    if verbose:
+        print("# Kernels (interpret mode)")
+        for name, us, extra in rows:
+            print(f"  {name}: {us:.0f}us ({extra})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run results (EXPERIMENTS.md §Roofline).
+
+Reads ``dryrun_results.jsonl`` (produced by ``python -m
+repro.launch.dryrun --all --out dryrun_results.jsonl``) and prints the
+per-(arch × shape × mesh) three-term roofline with the dominant
+bottleneck and MODEL_FLOPS/HLO_FLOPs ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import OrderedDict
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.jsonl")
+
+
+def load(path: str = RESULTS):
+    rows = OrderedDict()
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return rows
+
+
+def fmt(v: float) -> str:
+    return f"{v:.2e}"
+
+
+def markdown_table(rows) -> str:
+    out = ["| arch | shape | mesh | t_compute | t_memory | t_collective |"
+           " bottleneck | useful |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in rows.items():
+        out.append(
+            f"| {a} | {s} | {m} | {fmt(r['t_compute_s'])} "
+            f"| {fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} "
+            f"| {r['bottleneck']} | {r['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def run(verbose: bool = True):
+    t0 = time.perf_counter()
+    rows = load()
+    out = []
+    if not rows:
+        out.append(("roofline_table", 0.0, "missing:dryrun_results.jsonl"))
+        if verbose:
+            print("# Roofline: run the dry-run first")
+        return out
+    if verbose:
+        print(f"# Roofline: {len(rows)} (arch × shape × mesh) rows")
+        print(markdown_table(rows))
+    bottlenecks = {}
+    for r in rows.values():
+        bottlenecks[r["bottleneck"]] = bottlenecks.get(r["bottleneck"], 0) + 1
+    dt = (time.perf_counter() - t0) * 1e6
+    out.append(("roofline_table", dt,
+                ";".join(f"{k}={v}" for k, v in sorted(bottlenecks.items()))))
+    return out
+
+
+if __name__ == "__main__":
+    run()

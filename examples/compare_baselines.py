@@ -1,0 +1,48 @@
+"""Baseline comparison on one prompt: PP vs STPP vs PipeDec with a trained
+pair — prints acceptance, tokens/timestep and the modelled Fig.-5-style
+speedups for the paper's 70B/1B deployment at 7/14/21 stages.
+
+    PYTHONPATH=src python examples/compare_baselines.py
+"""
+import numpy as np
+
+from benchmarks import common
+from benchmarks.fig5_latency import hardware, measure_acceptance
+from repro.core import sim
+from repro.core.baselines import (STPPConfig, STPPEngine,
+                                  generate_autoregressive)
+from repro.core.pipedec import PipeDecConfig, PipeDecEngine
+
+
+def main():
+    target, draft = common.trained_pair()
+    prompt = common.eval_prompts(n=1, length=32)[0]
+    NEW = 48
+
+    ar = generate_autoregressive(target, prompt, NEW)
+    pd, pstats = PipeDecEngine(
+        target, draft, PipeDecConfig(n_stages=14, width=16, branch=4),
+        max_len=256).generate(prompt, NEW)
+    st, sstats = STPPEngine(
+        target, draft, STPPConfig(depth=4, width=16, branch=4),
+        max_len=256).generate(prompt, NEW)
+    assert np.array_equal(ar, pd) and np.array_equal(ar, st)
+    print(f"outputs identical across PP/STPP/PipeDec ✓")
+    print(f"PipeDec: acceptance={pstats.acceptance:.2f}, "
+          f"tokens/timestep={pstats.tokens_per_timestep:.2f}")
+    print(f"STPP:    accepted/round={sstats.mean_accepted:.2f}")
+
+    print("\nmodelled single-task latency (paper deployment, ms/token):")
+    for stages in (7, 14, 21):
+        tps, acc, stpp_acc = measure_acceptance(stages)
+        hw = hardware(stages, 16)
+        pp_l = sim.pp_latency_per_token(hw)
+        pd_l = sim.pipedec_latency_per_token(hw, tps)
+        st_l = sim.stpp_latency_per_token(hw, 4, stpp_acc)
+        print(f"  {stages:2d} stages: PP {pp_l*1e3:7.2f}  "
+              f"STPP {st_l*1e3:7.2f}  PipeDec {pd_l*1e3:7.2f}  "
+              f"→ {pp_l/pd_l:.2f}x vs PP, {st_l/pd_l:.2f}x vs STPP")
+
+
+if __name__ == "__main__":
+    main()

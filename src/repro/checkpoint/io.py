@@ -1,0 +1,81 @@
+"""Checkpointing: flat-key .npz serialisation of arbitrary pytrees.
+
+Keys encode the tree path; structure is reconstructed on load from the keys
+alone (dict/list nesting), so no pickle and no schema file.  Sharded arrays
+are gathered to host before save (single-host writer; multi-host would
+write per-process shards — out of scope for the CPU container but the key
+scheme is shard-suffix ready).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{_SEP}d:{k}" if prefix else f"d:{k}"))
+    elif isinstance(tree, (list, tuple)):
+        tag = "l" if isinstance(tree, list) else "t"
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{_SEP}{tag}:{i}" if prefix
+                                else f"{tag}:{i}"))
+    elif tree is None:
+        out[prefix + _SEP + "none:" if prefix else "none:"] = np.zeros(0)
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat = _flatten(jax.device_get(tree))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def _assign(root, parts, value):
+    key = parts[0]
+    kind, _, name = key.partition(":")
+    if kind == "none":
+        return None
+    if len(parts) == 1:
+        leaf = value
+        if kind == "d":
+            root[name] = leaf
+        else:
+            root.append(leaf)
+        return root
+    if kind == "d":
+        child = root.setdefault(name, _container(parts[1]))
+        res = _assign(child, parts[1:], value)
+        if res is None:
+            root[name] = None
+        return root
+    idx = int(name)
+    while len(root) <= idx:
+        root.append(_container(parts[1]))
+    res = _assign(root[idx], parts[1:], value)
+    if res is None:
+        root[idx] = None
+    return root
+
+
+def _container(next_key: str):
+    return {} if next_key.startswith("d:") else []
+
+
+def load_pytree(path: str) -> Any:
+    data = np.load(path, allow_pickle=False)
+    keys = sorted(data.files)
+    root = _container(keys[0].split(_SEP)[0])
+    for k in keys:
+        _assign(root, k.split(_SEP), data[k])
+    return root

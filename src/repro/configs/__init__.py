@@ -1,0 +1,60 @@
+"""Registry of the ten assigned architectures (+ the paper's own pair).
+
+Each module exposes ``FULL`` (the exact assigned config) and ``SMOKE``
+(a reduced same-family variant: ≤2 layers / unit-pattern, d_model ≤ 512,
+≤4 experts) used by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "moonshot_v1_16b_a3b",
+    "qwen2_moe_a2_7b",
+    "whisper_base",
+    "gemma_7b",
+    "internvl2_26b",
+    "mamba2_130m",
+    "qwen2_5_32b",
+    "recurrentgemma_9b",
+    "qwen1_5_32b",
+    "deepseek_v2_236b",
+]
+
+# accept dashed/dotted public ids too
+ALIASES = {
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "whisper-base": "whisper_base",
+    "gemma-7b": "gemma_7b",
+    "internvl2-26b": "internvl2_26b",
+    "mamba2-130m": "mamba2_130m",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    # the paper's own experiment pair (reduced-scale stand-ins)
+    "pipedec-target": "pipedec_pair",
+    "pipedec-draft": "pipedec_pair",
+}
+
+
+def _module(arch: str):
+    name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{name}"), name
+
+
+def get_config(arch: str, *, smoke: bool = False) -> ModelConfig:
+    mod, name = _module(arch)
+    if arch == "pipedec-draft":
+        return mod.DRAFT_SMOKE if smoke else mod.DRAFT
+    if arch == "pipedec-target":
+        return mod.TARGET_SMOKE if smoke else mod.TARGET
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke=smoke) for a in ARCH_IDS}

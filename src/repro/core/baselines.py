@@ -1,0 +1,157 @@
+"""Baselines: vanilla pipeline decoding (PP) and static-tree speculative
+decoding (STPP, after SpecInfer [18] as the paper's baseline).
+
+Both share the target model with PipeDec; STPP also shares the dynamic-tree
+machinery — a "static" tree is simply built to full depth before a single
+one-shot verification pass, instead of layer-per-timestep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tree as tree_lib
+from repro.core.speculative import (ModelBundle, SamplingParams,
+                                    draft_candidates, select_token)
+
+
+# --------------------------------------------------------------------------
+# PP — plain autoregressive greedy/stochastic decode (1 token / pipeline pass)
+# --------------------------------------------------------------------------
+def generate_autoregressive(target: ModelBundle, prompt: np.ndarray,
+                            max_new_tokens: int, *,
+                            sampling: SamplingParams = SamplingParams(),
+                            max_len: int = 512,
+                            key: Optional[jax.Array] = None) -> np.ndarray:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    cache = target.init_cache(1, max_len)
+    logits, cache = target.prefill(jnp.asarray(prompt, jnp.int32)[None], cache)
+    prefix = (target.prefix_embeds.shape[1]
+              if target.prefix_embeds is not None else 0)
+    model_len = prefix + len(prompt)
+    key, sk = jax.random.split(key)
+    tok = int(select_token(logits[0], sampling, sk))
+    out = [tok]
+    for _ in range(max_new_tokens):
+        logits, cache = target.decode(jnp.asarray([tok], jnp.int32), cache,
+                                      model_len)
+        model_len += 1
+        key, sk = jax.random.split(key)
+        tok = int(select_token(logits[0], sampling, sk))
+        out.append(tok)
+    return np.asarray(out[: 1 + max_new_tokens])
+
+
+# --------------------------------------------------------------------------
+# STPP — static tree speculative decoding over the pipeline
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class STPPConfig:
+    depth: int = 4            # static tree depth per round
+    width: int = 8
+    branch: int = 4
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+
+    @property
+    def capacity(self) -> int:
+        return 1 + self.width * self.depth
+
+
+@dataclasses.dataclass
+class STPPStats:
+    rounds: int = 0
+    commits: int = 0
+    draft_steps: int = 0
+    accepted_per_round: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_accepted(self) -> float:
+        return float(np.mean(self.accepted_per_round)) if self.rounds else 0.0
+
+
+class STPPEngine:
+    def __init__(self, target: ModelBundle, draft: ModelBundle,
+                 scfg: STPPConfig, max_len: int = 512):
+        assert target.cfg.vocab_size == draft.cfg.vocab_size
+        self.target, self.draft, self.scfg = target, draft, scfg
+        self.max_len = max_len
+
+    def generate(self, prompt: np.ndarray, max_new_tokens: int,
+                 key: Optional[jax.Array] = None):
+        s = self.scfg
+        w, c, cap = s.width, s.branch, s.capacity
+        tcap = cap + w
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tgt, drf = self.target, self.draft
+
+        t_cache = tgt.init_cache(1, self.max_len)
+        d_cache = drf.init_cache(1, self.max_len)
+        prompt_j = jnp.asarray(prompt, jnp.int32)[None]
+        t_logits, t_cache = tgt.prefill(prompt_j, t_cache)
+        _, d_cache = drf.prefill(prompt_j, d_cache)
+        prefix = (tgt.prefix_embeds.shape[1]
+                  if tgt.prefix_embeds is not None else 0)
+        model_len = prefix + len(prompt)
+
+        key, sk = jax.random.split(key)
+        root = int(select_token(t_logits[0], s.sampling, sk))
+        committed = [root]
+        stats = STPPStats()
+
+        while len(committed) < 1 + max_new_tokens:
+            stats.rounds += 1
+            tree = tree_lib.tree_init(cap, root)
+            d_tree = drf.init_tree_caches(1, tcap)
+            t_tree = tgt.init_tree_caches(1, tcap)
+
+            # ---- draft builds the static tree, layer by layer -----------
+            for _ in range(s.depth):
+                tokens, idxs, valid, mask_rows = tree_lib.last_layer(tree, w)
+                depths = jnp.where(valid, tree.depth[idxs], 0)
+                positions = (model_len + depths)[None]
+                pmask = jnp.pad(mask_rows, ((0, 0), (0, tcap - cap)))
+                dlogits, d_tree = drf.tree_verify(
+                    tokens[None], positions, pmask, d_cache, model_len,
+                    d_tree, tree.layer_start)
+                stats.draft_steps += 1
+                cand_tok, cand_lp = draft_candidates(dlogits[0], valid, c)
+                tree = tree_lib.tree_expand(tree, cand_tok, cand_lp, w)
+
+            # ---- target verifies the whole tree in one pass --------------
+            all_idx = jnp.arange(cap)
+            valid_all = tree.valid()
+            tokens_all = jnp.where(valid_all, tree.tokens, 0)
+            depths_all = jnp.where(valid_all, tree.depth, 0)
+            positions = (model_len + depths_all)[None]
+            pmask = jnp.pad(tree.mask & valid_all[:, None],
+                            ((0, 0), (0, tcap - cap)))
+            v_logits, t_tree = tgt.tree_verify(
+                tokens_all[None], positions, pmask, t_cache, model_len,
+                t_tree, 0)
+            v_logits = v_logits[0]  # [cap, V]
+
+            # ---- greedy path walk (longest accepted prefix) --------------
+            cur = 0
+            accepted = 0
+            while True:
+                key, sk = jax.random.split(key)
+                x = int(select_token(v_logits[cur], s.sampling, sk))
+                committed.append(x)
+                # migrate cur's KV into the model caches
+                t_cache = tgt.commit(t_cache, t_tree, cur, model_len)
+                d_cache = drf.commit(d_cache, d_tree, cur, model_len)
+                model_len += 1
+                nxt = int(tree_lib.find_child_with_token(tree, x, cur))
+                if nxt < 0 or len(committed) >= 1 + max_new_tokens:
+                    root = x
+                    break
+                cur = nxt
+                accepted += 1
+            stats.accepted_per_round.append(accepted)
+
+        stats.commits = len(committed) - 1
+        return np.asarray(committed[: 1 + max_new_tokens]), stats

@@ -1,0 +1,226 @@
+"""PipeDec decode engine — draft-in-pipeline speculative decoding.
+
+This is the *logical* engine: it executes the exact computation and
+information schedule of the paper's distributed system on one device.  The
+pipeline-stage partition of the target model changes only *when* a layer's
+logits become available (``n_stages`` timesteps after entry), never *what*
+is computed, so the single-device engine is bit-identical to the multi-node
+system.  Wall-clock behaviour is modelled separately (``core/sim.py``) and
+the sharded deployment lives in ``repro.launch``.
+
+Per timestep (paper §3.4, Fig. 2):
+  1. the current deepest tree layer *enters* the pipeline: the target
+     computes its verification logits (buffered until exit) and the draft
+     processes the same layer to propose the next layer (tree expand);
+  2. the layer that entered ``n_stages`` timesteps ago *exits*: the logits
+     row of the current root gives the next committed token x; the root's
+     KV row migrates from the tree cache to the model cache (two-level
+     cache sync, §3.4.3); the tree is pruned to the subtree of the child
+     matching x (hit) or re-initialised at x (miss), and all in-flight
+     state is remapped/invalidated accordingly.
+
+Vanilla pipeline parallelism is the degenerate case w=0 (every step a
+miss); STPP (static tree) is in ``core/baselines.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tree as tree_lib
+from repro.core.speculative import (ModelBundle, SamplingParams,
+                                    draft_candidates, remap_tree_caches,
+                                    select_token)
+
+
+@dataclasses.dataclass
+class PipeDecConfig:
+    n_stages: int = 4
+    width: int = 8            # max tree layer width w
+    branch: int = 4           # max children per node c
+    max_depth: int = 0        # 0 => n_stages + 4
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+
+    @property
+    def depth_cap(self) -> int:
+        return self.max_depth or self.n_stages + 4
+
+    @property
+    def capacity(self) -> int:
+        return 1 + self.width * self.depth_cap
+
+
+@dataclasses.dataclass
+class Flight:
+    exit_t: int
+    node_idx: np.ndarray      # [w] global tree indices (-1 invalid)
+    logits: jnp.ndarray       # [w, V]
+
+
+@dataclasses.dataclass
+class GenStats:
+    timesteps: int = 0
+    commits: int = 0
+    hits: int = 0
+    misses: int = 0
+    entries: int = 0
+    commits_per_step: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def acceptance(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    @property
+    def tokens_per_timestep(self) -> float:
+        return self.commits / self.timesteps if self.timesteps else 0.0
+
+
+class PipeDecEngine:
+    def __init__(self, target: ModelBundle, draft: ModelBundle,
+                 pcfg: PipeDecConfig, max_len: int = 512):
+        assert target.cfg.vocab_size == draft.cfg.vocab_size
+        self.target, self.draft, self.pcfg = target, draft, pcfg
+        self.max_len = max_len
+
+    # ------------------------------------------------------------------
+    def _pad_mask(self, mask_rows: jnp.ndarray, tcap: int) -> jnp.ndarray:
+        n, cap = mask_rows.shape
+        return jnp.pad(mask_rows, ((0, 0), (0, tcap - cap)))
+
+    def generate(self, prompt: np.ndarray, max_new_tokens: int,
+                 key: Optional[jax.Array] = None,
+                 max_timesteps: Optional[int] = None):
+        p = self.pcfg
+        w, c, cap = p.width, p.branch, p.capacity
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tcap = cap + w  # slack for fixed-w layer writes
+
+        tgt, drf = self.target, self.draft
+        t_cache = tgt.init_cache(1, self.max_len)
+        d_cache = drf.init_cache(1, self.max_len)
+        prompt_j = jnp.asarray(prompt, jnp.int32)[None]
+        t_logits, t_cache = tgt.prefill(prompt_j, t_cache)
+        _, d_cache = drf.prefill(prompt_j, d_cache)
+
+        prefix = 0
+        if tgt.prefix_embeds is not None:
+            prefix = tgt.prefix_embeds.shape[1]
+        model_len = prefix + len(prompt)
+
+        key, sk = jax.random.split(key)
+        first = int(select_token(t_logits[0], p.sampling, sk))
+        committed = [first]
+
+        tree = tree_lib.tree_init(cap, first)
+        t_tree = tgt.init_tree_caches(1, tcap)
+        d_tree = drf.init_tree_caches(1, tcap)
+
+        flights: List[Flight] = []
+        pending = True            # deepest layer not yet entered
+        last_draft = None         # (node_idx np [w], logits [w, V])
+        stats = GenStats()
+        t = 0
+        limit = max_timesteps or (max_new_tokens * (p.n_stages + 2) + 16)
+
+        while len(committed) < 1 + max_new_tokens and t < limit:
+            t += 1
+            stats.timesteps = t
+            step_commits = 0
+
+            # ---- phase 1: entry (target) + proposal (draft) -------------
+            if pending:
+                tokens, idxs, valid, mask_rows = tree_lib.last_layer(tree, w)
+                depths = jnp.where(valid, tree.depth[idxs], 0)
+                positions = (model_len + depths)[None]  # [1, w]
+                pmask = self._pad_mask(mask_rows, tcap)
+                wi = tree.layer_start
+
+                v_logits, t_tree = tgt.tree_verify(
+                    tokens[None], positions, pmask, t_cache, model_len,
+                    t_tree, wi)
+                flights.append(Flight(
+                    exit_t=t + p.n_stages - 1,
+                    node_idx=np.where(np.asarray(valid), np.asarray(idxs), -1),
+                    logits=v_logits[0]))
+                stats.entries += 1
+
+                dl_logits, d_tree = drf.tree_verify(
+                    tokens[None], positions, pmask, d_cache, model_len,
+                    d_tree, wi)
+                last_draft = (np.where(np.asarray(valid),
+                                       np.asarray(idxs), -1),
+                              dl_logits[0])
+                pending = False
+
+            # expansion (may be deferred by the depth cap)
+            if last_draft is not None and not pending:
+                cur_depth = int(jnp.max(jnp.where(tree.valid(), tree.depth, 0)))
+                if cur_depth < p.depth_cap and \
+                        int(tree.n_nodes) + w <= cap + 1:
+                    nidx, dlog = last_draft
+                    rows_valid = nidx >= 0
+                    if rows_valid.any():
+                        # surviving rows, in (compacted) index order, align
+                        # with the deepest layer's slots
+                        order = np.argsort(np.where(rows_valid, nidx,
+                                                    np.iinfo(np.int32).max))
+                        dlog_sorted = dlog[jnp.asarray(order)]
+                        valid_sorted = jnp.asarray(rows_valid[order])
+                        cand_tok, cand_lp = draft_candidates(
+                            dlog_sorted, valid_sorted, c)
+                        tree = tree_lib.tree_expand(tree, cand_tok, cand_lp, w)
+                        pending = True
+                        last_draft = None
+
+            # ---- phase 2: exit + sync (commit, prune) -------------------
+            exiting = [f for f in flights if f.exit_t == t]
+            flights = [f for f in flights if f.exit_t != t]
+            for fl in exiting:
+                root_rows = np.where(fl.node_idx == 0)[0]
+                if len(root_rows) == 0:
+                    continue  # stale flight (should not happen)
+                r = int(root_rows[0])
+                key, sk = jax.random.split(key)
+                x = int(select_token(fl.logits[r], p.sampling, sk))
+                committed.append(x)
+                stats.commits += 1
+                step_commits += 1
+
+                # two-level cache sync: migrate the old root's KV row (tree
+                # buffer row 0) into the model cache at position model_len
+                t_cache = tgt.commit(t_cache, t_tree, 0, model_len)
+                d_cache = drf.commit(d_cache, d_tree, 0, model_len)
+                model_len += 1
+
+                hit = int(tree_lib.find_child_with_token(tree, x))
+                if hit >= 0:
+                    stats.hits += 1
+                    tree, index_map = tree_lib.tree_prune_to_child(tree, hit)
+                    t_tree = remap_tree_caches(t_tree, index_map, cap)
+                    d_tree = remap_tree_caches(d_tree, index_map, cap)
+                    imap = np.asarray(index_map)
+
+                    def remap(ix):
+                        out = np.where(ix >= 0, imap[np.maximum(ix, 0)], -1)
+                        return out.astype(np.int64)
+
+                    for f2 in flights:
+                        f2.node_idx = remap(f2.node_idx)
+                    if last_draft is not None:
+                        last_draft = (remap(last_draft[0]), last_draft[1])
+                else:
+                    stats.misses += 1
+                    tree = tree_lib.tree_init(cap, x)
+                    flights = []
+                    last_draft = None
+                    pending = True
+                if len(committed) >= 1 + max_new_tokens:
+                    break
+            stats.commits_per_step.append(step_commits)
+
+        return np.asarray(committed[: 1 + max_new_tokens]), stats

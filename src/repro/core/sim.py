@@ -1,0 +1,103 @@
+"""Discrete-event wall-clock model of the three deployments (PP / STPP /
+PipeDec) — reproduces the paper's Fig. 5 / Fig. 8 *shape* on CPU.
+
+The logical engines (``pipedec.py``, ``baselines.py``) give exact token
+traces and acceptance statistics; this module prices those traces in
+seconds using per-stage hardware times derived from the dry-run roofline
+(`benchmarks/fig5_latency.py` wires the two together).
+
+Timing model (paper §2.4):
+  PP        latency/token  = Σ_i T_c,i + Σ_i T_t,i
+  PipeDec   timestep       = max(T_draft, C·max_i T_c,i + max_i T_t,i)
+            latency/token  = timestep / tokens_per_timestep(measured)
+  STPP      round          = depth·T_draft + Σ_i T_c,i(tree) + Σ T_t,i
+            latency/token  = round / (accepted_per_round + 1)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class StageHardware:
+    """Per-stage times in seconds for a given verification width."""
+    n_stages: int
+    t_stage_one: float        # stage compute, width-1 (vanilla decode)
+    t_stage_width: float      # stage compute, width-w tree layer (C·max T_c)
+    t_comm: float             # inter-stage activation transfer
+    t_draft: float            # draft model full forward (one tree layer)
+    t_sync: float = 0.0       # hit_index broadcast + prune
+
+
+def pp_latency_per_token(hw: StageHardware) -> float:
+    return hw.n_stages * hw.t_stage_one + (hw.n_stages - 1) * hw.t_comm
+
+
+def pipedec_latency_per_token(hw: StageHardware,
+                              tokens_per_timestep: float) -> float:
+    timestep = max(hw.t_draft, hw.t_stage_width + hw.t_comm) + hw.t_sync
+    return timestep / max(tokens_per_timestep, 1e-9)
+
+
+def stpp_latency_per_token(hw: StageHardware, depth: int,
+                           mean_accepted: float) -> float:
+    t_round = depth * hw.t_draft \
+        + hw.n_stages * hw.t_stage_width + (hw.n_stages - 1) * hw.t_comm
+    return t_round / (mean_accepted + 1.0)
+
+
+def stage_hardware_from_roofline(
+        *, n_stages: int, layer_time_one: float, layer_time_width: float,
+        layers_per_stage: float, bytes_per_activation: float,
+        link_bw: float = 50e9, t_draft: float = 0.0,
+        t_sync: float = 1e-5) -> StageHardware:
+    """Build stage times from per-layer roofline terms.
+
+    layer_time_one/width: dominant roofline term for one target layer at
+    verification width 1 / w; transfer prices one activation tensor over a
+    single ICI/DCN link (the paper's 10 GbE is the analogous bottleneck).
+    """
+    return StageHardware(
+        n_stages=n_stages,
+        t_stage_one=layer_time_one * layers_per_stage,
+        t_stage_width=layer_time_width * layers_per_stage,
+        t_comm=bytes_per_activation / link_bw,
+        t_draft=t_draft,
+        t_sync=t_sync)
+
+
+# --------------------------------------------------------------------------
+# throughput (Fig. 8): k concurrent requests
+# --------------------------------------------------------------------------
+def pp_throughput(hw: StageHardware, batch: int,
+                  batch_scale: Callable[[int], float] = None) -> float:
+    """Tokens/s for PP with ``batch`` concurrent requests: the pipeline
+    overlaps batches, so steady-state emits ``batch`` tokens per pipeline
+    *stage* time (all stages busy on different requests)."""
+    s = batch_scale(batch) if batch_scale else 1.0
+    stage = hw.t_stage_one * s + hw.t_comm
+    # pipeline full: one batch of tokens per stage-time
+    return batch / stage if batch >= hw.n_stages else \
+        batch / (hw.n_stages * stage / max(batch, 1))
+
+
+def pipedec_throughput(hw: StageHardware, batch: int,
+                       tokens_per_timestep: float,
+                       batch_scale: Callable[[int], float] = None) -> float:
+    """PipeDec serialises tasks (whole pipeline per task), so throughput is
+    batch-independent: tokens/s = 1/latency."""
+    del batch, batch_scale
+    return 1.0 / pipedec_latency_per_token(hw, tokens_per_timestep)
+
+
+def stpp_throughput(hw: StageHardware, batch: int, depth: int,
+                    mean_accepted: float,
+                    batch_scale: Callable[[int], float] = None) -> float:
+    s = batch_scale(batch) if batch_scale else 1.0
+    stage = hw.t_stage_width * s + hw.t_comm
+    # with k≥1 concurrent tasks the pipeline overlaps different tasks'
+    # verify passes; draft runs on its own device, overlapped.
+    rounds_per_s = min(batch, hw.n_stages) / (hw.n_stages * stage)
+    tokens_per_round = mean_accepted + 1.0
+    return rounds_per_s * tokens_per_round

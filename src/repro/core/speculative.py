@@ -1,0 +1,140 @@
+"""Draft-propose / target-verify machinery shared by PipeDec and STPP.
+
+``ModelBundle`` wraps (params, cfg) with jitted step closures keyed on the
+static shapes (tree width w, buffer capacity N), so the Python-level decode
+loops stay recompile-free.
+
+Token selection at commit time follows the paper: greedy => argmax of the
+target logits at the accepted node; stochastic => sample from the target's
+(temperature / top-k / top-p filtered) distribution.  Either way the emitted
+token is drawn from the *target* model only — the tree merely decides how
+much latency the commit costs — so the output distribution is lossless.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as tree_lib
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0  # 0 => greedy
+    top_k: int = 0
+    top_p: float = 1.0
+
+
+def select_token(logits: jnp.ndarray, sp: SamplingParams, key) -> jnp.ndarray:
+    """logits [V] -> token id ()."""
+    if sp.temperature <= 0.0:
+        return jnp.argmax(logits).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k:
+        kth = jax.lax.top_k(logits, sp.top_k)[0][-1]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if sp.top_p < 1.0:
+        sorted_logits = jnp.sort(logits)[::-1]
+        probs = jax.nn.softmax(sorted_logits)
+        cum = jnp.cumsum(probs)
+        cutoff_ix = jnp.sum(cum < sp.top_p)
+        cutoff = sorted_logits[jnp.minimum(cutoff_ix, logits.shape[0] - 1)]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+class ModelBundle:
+    """params+cfg with jitted prefill / decode / tree-verify / commit."""
+
+    def __init__(self, params, cfg: ModelConfig, *, enc_out=None,
+                 prefix_embeds=None, window_override: int = -1):
+        self.params = params
+        self.cfg = cfg
+        self.enc_out = enc_out
+        self.prefix_embeds = prefix_embeds
+        self.window_override = window_override
+
+        self._prefill = jax.jit(functools.partial(
+            tf.prefill, cfg=cfg, prefix_embeds=prefix_embeds,
+            enc_out=enc_out, window_override=window_override),
+            static_argnames=())
+        self._decode = jax.jit(functools.partial(
+            tf.decode_step, cfg=cfg, enc_out=enc_out,
+            window_override=window_override))
+        self._tree_verify = jax.jit(functools.partial(
+            tf.tree_verify_step, cfg=cfg, enc_out=enc_out,
+            window_override=window_override))
+        self._commit = jax.jit(functools.partial(
+            tf.commit_tree_node, cfg=cfg))
+        self._forward = jax.jit(functools.partial(
+            tf.forward, cfg=cfg, prefix_embeds=prefix_embeds,
+            enc_out=enc_out, window_override=window_override))
+
+    # thin wrappers (keyword plumbing) -------------------------------------
+    def prefill(self, tokens, cache):
+        return self._prefill(self.params, tokens=tokens, cache=cache)
+
+    def decode(self, token, cache, cache_len):
+        return self._decode(self.params, token=token, cache=cache,
+                            cache_len=cache_len)
+
+    def tree_verify(self, node_tokens, node_positions, tree_mask, cache,
+                    cache_len, tree_caches, tree_write_index):
+        return self._tree_verify(
+            self.params, node_tokens=node_tokens,
+            node_positions=node_positions, tree_mask=tree_mask, cache=cache,
+            cache_len=cache_len, tree_caches=tree_caches,
+            tree_write_index=tree_write_index)
+
+    def commit(self, cache, tree_caches, node_idx, model_len):
+        return self._commit(cache=cache, tree_caches=tree_caches,
+                            node_idx=node_idx, model_len=model_len)
+
+    def init_cache(self, batch, max_len):
+        return tf.init_cache(self.cfg, batch, max_len)
+
+    def init_tree_caches(self, batch, capacity):
+        return tf.init_tree_caches(self.cfg, batch, capacity)
+
+
+def remap_tree_caches(tree_caches, index_map, capacity: int):
+    """Compact tree-cache rows with the same permutation as the tree
+    (rows whose index_map == -1 are dropped; stale rows are never attended).
+
+    Buffers may have ``capacity + w`` rows (slack for fixed-width layer
+    writes) and, when stacked for scan-over-layers, a leading reps dim — the
+    length axis is resolved per buffer name.
+    """
+    def gather(path, buf):
+        if buf is None:
+            return None
+        name = path[-1].key
+        ax = tf.cache_len_axis(name, buf)
+        cap = buf.shape[ax]
+        im = jnp.concatenate([
+            index_map,
+            jnp.full((cap - index_map.shape[0],), -1, jnp.int32)])
+        # inverse permutation: g[new] = old (dropped rows pushed to the end)
+        g = jnp.argsort(jnp.where(im >= 0, im, cap + jnp.arange(cap)))
+        return jnp.take(buf, g, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(
+        gather, tree_caches, is_leaf=lambda x: x is None)
+
+
+def draft_candidates(logits: jnp.ndarray, valid: jnp.ndarray, c: int):
+    """Per-node top-c candidates from draft logits.
+
+    logits: [w, V]; valid: [w].  Returns (cand_tokens [w,c],
+    cand_logprobs [w,c]) with invalid rows at -inf.
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    top_lp, top_tok = jax.lax.top_k(logp, c)
+    top_lp = jnp.where(valid[:, None], top_lp, tree_lib.NEG_INF)
+    return top_tok.astype(jnp.int32), top_lp

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (ByteCorpus, DataConfig, batch_iterator,
+                                 synthetic_corpus)
+
+__all__ = ["ByteCorpus", "DataConfig", "batch_iterator", "synthetic_corpus"]

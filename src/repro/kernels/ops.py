@@ -1,0 +1,80 @@
+"""Jit'd wrappers dispatching to the Pallas kernels (interpret=True on CPU)
+or the pure-jnp references.
+
+``combine_lse`` merges partial attention results computed over disjoint KV
+sources using their log-sum-exp stats — mathematically identical to a joint
+softmax over the concatenation (flash-decoding combination), which is how
+paper Algorithm 1's  softmax(concat(S_past, S_predict))  is realised
+without materialising the concat.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash import flash_attention_lse
+from repro.kernels.tree_block import tree_block_attention
+
+# On a real TPU set REPRO_KERNEL_INTERPRET=0; CPU CI runs interpret mode.
+INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+
+
+def combine_lse(parts):
+    """parts: list of (o [B,H,n,hd], m [B,H,n,1+], l [B,H,n,1+]).
+
+    o are normalised within their source; m/l are that source's softmax
+    stats.  Returns the exact joint-softmax combination.
+    """
+    ms = jnp.stack([m[..., :1] for _, m, _ in parts])      # [P,B,H,n,1]
+    m_all = jnp.max(ms, axis=0)
+    num = 0.0
+    den = 0.0
+    for o, m, l in parts:
+        w = l[..., :1] * jnp.exp(m[..., :1] - m_all)       # [B,H,n,1]
+        num = num + w * o.astype(jnp.float32)
+        den = den + w
+    return (num / jnp.maximum(den, 1e-30))
+
+
+def tree_attention(q, k_past, v_past, k_tree, v_tree, tree_mask, past_len,
+                   *, scale=None, window: int = 0, qpos=None,
+                   use_kernel: bool = True, block_k: int = 512):
+    """Two-level tree attention — see kernels/ref.py for the oracle."""
+    if not use_kernel:
+        return ref.tree_attention_ref(q, k_past, v_past, k_tree, v_tree,
+                                      tree_mask, past_len, scale=scale)
+    op, mp, lp = flash_attention_lse(q, k_past, v_past, past_len, qpos,
+                                     scale=scale, window=window,
+                                     block_k=block_k, interpret=INTERPRET)
+    ot, mt, lt = tree_block_attention(q, k_tree, v_tree, tree_mask,
+                                      scale=scale, interpret=INTERPRET)
+    out = combine_lse([(op, mp, lp), (ot, mt, lt)])
+    return out.astype(q.dtype)
+
+
+def prefill_attention(q, k, v, positions, *, scale=None, window: int = 0,
+                      block_k: int = 512, block_q: int = 512):
+    """Causal flash attention for prefill/training — q: [B,H,S,hd],
+    k/v: [B,KV,S,hd], positions: [S]."""
+    o, _, _ = flash_attention_lse(
+        q, k, v, k.shape[2], positions, scale=scale, window=window,
+        causal=True, block_k=block_k, block_q=min(block_q, q.shape[2]),
+        interpret=INTERPRET)
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, scale=None, window: int = 0,
+                     use_kernel: bool = True, block_k: int = 512):
+    """Single-/few-token decode over a long KV cache."""
+    if not use_kernel:
+        return ref.decode_attention_ref(q, k, v, kv_len, window=window,
+                                        scale=scale)
+    n = q.shape[2]
+    qpos = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32) - 1, (n,))
+    o, _, _ = flash_attention_lse(q, k, v, kv_len, qpos, scale=scale,
+                                  window=window, block_k=block_k,
+                                  interpret=INTERPRET)
+    return o.astype(q.dtype)

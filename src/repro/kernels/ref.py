@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_attention_ref(q, k_past, v_past, k_tree, v_tree, tree_mask,
+                       past_len, *, scale=None):
+    """Two-level tree attention (paper Algorithm 1), dense reference.
+
+    q:        [B, H, n, hd]
+    k_past:   [B, KV, Lmax, hd]   (valid rows: < past_len)
+    v_past:   [B, KV, Lmax, hd]
+    k_tree:   [B, KV, T, hd]
+    v_tree:   [B, KV, T, hd]
+    tree_mask:[n, T] bool — ancestor-or-self mask (True = attend)
+    past_len: scalar int
+    Returns   [B, H, n, hd].
+    """
+    b, h, n, hd = q.shape
+    kvh = k_past.shape[1]
+    rep = h // kvh
+    if rep > 1:
+        k_past = jnp.repeat(k_past, rep, axis=1)
+        v_past = jnp.repeat(v_past, rep, axis=1)
+        k_tree = jnp.repeat(k_tree, rep, axis=1)
+        v_tree = jnp.repeat(v_tree, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    lp = jnp.einsum("bhnd,bhsd->bhns", q, k_past).astype(jnp.float32) * scale
+    lt = jnp.einsum("bhnd,bhsd->bhns", q, k_tree).astype(jnp.float32) * scale
+    lmax = k_past.shape[2]
+    past_ok = jnp.arange(lmax)[None, None, None, :] < past_len
+    lp = jnp.where(past_ok, lp, -jnp.inf)
+    lt = jnp.where(tree_mask[None, None], lt, -jnp.inf)
+    logits = jnp.concatenate([lp, lt], axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1)
+    pv = probs[..., :lmax].astype(v_past.dtype)
+    pt = probs[..., lmax:].astype(v_tree.dtype)
+    out = jnp.einsum("bhns,bhsd->bhnd", pv, v_past) + \
+        jnp.einsum("bhns,bhsd->bhnd", pt, v_tree)
+    return out
+
+
+def decode_attention_ref(q, k, v, kv_len, *, window=0, scale=None):
+    """Flash-decode reference: q [B, H, 1, hd] vs cache k/v [B, KV, Lmax, hd]
+    with ``kv_len`` valid rows, optional sliding window. -> [B, H, 1, hd]."""
+    b, h, _, hd = q.shape
+    kvh = k.shape[1]
+    rep = h // kvh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    logits = jnp.einsum("bhnd,bhsd->bhns", q, k).astype(jnp.float32) * scale
+    pos = jnp.arange(k.shape[2])[None, None, None, :]
+    ok = pos < kv_len
+    if window:
+        ok &= pos > kv_len - 1 - window
+    logits = jnp.where(ok, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhns,bhsd->bhnd", probs, v)

@@ -1,0 +1,78 @@
+"""Tree-suffix attention block (Pallas) — the speculative half of the
+paper's dynamic tree attention.
+
+The tree buffer is small (w·d ≤ a few hundred nodes), so it is one VMEM
+tile: a single grid step per (batch, head) computes the masked softmax
+against the ancestor mask and emits (o, m, l) stats for exact combination
+with the past half (``kernels.flash``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _tree_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
+                 scale):
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [n, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [t, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    mask = mask_ref[...] != 0                            # [n, t]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)               # [n, 1]
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+    m_ref[0, 0] = jnp.broadcast_to(m, m_ref.shape[2:]).astype(jnp.float32)
+    l_ref[0, 0] = jnp.broadcast_to(l, l_ref.shape[2:]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "scale"))
+def tree_block_attention(q, k_tree, v_tree, tree_mask, *, scale=None,
+                         interpret: bool = True):
+    """q: [B,H,n,hd]; k/v_tree: [B,KV,T,hd]; tree_mask: [n,T] bool.
+
+    Returns (o [B,H,n,hd], m [B,H,n,128], l [B,H,n,128]).
+    """
+    b, h, n, hd = q.shape
+    kvh, t = k_tree.shape[1], k_tree.shape[2]
+    rep = h // kvh
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+    mask_i8 = tree_mask.astype(jnp.int8)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((b, h, n, hd), q.dtype),
+        jax.ShapeDtypeStruct((b, h, n, 128), jnp.float32),
+        jax.ShapeDtypeStruct((b, h, n, 128), jnp.float32),
+    ]
+    o, m, l = pl.pallas_call(
+        functools.partial(_tree_kernel, scale=scale),
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, n, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda i, j: (i, j // rep, 0, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda i, j: (i, j // rep, 0, 0)),
+            pl.BlockSpec((n, t), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, 128), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, 128), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(q, k_tree, v_tree, mask_i8)
+    return o, m, l

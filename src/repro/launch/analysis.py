@@ -1,0 +1,162 @@
+"""Roofline-term extraction from lowered/compiled XLA artifacts.
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` supplies flops / bytes accessed; collective bytes are not
+in cost_analysis, so we parse the (optimized when available) HLO text and
+sum the operand/result sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the task statement).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  `bf16[16,512,128]{2,1,0} all-gather(...)` or tuple results
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result bytes of every collective instruction.
+
+    Skips the ``-done`` halves of async pairs (the ``-start`` carries the
+    shape).  Result-size is the proxy for bytes moved (exact per-op cost
+    depends on algorithm; for ring all-gather, result≈moved).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, int]
+    model_flops: float
+    per_device_mem: Optional[float] = None
+
+    # NOTE: cost_analysis() and the HLO text refer to the *partitioned*
+    # (per-device) module, so the terms divide by per-chip peak only.
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "per_device_mem": self.per_device_mem,
+            "coll_by_kind": self.coll_by_kind,
+        }
+
+
+def model_flops_estimate(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D=batch·1."""
+    n_active = cfg.param_count(active_only=True)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq
+
+
+def analyze_compiled(arch: str, shape_name: str, mesh_desc: str, chips: int,
+                     lowered, compiled, cfg, shape, kind: str) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_bytes(hlo)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = (getattr(ma, "argument_size_in_bytes", 0)
+                   + getattr(ma, "output_size_in_bytes", 0)
+                   + getattr(ma, "temp_size_in_bytes", 0)
+                   + getattr(ma, "generated_code_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_desc, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes=float(sum(coll.values())), coll_by_kind=coll,
+        model_flops=model_flops_estimate(cfg, shape, kind),
+        per_device_mem=mem)

@@ -1,0 +1,314 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch × input-shape) combination
+# on the production meshes and extract roofline terms.
+#
+# The two lines above MUST stay the first statements in this module (jax
+# locks the device count at first init).  Do not import this module from
+# tests that expect a single device — run ``python -m repro.launch.dryrun``.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch qwen2.5-32b --shape decode_32k
+#   python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_reg
+from repro.launch import analysis, sharding, specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+
+
+def _opt_specs(param_specs_tree):
+    return {
+        "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                          param_specs_tree),
+        "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                          param_specs_tree),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              verbose: bool = True):
+    cfg = cfg_reg.get_config(arch)
+    shape = specs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+    wo = specs.window_override(cfg, shape)
+
+    pspecs = specs.param_specs(cfg)
+    pshard = sharding.params_shardings(pspecs, cfg, mesh)
+    b = shape.global_batch
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models.transformer import set_activation_sharding
+    from repro.launch.mesh import data_axes
+
+    from repro.models import moe as moe_mod
+    dp_axes = data_axes(mesh)
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= mesh.shape[a]
+
+    with mesh:
+        if cfg.moe is not None:
+            # group-wise MoE dispatch: shard-local sorts, constrained buffers,
+            # batch-only token sharding at block entry (§Perf H2)
+            moe_mod.set_dispatch(
+                groups=dp_total,
+                buf_sharding=NamedSharding(mesh, P(dp_axes, "model",
+                                                   None, None)),
+                x_sharding=NamedSharding(mesh, P(dp_axes, None, None)))
+        if shape.kind == "train":
+            # sequence parallelism on the residual stream (train only)
+            set_activation_sharding(
+                NamedSharding(mesh, P(data_axes(mesh), "model", None)))
+            step = make_train_step(cfg, window_override=wo, remat=True)
+            batch = specs.input_specs(cfg, shape)
+            zshard = sharding.zero1_shardings(pspecs, cfg, mesh)
+            oshard = {
+                "m": zshard, "v": zshard,
+                "step": sharding.replicated(mesh),
+            }
+            bshard = {k: sharding.batch_shardings(mesh, b, v.ndim)
+                      for k, v in batch.items()}
+            fn = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            )
+            args = (pspecs, _opt_specs(pspecs), batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, window_override=wo)
+            ins = specs.input_specs(cfg, shape)
+            cache_spec = specs.cache_specs(
+                cfg, b, shape.seq_len + cfg.prefix_tokens)
+            cshard = sharding.cache_shardings(cache_spec, cfg, mesh, batch=b)
+            args_list = [pspecs, ins["tokens"]]
+            in_sh = [pshard, sharding.batch_shardings(mesh, b, 2)]
+            kwargs_map = {}
+            if "prefix_embeds" in ins:
+                kwargs_map["prefix_embeds"] = len(args_list)
+                args_list.append(ins["prefix_embeds"])
+                in_sh.append(sharding.batch_shardings(mesh, b, 3))
+            if "frames" in ins:
+                kwargs_map["frames"] = len(args_list)
+                args_list.append(ins["frames"])
+                in_sh.append(sharding.batch_shardings(mesh, b, 3))
+
+            def wrapped(*a):
+                kw = {k: a[i] for k, i in kwargs_map.items()}
+                return step(a[0], a[1], **kw)
+
+            fn = jax.jit(wrapped, in_shardings=tuple(in_sh),
+                         out_shardings=(None, cshard))
+            args = tuple(args_list)
+        else:  # decode
+            import repro.models.transformer as tf_mod
+            step = make_serve_step(cfg, window_override=wo)
+            ins = specs.input_specs(cfg, shape)
+            # serving layout for params too: per-layer buffers (see
+            # EXPERIMENTS.md §Perf H1 — avoids whole-stack converts/copies
+            # hoisted ahead of the unrolled layer loop)
+            pspecs = jax.eval_shape(
+                lambda p: tf_mod.unstack_params(cfg, p), pspecs)
+            pshard = sharding.params_shardings(pspecs, cfg, mesh)
+            shard_seq = shape.name == "long_500k"
+            cshard = sharding.cache_shardings(ins["cache"], cfg, mesh,
+                                              batch=b, shard_seq=shard_seq)
+            in_sh = [pshard, sharding.batch_shardings(mesh, b, 1), cshard,
+                     sharding.replicated(mesh)]
+            args_list = [pspecs, ins["token"], ins["cache"],
+                         ins["cache_len"]]
+            if "enc_out" in ins:
+                args_list.append(ins["enc_out"])
+                in_sh.append(sharding.batch_shardings(mesh, b, 3))
+            fn = jax.jit(step, in_shardings=tuple(in_sh),
+                         out_shardings=(None, cshard),
+                         donate_argnums=(2,))
+            args = tuple(args_list)
+
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        set_activation_sharding(None)
+        moe_mod.set_dispatch(1, None)
+
+    roof = analysis.analyze_compiled(
+        arch, shape_name, mesh_desc, chips, lowered, compiled, cfg, shape,
+        shape.kind)
+    row = roof.row()
+    row.update({"lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+                "multi_pod": multi_pod})
+    try:
+        ma = compiled.memory_analysis()
+        if verbose:
+            print(f"  memory_analysis: {ma}")
+    except Exception as e:  # CPU backend may not support it
+        if verbose:
+            print(f"  memory_analysis unavailable: {e}")
+    if verbose:
+        print(f"  cost: flops={row['hlo_flops']:.3e} "
+              f"bytes={row['hlo_bytes']:.3e} coll={row['coll_bytes']:.3e}")
+        print(f"  roofline: compute={row['t_compute_s']:.3e}s "
+              f"memory={row['t_memory_s']:.3e}s "
+              f"collective={row['t_collective_s']:.3e}s "
+              f"-> {row['bottleneck']}-bound; "
+              f"useful={row['useful_ratio']:.2f}")
+    return row
+
+
+def lower_pipeline_tick(arch: str, *, n_stages: int = 16, width: int = 32,
+                        multi_pod: bool = False, verbose: bool = True):
+    """Lower + compile the paper-faithful shard_map PipeDec tick on the
+    production mesh ('model' = stage axis).  Used by §Perf."""
+    import dataclasses as dc
+
+    from repro.launch import pipeline as pl
+
+    cfg = cfg_reg.get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    pcfg = pl.PipelineConfig(n_stages=n_stages, width=width,
+                             tree_capacity=width * (n_stages + 4),
+                             max_len=32768)
+    pspecs = specs.param_specs(cfg)
+    sp_spec, valid = (None, None)
+
+    def build():
+        params = tf_init_specs(cfg)
+        return params
+
+    # stage params via eval_shape on the reshaping
+    import repro.models.transformer as tf
+    stage_p = jax.eval_shape(
+        lambda p: pl.stage_params(cfg, p, n_stages)[0], pspecs)
+    lps, padded = pl.stage_layout(cfg, n_stages)
+    valid_spec = jax.ShapeDtypeStruct((n_stages, lps), jnp.bool_)
+    mkv, tkv = jax.eval_shape(
+        lambda: pl.init_stage_caches(cfg, pcfg, dtype=jnp.bfloat16))
+    ring = jax.eval_shape(lambda: pl.init_ring(cfg, pcfg,
+                                               dtype=jnp.bfloat16))
+    tcap = pcfg.tree_capacity + pcfg.width
+    entry = {
+        "act": jax.ShapeDtypeStruct((width, cfg.d_model), jnp.bfloat16),
+        "positions": jax.ShapeDtypeStruct((width,), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((width, tcap), jnp.bool_),
+        "write_idx": jax.ShapeDtypeStruct((), jnp.int32),
+        "model_len": jax.ShapeDtypeStruct((), jnp.int32),
+        "valid": jax.ShapeDtypeStruct((), jnp.bool_),
+    }
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    stage_sh = lambda tree_: jax.tree.map(
+        lambda _: NamedSharding(mesh, P("model")), tree_)
+    repl = lambda tree_: jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), tree_)
+
+    tick = pl.make_pipedec_tick(cfg, pcfg, mesh)
+    with mesh:
+        fn = jax.jit(tick,
+                     in_shardings=(stage_sh(stage_p),
+                                   NamedSharding(mesh, P("model")),
+                                   stage_sh(mkv), stage_sh(tkv),
+                                   stage_sh(ring), repl(entry)),
+                     donate_argnums=(3,))
+        t0 = time.time()
+        lowered = fn.lower(stage_p, valid_spec, mkv, tkv, ring, entry)
+        compiled = lowered.compile()
+        t1 = time.time()
+    shape = specs.SHAPES["decode_32k"]
+    roof = analysis.analyze_compiled(
+        arch, f"pipedec_tick_w{width}", "x".join(
+            str(s) for s in mesh.devices.shape), chips, lowered, compiled,
+        cfg, shape, "decode")
+    row = roof.row()
+    row.update({"compile_s": round(t1 - t0, 1), "multi_pod": multi_pod,
+                "n_stages": n_stages, "width": width})
+    if verbose:
+        print(f"  pipeline tick: flops={row['hlo_flops']:.3e} "
+              f"bytes={row['hlo_bytes']:.3e} coll={row['coll_bytes']:.3e} "
+              f"-> {row['bottleneck']}-bound")
+        try:
+            print(f"  memory_analysis: {compiled.memory_analysis()}")
+        except Exception:
+            pass
+    return row
+
+
+def tf_init_specs(cfg):
+    import repro.models.transformer as tf
+    return jax.eval_shape(
+        lambda: tf.init_model(jax.random.PRNGKey(0), cfg,
+                              dtype=jnp.bfloat16))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(specs.SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="lower the shard_map PipeDec tick instead")
+    ap.add_argument("--stages", type=int, default=16)
+    ap.add_argument("--width", type=int, default=32)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.pipeline:
+        row = lower_pipeline_tick(args.arch or "pipedec-target",
+                                  n_stages=args.stages, width=args.width,
+                                  multi_pod=args.multi_pod)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(row) + "\n")
+        return 0
+
+    combos = []
+    archs = cfg_reg.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(specs.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    rows, failures = [], []
+    for a, s, mp in combos:
+        tag = f"{a} × {s} × {'2x16x16' if mp else '16x16'}"
+        print(f"[dryrun] {tag}", flush=True)
+        try:
+            row = lower_one(a, s, multi_pod=mp)
+            rows.append(row)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((tag, repr(e)))
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+    print(f"\n[dryrun] {len(rows)} ok, {len(failures)} failed")
+    for tag, err in failures:
+        print(f"  FAIL {tag}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Production meshes.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: int = 1):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    data = max(1, min(data, n // model))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_sharding_spec(mesh, batch: int):
+    """Partition the batch over ('pod','data') when divisible, else
+    replicate (long_500k, batch=1, shards the sequence instead)."""
+    axes = data_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return axes if batch % total == 0 else None

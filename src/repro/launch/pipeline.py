@@ -1,0 +1,214 @@
+"""Paper-faithful pipeline-parallel deployment (shard_map over "model").
+
+The paper's cluster runs MPMD stages coordinated by Redis; on TPU the same
+schedule is SPMD: every device executes one *tick* per timestep.
+
+One PipeDec tick (= paper timestep, Fig. 2):
+  * each stage applies its layer block to the tree layer it currently
+    holds, reading/writing its local slice of the two-level KV cache;
+  * activations rotate one stage forward via ``jax.lax.ppermute`` —
+    this collective IS the paper's transmission scheduler (Appendix A),
+    compiled instead of orchestrated;
+  * stage 0 ingests the newest tree layer (from the draft model);
+    the activation leaving the last stage is gathered and unembedded into
+    the verification logits of the layer that completed the pipeline.
+
+Each in-flight layer carries its metadata (absolute positions, ancestor
+mask rows, tree-buffer write index, committed length) in the same ring so
+every stage uses the values frozen at that layer's entry — exactly the
+paper's data-flow semantics.
+
+Supports attention-family architectures (dense / VLM / MoE-with-attention);
+recurrent families use chain-mode speculative decoding instead (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import attention as attn_mod
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.models.layers import embed, rmsnorm, unembed
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_stages: int
+    width: int            # w (tree layer width)
+    tree_capacity: int    # tree KV buffer rows
+    max_len: int          # model KV buffer rows
+
+
+def stage_layout(cfg: ModelConfig, n_stages: int) -> Tuple[int, int]:
+    """(layers_per_stage, padded_total). Only the uniform 'stack' region is
+    pipelined; prefix/tail layers (rare) fold into stage 0 / S-1 ... we
+    require a pure-stack arch for the pipeline deployment."""
+    n_prefix, reps, tail = tf.layout(cfg)
+    assert n_prefix == 0 and not tail, \
+        "pipeline deployment expects a uniform layer stack"
+    lps = -(-reps // n_stages)
+    return lps, lps * n_stages
+
+
+def stage_params(cfg: ModelConfig, params, n_stages: int):
+    """Stage layout: a LIST of ``lps`` per-layer trees, each leaf [S, ...]
+    (stage dim stacked/sharded over 'model'; the within-stage layer dim is
+    unrolled into separate buffers so XLA cannot hoist whole-stack
+    converts/copies ahead of the layer loop — §Perf H3) + validity [S, Lps].
+    """
+    lps, padded = stage_layout(cfg, n_stages)
+    reps = tf.layout(cfg)[1]
+
+    def reshape(x):
+        pad = padded - reps
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], 0)
+        return x.reshape(n_stages, lps, *x.shape[1:])
+
+    stacked = jax.tree.map(reshape, params["stack"])
+    layers = [jax.tree.map(lambda t: t[:, l], stacked) for l in range(lps)]
+    valid = (jnp.arange(padded) < reps).reshape(n_stages, lps)
+    return layers, valid
+
+
+def init_stage_caches(cfg: ModelConfig, pcfg: PipelineConfig,
+                      dtype=jnp.float32):
+    """Per-stage model + tree caches: lists (per in-stage layer) of
+    [S, B=1, rows, ...] buffers."""
+    lps, _ = stage_layout(cfg, pcfg.n_stages)
+    kv = attn_mod.init_kv_cache(cfg, 1, pcfg.max_len, dtype)
+    tkv = attn_mod.init_kv_cache(cfg, 1, pcfg.tree_capacity + pcfg.width,
+                                 dtype)
+    tile = lambda c: [jax.tree.map(
+        lambda x: jnp.zeros((pcfg.n_stages, *x.shape), x.dtype), c)
+        for _ in range(lps)]
+    return tile(kv), tile(tkv)
+
+
+def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32):
+    """In-flight activation + metadata ring, one slot per stage."""
+    s, w = pcfg.n_stages, pcfg.width
+    return {
+        "act": jnp.zeros((s, w, cfg.d_model), dtype),
+        "positions": jnp.zeros((s, w), jnp.int32),
+        "mask": jnp.zeros((s, w, pcfg.tree_capacity + pcfg.width), bool),
+        "write_idx": jnp.zeros((s,), jnp.int32),
+        "model_len": jnp.zeros((s,), jnp.int32),
+        "valid": jnp.zeros((s,), bool),
+    }
+
+
+def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
+    """Build the jittable one-timestep pipeline tick.
+
+    Inputs (global shapes):
+      stage_p:    unit params [S, Lps, ...]        (stage-sharded)
+      stage_valid:[S, Lps] bool
+      caches:     (model_kv, tree_kv) [S, Lps, 1, rows, ...]
+      ring:       see init_ring
+      entry:      dict with the NEW layer for stage 0:
+                  tokens->embedded x [w, d], positions [w],
+                  mask [w, tcap+w], write_idx (), model_len (), valid ()
+    Returns (new caches, new ring, exit: {act [w,d], ...exit metadata}).
+    """
+    s_axis = "model"
+    n_stages = pcfg.n_stages
+    kinds = tf.unit_kinds(cfg)
+    assert kinds == ("attn",), "pipeline tick supports attention stacks"
+    lps, _ = stage_layout(cfg, n_stages)
+
+    def local_stage(stage_p, valid_row, kv, tkv, x, positions, mask,
+                    write_idx, model_len, in_valid):
+        """Apply this stage's layers to its in-flight tree layer."""
+        ctx = tf.Ctx(mode="tree", positions=positions[None],
+                     cache_len=model_len, tree_write_index=write_idx,
+                     tree_mask=mask)
+        xs = x[None]  # [1, w, d]
+        new_tkv = []
+        for l in range(lps):
+            # per-layer param/cache buffers (lists over the in-stage dim)
+            unit_p = stage_p[l]
+            c = [kv[l]]
+            tc = [tkv[l]]
+            y, _, ntc, _ = tf._apply_unit(unit_p, cfg, kinds, xs, c, tc, ctx)
+            ok = valid_row[l] & in_valid
+            xs = jnp.where(ok, y, xs)
+            new_tkv.append(jax.tree.map(
+                lambda old, new: jnp.where(ok, new, old), tc[0], ntc[0]))
+        return xs[0], new_tkv
+
+    def tick(stage_p, stage_valid, model_kv, tree_kv, ring, entry):
+        def body(stage_p, stage_valid, model_kv, tree_kv, ring, entry):
+            # local slices carry a leading stage dim of 1 (dropped here)
+            sp = [jax.tree.map(lambda t: t[0], lp) for lp in stage_p]
+            sv = stage_valid[0]
+            kv = [jax.tree.map(lambda t: t[0], lc) for lc in model_kv]
+            tkv = [jax.tree.map(lambda t: t[0], lc) for lc in tree_kv]
+
+            x, new_tkv = local_stage(
+                sp, sv, kv, tkv, ring["act"][0], ring["positions"][0],
+                ring["mask"][0], ring["write_idx"][0], ring["model_len"][0],
+                ring["valid"][0])
+
+            # rotate the ring one stage forward (paper's transmission step)
+            perm = [(i, i + 1) for i in range(n_stages - 1)]
+            shift = lambda v: jax.lax.ppermute(v, s_axis, perm)
+            rotated = {
+                "act": shift(x[None]),
+                "positions": shift(ring["positions"]),
+                "mask": shift(ring["mask"]),
+                "write_idx": shift(ring["write_idx"]),
+                "model_len": shift(ring["model_len"]),
+                "valid": shift(ring["valid"]),
+            }
+            # stage 0 ingests the new layer from the draft model
+            idx = jax.lax.axis_index(s_axis)
+            is0 = (idx == 0)
+            new_ring = {
+                "act": jnp.where(is0, entry["act"][None], rotated["act"]),
+                "positions": jnp.where(is0, entry["positions"][None],
+                                       rotated["positions"]),
+                "mask": jnp.where(is0, entry["mask"][None],
+                                  rotated["mask"]),
+                "write_idx": jnp.where(is0, entry["write_idx"],
+                                       rotated["write_idx"]),
+                "model_len": jnp.where(is0, entry["model_len"],
+                                       rotated["model_len"]),
+                "valid": jnp.where(is0, entry["valid"], rotated["valid"]),
+            }
+            # the activation leaving the last stage = exiting layer
+            is_last = (idx == n_stages - 1).astype(x.dtype)
+            exit_act = jax.lax.psum(x * is_last, s_axis)
+            exit_valid = jax.lax.psum(
+                (ring["valid"][0] & (idx == n_stages - 1))
+                .astype(jnp.int32), s_axis) > 0
+            new_tkv = [jax.tree.map(lambda t: t[None], lc) for lc in new_tkv]
+            return (new_tkv, new_ring,
+                    {"act": exit_act, "valid": exit_valid})
+
+        specs_stage = P(s_axis)
+        tkv_spec = jax.tree.map(lambda _: P(s_axis), tree_kv)
+        ring_spec = jax.tree.map(lambda _: P(s_axis), ring)
+        entry_spec = jax.tree.map(lambda _: P(), entry)
+        out = shard_map(
+            body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(s_axis), stage_p),
+                      P(s_axis),
+                      jax.tree.map(lambda _: P(s_axis), model_kv),
+                      tkv_spec, ring_spec, entry_spec),
+            out_specs=(tkv_spec, ring_spec,
+                       {"act": P(), "valid": P()}),
+            check_vma=False,
+        )(stage_p, stage_valid, model_kv, tree_kv, ring, entry)
+        return out
+
+    return tick

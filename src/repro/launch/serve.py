@@ -1,0 +1,69 @@
+"""Serving driver: load (or randomly init) target + draft, run a batch of
+requests through the ServingEngine in pp or pipedec mode.
+
+  PYTHONPATH=src python -m repro.launch.serve --mode pipedec --requests 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import configs as cfg_reg
+from repro.checkpoint import load_pytree
+from repro.core.pipedec import PipeDecConfig
+from repro.core.speculative import ModelBundle
+from repro.models import transformer as tf
+from repro.serving import Request, ServingEngine
+
+
+def build_bundle(arch: str, *, smoke: bool, seed: int, ckpt: str = "",
+                 vocab_floor: int = 0):
+    cfg = cfg_reg.get_config(arch, smoke=smoke)
+    if vocab_floor and cfg.vocab_size < vocab_floor:
+        cfg = dataclasses.replace(cfg, vocab_size=vocab_floor)
+    if ckpt:
+        params = load_pytree(ckpt)["params"]
+    else:
+        params = tf.init_model(jax.random.PRNGKey(seed), cfg)
+    return ModelBundle(params, cfg)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["pp", "pipedec"], default="pipedec")
+    ap.add_argument("--target-arch", default="pipedec-target")
+    ap.add_argument("--draft-arch", default="pipedec-draft")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--branch", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    target = build_bundle(args.target_arch, smoke=args.smoke, seed=0)
+    draft = build_bundle(args.draft_arch, smoke=args.smoke, seed=1)
+    engine = ServingEngine(
+        target, draft, mode=args.mode,
+        pipedec=PipeDecConfig(n_stages=args.stages, width=args.width,
+                              branch=args.branch))
+    rng = np.random.default_rng(0)
+    for uid in range(args.requests):
+        prompt = rng.integers(0, target.cfg.vocab_size,
+                              size=8).astype(np.int32)
+        engine.submit(Request(uid, prompt, args.new_tokens))
+    results = engine.run()
+    for uid, res in sorted(results.items()):
+        extra = ""
+        if res.stats is not None and hasattr(res.stats, "acceptance"):
+            extra = (f" acc={res.stats.acceptance:.2f}"
+                     f" tps={res.stats.tokens_per_timestep:.2f}")
+        print(f"req {uid}: {res.tokens.tolist()[:10]}... "
+              f"{res.latency_s*1e3:.1f}ms{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""Parameter / activation sharding rules for the production meshes.
+
+Rules are name-based over the param pytree paths produced by
+``repro.models.transformer.init_model``.  The "model" axis carries
+tensor/expert parallelism; ("pod","data") carry the batch (or, for
+``long_500k``, the KV-cache sequence).  Every rule degrades to replication
+when the relevant dimension is not divisible by the axis size — e.g.
+qwen*-32b's 40 heads on a 16-way model axis fall back to head_dim sharding
+(128 % 16 == 0), and whisper's 51865-entry vocab table replicates.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis(mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _div(n: int, m: int) -> bool:
+    return n % m == 0
+
+
+def _attn_spec(name: str, leaf, cfg: ModelConfig, ms: int):
+    """Sharding for attention projection params (possibly stacked)."""
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    heads_ok = _div(h, ms)
+    kv_ok = _div(kv, ms)
+    hd_ok = _div(hd, ms)
+    if cfg.mla is not None:
+        m = cfg.mla
+        if name in ("w_q", "w_ukv"):
+            return P(None, "model", None) if heads_ok else P()
+        if name == "w_o":
+            return P("model", None, None) if heads_ok else P()
+        return P()  # w_dq, w_dkv, w_kr: small LoRA factors, replicated
+    if name == "w_q":
+        if heads_ok:
+            return P(None, "model", None)
+        return P(None, None, "model") if hd_ok else P()
+    if name in ("w_k", "w_v"):
+        if kv_ok:
+            return P(None, "model", None)
+        return P(None, None, "model") if hd_ok else P()
+    if name == "w_o":
+        if heads_ok:
+            return P("model", None, None)
+        return P(None, "model", None) if hd_ok else P()
+    if name == "b_q":
+        return P("model", None) if heads_ok else (
+            P(None, "model") if hd_ok else P())
+    if name in ("b_k", "b_v"):
+        return P("model", None) if kv_ok else (
+            P(None, "model") if hd_ok else P())
+    return P()
+
+
+def _moe_spec(name: str, leaf, cfg: ModelConfig, ms: int, ds: int = 1):
+    """Expert weights: 2-D sharded — expert dim over 'model' (expert
+    parallelism) AND ff dim over 'data' (FSDP-style storage shard; gathers
+    amortise into the weight stream that a memory-bound MoE reads anyway).
+    Required for 100B+ MoEs: deepseek-v2 bf16 is 29.5 GB/device with E-only
+    sharding vs 1.8 GB with 2-D (§Perf H1)."""
+    e = cfg.moe.num_experts
+    f = cfg.moe.d_ff_expert
+    e_ok, f_ok_m = _div(e, ms), _div(f, ms)
+    f_data = "data" if _div(f, ds) else None
+    if name == "router":
+        return P()
+    if name in ("w_gate", "w_up"):
+        if e_ok:
+            return P("model", None, f_data)
+        return P(None, None, "model") if f_ok_m else P()
+    if name == "w_down":
+        if e_ok:
+            return P("model", f_data, None)
+        return P(None, "model", None) if f_ok_m else P()
+    return P()
+
+
+def _mlp_spec(name: str, leaf, cfg: ModelConfig, ms: int, ff: int):
+    if not _div(ff, ms):
+        return P()
+    if name in ("w_gate", "w_up"):
+        return P(None, "model")
+    if name == "w_down":
+        return P("model", None)
+    return P()
+
+
+def _rglru_spec(name: str, leaf, cfg: ModelConfig, ms: int):
+    w = cfg.rglru.lru_width or cfg.d_model
+    if not _div(w, ms):
+        return P()
+    if name in ("in_x", "in_y"):
+        return P(None, "model")
+    if name in ("conv_w",):
+        return P(None, "model")
+    if name in ("conv_b", "lambda"):
+        return P("model")
+    if name in ("w_a", "w_i"):
+        return P(None, "model")
+    if name == "out":
+        return P("model", None)
+    return P()
+
+
+def param_pspec(path, leaf, cfg: ModelConfig, mesh) -> P:
+    ms = _axis(mesh, "model")
+    keys = [p.key for p in path if hasattr(p, "key")]
+    name = keys[-1]
+    stacked = "stack" in keys
+
+    if name == "table":
+        spec = P("model", None) if _div(cfg.vocab_size, ms) else P()
+    elif name in ("scale", "bias", "A_log", "dt_bias", "D", "dt"):
+        spec = P()
+    elif "mixer" in keys and cfg.family == "ssm":
+        spec = P()  # mamba2-130m: tiny, replicated (see DESIGN.md)
+    elif "mixer" in keys and name in ("in_x", "in_y", "w_a", "w_i", "lambda",
+                                      "conv_w", "conv_b", "out"):
+        spec = _rglru_spec(name, leaf, cfg, ms)
+    elif name in ("w_q", "w_k", "w_v", "w_o", "b_q", "b_k", "b_v",
+                  "w_dq", "w_dkv", "w_kr", "w_ukv"):
+        spec = _attn_spec(name, leaf, cfg, ms)
+    elif name == "router":
+        spec = P()
+    elif name in ("w_gate", "w_up", "w_down"):
+        base_ndim = leaf.ndim - (1 if stacked else 0)
+        if base_ndim == 3 and cfg.moe is not None and "shared" not in keys:
+            spec = _moe_spec(name, leaf, cfg, ms,
+                             _axis(mesh, "data"))  # expert weights [E,d,f]
+        else:
+            ff = leaf.shape[-1] if name != "w_down" else leaf.shape[-2]
+            spec = _mlp_spec(name, leaf, cfg, ms, ff)
+    elif name == "in_proj":  # ssm
+        spec = P()
+    elif name == "out_proj":
+        spec = P()
+    else:
+        spec = P()
+
+    if stacked and len(spec) == leaf.ndim - 1:
+        spec = P(None, *spec)
+    elif len(spec) not in (0, leaf.ndim):
+        spec = P()  # dimensionality mismatch -> replicate safely
+    return spec
+
+
+def params_shardings(params, cfg: ModelConfig, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, cfg,
+                                                           mesh)),
+        params)
+
+
+def zero1_pspec(path, leaf, cfg: ModelConfig, mesh) -> P:
+    """Optimizer-state sharding (ZeRO-1): the param spec plus a 'data'
+    shard on the first still-replicated divisible axis."""
+    base = param_pspec(path, leaf, cfg, mesh)
+    spec = list(base) + [None] * (leaf.ndim - len(base))
+    if any(ax == "data" or (isinstance(ax, tuple) and "data" in ax)
+           for ax in spec):
+        return P(*spec)  # base spec already uses 'data' (2-D experts)
+    ds = _axis(mesh, "data")
+    for i, (ax, dim) in enumerate(zip(spec, leaf.shape)):
+        if ax is None and dim % ds == 0 and dim >= ds:
+            spec[i] = "data"
+            break
+    return P(*spec)
+
+
+def zero1_shardings(params, cfg: ModelConfig, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, zero1_pspec(path, leaf, cfg,
+                                                           mesh)),
+        params)
+
+
+def cache_pspec(path, leaf, cfg: ModelConfig, mesh, *, batch: int,
+                shard_seq: bool = False) -> P:
+    """KV-cache / state sharding.  batch over ('pod','data') when divisible;
+    long_500k (batch=1) shards the cache sequence over 'data' instead."""
+    from repro.launch.mesh import batch_sharding_spec
+    ms = _axis(mesh, "model")
+    keys = [p.key for p in path if hasattr(p, "key")]
+    name = keys[-1]
+    stacked = "stack" in keys
+    baxes = batch_sharding_spec(mesh, batch)
+    b = baxes if baxes else None
+
+    if name in ("k", "v"):
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        seq = "data" if (shard_seq and b is None) else None
+        head_ax = "model" if _div(kv, ms) else None
+        hd_ax = "model" if (head_ax is None and _div(hd, ms)) else None
+        spec = P(b, seq, head_ax, hd_ax)
+    elif name in ("c_kv", "k_rope"):
+        # MLA compressed cache has no head dim to shard — shard the
+        # *sequence* over every mesh axis the batch doesn't use (§Perf H1:
+        # 18 GB -> 1.1 GB/device for deepseek-v2 decode_32k).
+        used = set(b) if isinstance(b, tuple) else ({b} if b else set())
+        rest = tuple(a for a in mesh.axis_names if a not in used)
+        spec = P(b, rest if rest else None, None)
+    elif name == "conv":
+        spec = P(b, None, None)
+    elif name == "ssd":
+        spec = P(b, None, None, None)
+    elif name == "h":
+        spec = P(b, None)
+    else:
+        spec = P()
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def cache_shardings(cache, cfg: ModelConfig, mesh, *, batch: int,
+                    shard_seq: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_pspec(path, leaf, cfg, mesh, batch=batch,
+                              shard_seq=shard_seq)),
+        cache)
+
+
+def batch_shardings(mesh, batch: int, ndim: int = 2):
+    from repro.launch.mesh import batch_sharding_spec
+    baxes = batch_sharding_spec(mesh, batch)
+    spec = P(baxes, *([None] * (ndim - 1))) if baxes else P()
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,93 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch × input-shape) combo.
+
+No device allocation — everything here is ``jax.eval_shape``-style metadata
+that ``dryrun.py`` feeds to ``jax.jit(...).lower()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def window_override(cfg: ModelConfig, shape: InputShape) -> int:
+    """long_500k needs sub-quadratic attention: SSM/hybrid are natively
+    sub-quadratic; full-attention archs run the sliding-window variant."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm",
+                                                    "audio"):
+        return 4096
+    return -1
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: tf.init_model(jax.random.PRNGKey(0), cfg, dtype=PARAM_DTYPE))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                stacked: bool = True):
+    return jax.eval_shape(
+        lambda: tf.init_cache(cfg, batch, max_len, dtype=CACHE_DTYPE,
+                              stacked=stacked))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model-input specs for one step of the given kind."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": sds((b, s), jnp.int32),
+               "labels": sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = sds((b, cfg.prefix_tokens, cfg.d_model),
+                                       PARAM_DTYPE)
+        if cfg.is_encdec:
+            out["frames"] = sds((b, cfg.encoder.max_source_positions,
+                                 cfg.d_model), PARAM_DTYPE)
+        return out
+    if shape.kind == "prefill":
+        # prefill allocates its cache internally; no cache input spec
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = sds((b, cfg.prefix_tokens, cfg.d_model),
+                                       PARAM_DTYPE)
+        if cfg.is_encdec:
+            out["frames"] = sds((b, cfg.encoder.max_source_positions,
+                                 cfg.d_model), PARAM_DTYPE)
+        return out
+    # decode: ONE new token against a seq_len cache (serving layout:
+    # per-layer buffers so donation aliases in place)
+    out = {"token": sds((b,), jnp.int32),
+           "cache": cache_specs(cfg, b, s, stacked=False),
+           "cache_len": sds((), jnp.int32)}
+    if cfg.is_encdec:
+        out["enc_out"] = sds((b, cfg.encoder.max_source_positions,
+                              cfg.d_model), PARAM_DTYPE)
+    return out

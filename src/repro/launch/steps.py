@@ -1,0 +1,68 @@
+"""Step functions lowered by the dry-run and used by train.py / serve.py."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update
+
+
+def _enc_out(params, cfg: ModelConfig, batch):
+    if cfg.is_encdec and "frames" in batch:
+        from repro.models.encdec import encode
+        return encode(params["encoder"], cfg, batch["frames"])
+    return None
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    *, window_override: int = -1, remat: bool = True):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return tf.loss_fn(
+                p, cfg, batch["tokens"], batch["labels"],
+                prefix_embeds=batch.get("prefix_embeds"),
+                enc_out=_enc_out(p, cfg, batch), remat=remat,
+                window_override=window_override)
+
+        loss_val, grads = jax.value_and_grad(loss)(params)
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads,
+                                                    opt_state)
+        return new_params, new_opt, {"loss": loss_val, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, window_override: int = -1,
+                      cache_dtype=jnp.bfloat16, max_len: int = 0):
+    """Prefill builds and returns its own cache (zeros are elided by XLA
+    where overwritten) — callers never allocate an input cache."""
+
+    def prefill_step(params, tokens, prefix_embeds=None, frames=None):
+        b, s = tokens.shape
+        length = (max_len or s) + cfg.prefix_tokens
+        cache = tf.init_cache(cfg, b, length, dtype=cache_dtype)
+        enc_out = _enc_out(params, cfg,
+                           {"frames": frames} if frames is not None else {})
+        return tf.prefill(params, cfg, tokens, cache,
+                          prefix_embeds=prefix_embeds, enc_out=enc_out,
+                          window_override=window_override)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, window_override: int = -1):
+    """One decode step: ONE new token per sequence against the KV cache."""
+
+    def serve_step(params, token, cache, cache_len, enc_out=None):
+        return tf.decode_step(params, cfg, token, cache, cache_len,
+                              enc_out=enc_out,
+                              window_override=window_override)
+
+    return serve_step

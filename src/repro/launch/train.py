@@ -1,0 +1,76 @@
+"""Training driver: real loop on host devices (CPU tests / examples) with
+the same step function the dry-run lowers for the production meshes.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-7b --smoke \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfg_reg
+from repro.checkpoint import save_pytree
+from repro.data import ByteCorpus, DataConfig, batch_iterator, synthetic_corpus
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, adamw_init
+
+
+def train(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
+          seed: int = 0, ckpt: str = "", log_every: int = 10,
+          corpus_bytes: int = 1 << 18, remat: bool = False):
+    assert cfg.vocab_size >= 260, "byte pipeline needs vocab >= 260"
+    params = tf.init_model(jax.random.PRNGKey(seed), cfg)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(10, steps // 20),
+                          total_steps=steps)
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=remat))
+
+    data_cfg = DataConfig(seq_len=seq, batch_size=batch, seed=seed)
+    corpus = ByteCorpus(synthetic_corpus(corpus_bytes, seed=seed), data_cfg)
+    it = batch_iterator(corpus, epochs=1000)
+
+    losses = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        tokens, labels = next(it)
+        batch_d = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        params, opt, metrics = step_fn(params, opt, batch_d)
+        losses.append(float(metrics["loss"]))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.perf_counter()-t0)/(i+1):.2f}s/step)", flush=True)
+    if ckpt:
+        save_pytree(ckpt, {"params": params})
+        print(f"saved checkpoint to {ckpt}")
+    return params, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="pipedec-target")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args(argv)
+    cfg = cfg_reg.get_config(args.arch, smoke=args.smoke)
+    if cfg.vocab_size < 260:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, vocab_size=260)
+    train(cfg, steps=args.steps, batch=args.batch, seq=args.seq, lr=args.lr,
+          ckpt=args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.config import (EncoderConfig, MLAConfig, ModelConfig,
+                                 MoEConfig, RGLRUConfig, SSMConfig)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RGLRUConfig",
+    "EncoderConfig",
+]

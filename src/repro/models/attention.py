@@ -1,0 +1,434 @@
+"""Attention: GQA / MQA / MLA / sliding-window, with KV caches and the
+PipeDec two-level (model + tree) cache path.
+
+Shapes follow the convention  x: [B, S, d_model],  q: [B, S, H, hd],
+k/v: [B, S, KV, hd].  Masks are boolean, True = may attend, broadcastable to
+[B, H, Sq, Sk].
+
+Three entry points per layer:
+  * ``attn_forward``      — full-sequence (training / prefill), optionally
+                            filling a model KV cache.
+  * ``attn_decode``       — one new token against a model KV cache.
+  * ``attn_tree_verify``  — a tree layer of speculative tokens against
+                            model cache + tree cache (paper Algorithm 1).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    if cfg.mla is not None and not cross:
+        m = cfg.mla
+        ks = jax.random.split(key, 6)
+        qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+        if m.q_lora_rank:
+            q_p = {
+                "w_dq": dense_init(ks[5], (d, m.q_lora_rank), dtype=dtype),
+                "w_q": dense_init(ks[0], (m.q_lora_rank, h, qd), dtype=dtype),
+            }
+        else:
+            q_p = {"w_q": dense_init(ks[0], (d, h, qd), dtype=dtype)}
+        p = {
+            **q_p,
+            "w_dkv": dense_init(ks[1], (d, m.kv_lora_rank), dtype=dtype),
+            "w_kr": dense_init(ks[2], (d, m.qk_rope_head_dim), dtype=dtype),
+            "w_ukv": dense_init(
+                ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim),
+                dtype=dtype),
+            "w_o": dense_init(ks[4], (h, m.v_head_dim, d), in_axis=1, dtype=dtype),
+        }
+        return p
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], (d, h, hd), dtype=dtype),
+        "w_k": dense_init(ks[1], (d, kv, hd), dtype=dtype),
+        "w_v": dense_init(ks[2], (d, kv, hd), dtype=dtype),
+        "w_o": dense_init(ks[3], (h, hd, d), in_axis=1, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h, hd), dtype)
+        p["b_k"] = jnp.zeros((kv, hd), dtype)
+        p["b_v"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# core
+# --------------------------------------------------------------------------
+def _project_qkv(params, cfg: ModelConfig, x, positions, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    if "b_q" in params:
+        q = q + params["b_q"]
+        k = k + params["b_k"]
+        v = v + params["b_v"]
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _project_q_mla(params, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    if "w_dq" in params:
+        x = x @ params["w_dq"]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_ckv_mla(params, cfg: ModelConfig, x, positions):
+    """Compressed KV for MLA: c_kv [B,S,r], k_rope [B,S,rd] (single head)."""
+    m = cfg.mla
+    c_kv = x @ params["w_dkv"]
+    k_rope = x @ params["w_kr"]
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def _expand_ckv(params, cfg: ModelConfig, c_kv):
+    """Expand compressed KV into per-head k_nope and v."""
+    m = cfg.mla
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_ukv"])
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    return k_nope, v
+
+
+def gqa_attend(q, k, v, mask, *, scale: Optional[float] = None):
+    """q: [B,Sq,H,hd], k/v: [B,Sk,KV,hd] — grouped-query attention.
+
+    KV heads are *not* materialised to H (a ``jnp.repeat`` would stream
+    rep× the KV cache from HBM; §Perf H3): q is grouped [KV, rep] and both
+    einsums contract against the shared KV head directly.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qg = q.reshape(b, sq, kvh, rep, hd)
+    logits = jnp.einsum("bqgrk,bsgk->bgrqs", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        # mask: [B|1, 1, Sq, Sk] -> broadcast over (g, r)
+        logits = jnp.where(mask[:, :, None], logits,
+                           jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqs,bsgk->bqgrk", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+# full-sequence attention switches to the chunked (memory-efficient) path
+# at this sequence length: logits temps become [B, H, CHUNK, S] instead of
+# [B, H, S, S].
+CHUNKED_ATTN_THRESHOLD = 2048
+CHUNK_Q = 1024
+
+
+def chunked_causal_attend(q, k, v, *, window: int = 0, scale=None):
+    """Causal attention via lax.scan over query chunks (+remat): identical
+    math to ``gqa_attend`` with a causal mask, O(S·chunk) temp memory."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    cq = min(CHUNK_Q, s)
+    pad = (-s) % cq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = (s + pad) // cq
+    qs = q.reshape(b, nq, cq, h, hd).swapaxes(0, 1)  # [nq,B,cq,H,hd]
+
+    kpos = jnp.arange(s)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(_, xs):
+        qc, ci = xs
+        qpos = ci * cq + jnp.arange(cq)
+        m = kpos[None, :] <= qpos[:, None]
+        if window:
+            m &= kpos[None, :] > qpos[:, None] - window
+        qg = qc.reshape(b, cq, kvh, rep, hd)  # grouped GQA: no KV repeat
+        logits = jnp.einsum("bqgrk,bsgk->bgrqs", qg, k).astype(jnp.float32)
+        logits = jnp.where(m[None, None, None], logits * scale,
+                           jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bgrqs,bsgk->bqgrk", probs, v)
+        return None, out.reshape(b, cq, h, v.shape[-1])
+
+    _, outs = jax.lax.scan(body, None,
+                           (qs, jnp.arange(nq, dtype=jnp.int32)))
+    hd_v = v.shape[-1]  # MLA: v head dim may differ from qk head dim
+    out = outs.swapaxes(0, 1).reshape(b, s + pad, h, hd_v)
+    return out[:, :s]
+
+
+def causal_mask(sq: int, sk: int, q_offset, window: int = 0):
+    """q position i (absolute q_offset+i) attends k position j if j<=i, and
+    within ``window`` if window>0."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m[None, None]  # [1,1,Sq,Sk]
+
+
+# --------------------------------------------------------------------------
+# model KV cache
+# --------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def _cache_write(cache, updates, index):
+    out = {}
+    for name, u in updates.items():
+        buf = cache[name]
+        out[name] = jax.lax.dynamic_update_slice_in_dim(
+            buf, u.astype(buf.dtype), index, axis=1)
+    return out
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+def attn_forward(params, cfg: ModelConfig, x, positions, *,
+                 window: int = 0, cache=None, cache_index: int = 0,
+                 causal: bool = True):
+    """Full-sequence attention. Returns (out, new_cache_or_None)."""
+    b, s, _ = x.shape
+    if cfg.mla is not None:
+        q_nope, q_rope = _project_q_mla(params, cfg, x, positions)
+        c_kv, k_rope = _project_ckv_mla(params, cfg, x, positions)
+        new_cache = None
+        if cache is not None:
+            new_cache = _cache_write(cache, {"c_kv": c_kv, "k_rope": k_rope},
+                                     cache_index)
+        k_nope, v = _expand_ckv(params, cfg, c_kv)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (*k_nope.shape[:3], k_rope.shape[-1]))],
+            axis=-1)
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+        if causal and s >= CHUNKED_ATTN_THRESHOLD:
+            out = chunked_causal_attend(q, k, v, window=window, scale=scale)
+        else:
+            mask = causal_mask(s, s, 0, window) if causal else None
+            out = gqa_attend(q, k, v, mask, scale=scale)
+        y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+        return y, new_cache
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    new_cache = None
+    if cache is not None:
+        new_cache = _cache_write(cache, {"k": k, "v": v}, cache_index)
+    if causal and s >= CHUNKED_ATTN_THRESHOLD:
+        out = chunked_causal_attend(q, k, v, window=window)
+    else:
+        mask = causal_mask(s, s, 0, window) if causal else None
+        out = gqa_attend(q, k, v, mask)
+    y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+    return y, new_cache
+
+
+# Absorbed MLA decode (DeepSeek-V2 §"matrix absorption"): attend in the
+# compressed-KV space instead of expanding the cache to per-head K/V every
+# step — HBM traffic per step drops from S·H·(d_nope+d_v) to S·kv_lora.
+# Mathematically identical; disable with REPRO_MLA_ABSORBED=0 to measure
+# the naive baseline (EXPERIMENTS.md §Perf H1).
+MLA_ABSORBED_DECODE = os.environ.get("REPRO_MLA_ABSORBED", "1") != "0"
+
+# Dispatch decode / tree-verify attention through the Pallas kernels
+# (kernels/flash.py + kernels/tree_block.py).  Off by default on CPU: the
+# kernels are TPU-targeted (interpret-mode on CPU is correct but slow) and
+# single-device only (inside SPMD they would need shard_map manual mode).
+USE_PALLAS_ATTN = os.environ.get("REPRO_USE_PALLAS_ATTN", "0") == "1"
+
+
+def _mla_absorbed_attend(params, cfg: ModelConfig, q_nope, q_rope, cache,
+                         valid):
+    """q_*: [B,n,H,*]; cache holds c_kv [B,S,r] / k_rope [B,S,dr];
+    valid: [B,1,n,S].  Returns attention output [B,n,H,dv]."""
+    m = cfg.mla
+    w_uk = params["w_ukv"][..., :m.qk_nope_head_dim]   # [r,H,dn]
+    w_uv = params["w_ukv"][..., m.qk_nope_head_dim:]   # [r,H,dv]
+    q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)  # absorb W_uk into q
+    lo = jnp.einsum("bqhr,bsr->bhqs", q_eff, cache["c_kv"]) + \
+        jnp.einsum("bqhd,bsd->bhqs", q_rope, cache["k_rope"])
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    lo = lo.astype(jnp.float32) * scale
+    lo = jnp.where(valid, lo, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(lo, axis=-1).astype(cache["c_kv"].dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, cache["c_kv"])
+    return jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv)
+
+
+def attn_decode(params, cfg: ModelConfig, x, position, cache, cache_len, *,
+                window: int = 0):
+    """One-step decode: x [B,1,d], position [B] absolute position of the new
+    token; cache holds ``cache_len`` valid entries (new token written at
+    ``cache_len``).  Returns (out [B,1,d], new_cache)."""
+    b = x.shape[0]
+    positions = position[:, None]  # [B,1]
+    max_len = (cache["c_kv"] if cfg.mla is not None else cache["k"]).shape[1]
+    kpos = jnp.arange(max_len)[None, None, None, :]
+    valid = kpos <= positions[:, None, None, :]
+    if window:
+        valid &= kpos > positions[:, None, None, :] - window
+    if cfg.mla is not None:
+        q_nope, q_rope = _project_q_mla(params, cfg, x, positions)
+        c_kv, k_rope = _project_ckv_mla(params, cfg, x, positions)
+        cache = _cache_write(cache, {"c_kv": c_kv, "k_rope": k_rope}, cache_len)
+        if MLA_ABSORBED_DECODE:
+            out = _mla_absorbed_attend(params, cfg, q_nope, q_rope, cache,
+                                       valid)
+        else:
+            k_nope, v = _expand_ckv(params, cfg, cache["c_kv"])
+            q = jnp.concatenate([q_nope, q_rope], axis=-1)
+            kr = cache["k_rope"]
+            k = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                          (*k_nope.shape[:3],
+                                           kr.shape[-1]))],
+                axis=-1)
+            scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+            out = gqa_attend(q, k, v, valid, scale=scale)
+    else:
+        q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+        cache = _cache_write(cache, {"k": k_new, "v": v_new}, cache_len)
+        if USE_PALLAS_ATTN:
+            from repro.kernels import ops as kops
+            out = kops.decode_attention(
+                q.swapaxes(1, 2), cache["k"].swapaxes(1, 2),
+                cache["v"].swapaxes(1, 2), position[0] + 1,
+                window=window).swapaxes(1, 2)
+        else:
+            out = gqa_attend(q, cache["k"], cache["v"], valid)
+    y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+    return y, cache
+
+
+# --------------------------------------------------------------------------
+# PipeDec two-level cache path (paper §3.4.2, Algorithm 1)
+# --------------------------------------------------------------------------
+def init_tree_cache(cfg: ModelConfig, batch: int, capacity: int,
+                    dtype=jnp.float32):
+    """Speculative (tree) KV cache — level 2 of the two-level cache."""
+    return init_kv_cache(cfg, batch, capacity, dtype)
+
+
+def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
+                     model_cache, model_len, tree_cache, tree_write_index,
+                     tree_mask, window: int = 0):
+    """Attention for one new tree layer (paper Algorithm 1).
+
+    x:            [B, n, d]    hidden states of the new tree layer nodes
+    positions:    [B, n]       absolute positions (model_len-1 + depth)
+    model_cache:  committed-token KV, ``model_len`` valid entries
+    tree_cache:   speculative KV; this layer written at ``tree_write_index``
+    tree_mask:    [n, T_cap] bool — ancestor mask of the new nodes against
+                  the whole tree buffer (True = attend), already includes
+                  self-attention of each node.
+    Returns (out [B,n,d], new_tree_cache).
+    """
+    b, n, _ = x.shape
+    # -- past part: plain causal over committed tokens --------------------
+    max_len = (model_cache["c_kv"] if cfg.mla is not None
+               else model_cache["k"]).shape[1]
+    kpos = jnp.arange(max_len)[None, None, None, :]
+    past_valid = kpos < model_len  # every committed token is an ancestor
+    if window:
+        past_valid = past_valid & (kpos > positions[:, None, :, None] - window)
+    tcap = (tree_cache["c_kv"] if cfg.mla is not None
+            else tree_cache["k"]).shape[1]
+    tmask = tree_mask[None, None]  # [1,1,n,Tcap]
+
+    if cfg.mla is not None:
+        q_nope, q_rope = _project_q_mla(params, cfg, x, positions)
+        c_kv, k_rope = _project_ckv_mla(params, cfg, x, positions)
+        tree_cache = _cache_write(tree_cache, {"c_kv": c_kv, "k_rope": k_rope},
+                                  tree_write_index)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+        def expand(cache_part):
+            k_nope, v = _expand_ckv(params, cfg, cache_part["c_kv"])
+            kr = cache_part["k_rope"]
+            k = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                          (*k_nope.shape[:3], kr.shape[-1]))],
+                axis=-1)
+            return k, v
+
+        k_past, v_past = expand(model_cache)
+        k_tree, v_tree = expand(tree_cache)
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    else:
+        q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+        tree_cache = _cache_write(tree_cache, {"k": k_new, "v": v_new},
+                                  tree_write_index)
+        k_past, v_past = model_cache["k"], model_cache["v"]
+        k_tree, v_tree = tree_cache["k"], tree_cache["v"]
+        scale = None
+
+    if USE_PALLAS_ATTN and cfg.mla is None and window == 0:
+        # two-kernel path: flash over past + tree-block, LSE-combined
+        # (kernels/ops.py) — identical math to the joint softmax below.
+        from repro.kernels import ops as kops
+        out = kops.tree_attention(
+            q.swapaxes(1, 2), k_past.swapaxes(1, 2), v_past.swapaxes(1, 2),
+            k_tree.swapaxes(1, 2), v_tree.swapaxes(1, 2), tree_mask,
+            model_len).swapaxes(1, 2)
+        y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+        return y, tree_cache
+    # Joint softmax over [past ‖ tree] (paper computes the two score blocks
+    # separately then softmaxes the concat — identical math).
+    k = jnp.concatenate([k_past, k_tree], axis=1)
+    v = jnp.concatenate([v_past, v_tree], axis=1)
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(past_valid, (b, 1, n, max_len)),
+         jnp.broadcast_to(tmask, (b, 1, n, tcap))], axis=-1)
+    out = gqa_attend(q, k, v, mask, scale=scale)
+    y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+    return y, tree_cache
+
+
+# --------------------------------------------------------------------------
+# cross attention (enc-dec)
+# --------------------------------------------------------------------------
+def cross_attn_forward(params, cfg: ModelConfig, x, enc_kv):
+    """Decoder cross-attention; enc_kv = (k, v) precomputed from encoder."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k, v = enc_kv
+    out = gqa_attend(q, k, v, None)
+    return jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+
+
+def encode_cross_kv(params, cfg: ModelConfig, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["w_v"])
+    return k, v

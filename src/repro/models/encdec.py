@@ -1,0 +1,50 @@
+"""Encoder tower for enc-dec backbones (Whisper-style).
+
+Per the task carve-out, the *modality frontend* (mel spectrogram + conv
+feature extractor) is a stub — ``repro.models.frontends`` supplies frame
+embeddings of shape [B, n_frames, d_model].  The encoder here is the real
+transformer tower: bidirectional self-attention + MLP blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+from repro.models.layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+
+
+def init_encoder(key, cfg: ModelConfig, dtype=jnp.float32):
+    enc = cfg.encoder
+    ks = jax.random.split(key, enc.num_layers + 1)
+    layers = []
+    for i in range(enc.num_layers):
+        lk = jax.random.split(ks[i], 2)
+        layers.append({
+            "norm1": init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn.init_attention(lk[0], cfg, dtype),
+            "norm2": init_rmsnorm(cfg.d_model, dtype),
+            "mlp": init_mlp(lk[1], cfg.d_model, enc.d_ff or cfg.d_ff,
+                            "gelu", dtype),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {"layers": stacked, "final_norm": init_rmsnorm(cfg.d_model, dtype)}
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: [B, T, d_model] stub embeddings -> encoder output."""
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body(x, layer_p):
+        h = rmsnorm(layer_p["norm1"], x, cfg.norm_eps)
+        y, _ = attn.attn_forward(layer_p["attn"], cfg, h, positions,
+                                 causal=False)
+        x = x + y
+        h2 = rmsnorm(layer_p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(layer_p["mlp"], h2, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(body, frames, params["layers"])
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)

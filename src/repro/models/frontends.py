@@ -1,0 +1,34 @@
+"""Stub modality frontends (the single permitted carve-out).
+
+The audio conv-codec (Whisper mel + conv1d×2) and the VLM vision encoder
+(InternViT) are NOT implemented; instead these helpers produce deterministic
+embeddings of the correct shape/dtype so that (a) smoke tests run end to end
+and (b) ``input_specs()`` can hand ShapeDtypeStructs to the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def audio_frames_spec(cfg: ModelConfig, batch: int):
+    n = cfg.encoder.max_source_positions
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), jnp.float32)
+
+
+def vision_prefix_spec(cfg: ModelConfig, batch: int):
+    return jax.ShapeDtypeStruct((batch, cfg.prefix_tokens, cfg.d_model),
+                                jnp.float32)
+
+
+def stub_audio_frames(cfg: ModelConfig, batch: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    n = cfg.encoder.max_source_positions
+    return jax.random.normal(key, (batch, n, cfg.d_model)) * 0.02
+
+
+def stub_vision_prefix(cfg: ModelConfig, batch: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (batch, cfg.prefix_tokens, cfg.d_model)) * 0.02

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts: token-choice top-k router + sort-based grouped GEMM.
+
+Design notes (TPU adaptation):
+  * Dispatch is *sort-based*: tokens are replicated top-k times, sorted by
+    expert id, and packed into an ``[E, C, d]`` buffer (capacity
+    ``C = ceil(T·k/E · capacity_factor)``; overflow tokens are dropped, as in
+    Switch/GShard).  Expert compute is then three grouped GEMMs
+    ``[E,C,d]×[E,d,f]`` whose FLOPs equal the *active* parameter count —
+    this is what makes the roofline's MODEL_FLOPS/HLO_FLOPs ratio honest,
+    unlike a masked dense-over-all-experts formulation.
+  * Under pjit the ``E`` dimension of the buffers and weights is sharded on
+    the "model" mesh axis => expert parallelism; the scatter/gather around
+    the grouped GEMM lowers to all-to-all-style collectives.
+  * Shared experts (Qwen-MoE / DeepSeek / Moonlight) are a plain dense MLP
+    with ``num_shared · d_ff_expert`` width, always active.
+  * The router aux (load-balance) loss is returned for the training path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_mlp, mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    mo = cfg.moe
+    d, f, e = cfg.d_model, mo.d_ff_expert, mo.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),  # fp32 router
+        "w_gate": dense_init(ks[1], (e, d, f), in_axis=1, dtype=dtype),
+        "w_up": dense_init(ks[2], (e, d, f), in_axis=1, dtype=dtype),
+        "w_down": dense_init(ks[3], (e, f, d), in_axis=1, dtype=dtype),
+    }
+    if mo.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, mo.num_shared_experts * f,
+                               "swiglu", dtype=dtype)
+    return p
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    mo = cfg.moe
+    c = math.ceil(tokens * mo.experts_per_token / mo.num_experts
+                  * mo.capacity_factor)
+    # keep lane-aligned for TPU layouts
+    return max(8, -(-c // 8) * 8)
+
+
+def route(params, cfg: ModelConfig, x_flat) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (topk_idx [T,k], topk_gate [T,k], aux_loss scalar)."""
+    mo = cfg.moe
+    logits = x_flat.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, mo.experts_per_token)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux: E * sum_e f_e * p_e
+    t = x_flat.shape[0]
+    density = jnp.zeros((mo.num_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0) / (t * mo.experts_per_token)
+    mean_prob = probs.mean(axis=0)
+    aux = mo.num_experts * jnp.sum(density * mean_prob)
+    return idx, gate.astype(x_flat.dtype), aux
+
+
+# ---- distributed-dispatch knobs (set by the launcher) ---------------------
+# _GROUPS: dispatch groups — tokens are routed/sorted/capacity-bounded
+#   *within* each group.  With groups == number of data shards and the group
+#   dim sharded over 'data', the argsort and the scatter stay shard-local
+#   (no distributed sort) and only the expert GEMM communicates (§Perf H2).
+# _BUF_SHARDING / _H_SHARDING: optional NamedShardings constraining the
+#   dispatch buffers, e.g. P(('pod','data'), 'model', None, None).
+_GROUPS = 1
+_BUF_SHARDING = None
+_X_SHARDING = None  # [B,S,d] sharding at MoE entry (batch-only: the token
+#                     stream must be group-aligned so sorts/scatters stay
+#                     shard-local — sequence parallelism is re-applied by
+#                     the caller after the block)
+
+
+def set_dispatch(groups: int = 1, buf_sharding=None,
+                 x_sharding=None) -> None:
+    global _GROUPS, _BUF_SHARDING, _X_SHARDING
+    _GROUPS = max(1, int(groups))
+    _BUF_SHARDING = buf_sharding
+    _X_SHARDING = x_sharding
+
+
+def _constrain_buf(x):
+    if _BUF_SHARDING is not None:
+        return jax.lax.with_sharding_constraint(x, _BUF_SHARDING)
+    return x
+
+
+def moe_forward(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (y [B,S,d], aux_loss).
+
+    Group-wise sort-based dispatch: within each of ``_GROUPS`` token groups,
+    replicate tokens top-k times, sort by expert id (axis-local argsort),
+    pack into a per-group [E, C_g, d] buffer, run the grouped expert GEMMs,
+    and combine.  Per-group capacity C_g = ceil(T_g·k/E · cf); overflow is
+    dropped per group (standard Switch/GShard semantics per shard).
+    """
+    mo = cfg.moe
+    if _X_SHARDING is not None:
+        x = jax.lax.with_sharding_constraint(x, _X_SHARDING)
+    b, s, d = x.shape
+    t = b * s
+    k = mo.experts_per_token
+    e = mo.num_experts
+    g = _GROUPS if t % _GROUPS == 0 else 1
+    tl = t // g
+    x_flat = x.reshape(t, d)
+
+    idx, gate, aux = route(params, cfg, x_flat)
+
+    # ---- group-local sort-based dispatch ---------------------------------
+    fe = idx.reshape(g, tl * k)                          # [G, Tl*k]
+    ft = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tl), k)[None], (g, tl * k))
+    fg = gate.reshape(g, tl * k)
+    order = jnp.argsort(fe, axis=-1, stable=True)        # local sorts
+    se = jnp.take_along_axis(fe, order, -1)
+    st = jnp.take_along_axis(ft, order, -1)
+    sg = jnp.take_along_axis(fg, order, -1)
+
+    one_pos = jnp.arange(tl * k)[None]
+    counts = (fe[:, None, :] == jnp.arange(e)[None, :, None]).sum(-1)  # [G,E]
+    starts = jnp.concatenate(
+        [jnp.zeros((g, 1), counts.dtype), jnp.cumsum(counts, -1)[:, :-1]], -1)
+    pos_in_e = one_pos - jnp.take_along_axis(starts, se, -1)
+    cap = capacity(tl, cfg)
+    keep = pos_in_e < cap
+    slot = se * cap + jnp.where(keep, pos_in_e, 0)       # [G, Tl*k]
+
+    # NOTE gather-only dataflow (no scatters): scatters with explicit index
+    # arrays defeat the SPMD partitioner's batch-dim detection and replicate
+    # the [G, Tl·k, d] operands across the mesh (§Perf H2).  Because entries
+    # are expert-sorted, both dispatch and combine are pure gathers.
+    xg = x_flat.reshape(g, tl, d)
+    src = jnp.take_along_axis(xg, st[..., None], 1)      # [G, Tl*k, d]
+
+    # dispatch: buffer position (e, c) reads sorted entry starts[e] + c
+    bpos = jnp.arange(e * cap)[None]
+    b_e = bpos // cap
+    b_c = bpos % cap
+    src_pos = jnp.take_along_axis(starts, jnp.broadcast_to(b_e, (g, e * cap)),
+                                  -1) + b_c
+    b_valid = b_c < jnp.take_along_axis(
+        counts, jnp.broadcast_to(b_e, (g, e * cap)), -1)
+    src_pos = jnp.where(b_valid, src_pos, 0)
+    buf = jnp.where(b_valid[..., None],
+                    jnp.take_along_axis(src, src_pos[..., None], 1), 0)
+    buf = _constrain_buf(buf.reshape(g, e, cap, d))
+
+    # ---- grouped expert GEMMs (active FLOPs only) ------------------------
+    h_gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+    h_up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    h = jnp.einsum("gecf,efd->gecd", h_gate * h_up, params["w_down"])
+    h = _constrain_buf(h).reshape(g, e * cap, d)
+
+    # ---- combine: un-sort (gather) then sum the k copies per token --------
+    gathered = jnp.take_along_axis(h, slot[..., None], 1) \
+        * (sg * keep)[..., None]                         # [G, Tl*k, d] sorted
+    inv = jnp.argsort(order, axis=-1)
+    contrib = jnp.take_along_axis(gathered, inv[..., None], 1)
+    y = contrib.reshape(g, tl, k, d).sum(2).reshape(t, d).astype(x.dtype)
+
+    if mo.num_shared_experts:
+        y = y + mlp(params["shared"], x_flat, "swiglu")
+    return y.reshape(b, s, d), aux

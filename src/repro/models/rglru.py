@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = in-projections to two branches (x, y), short depthwise conv + RG-LRU
+on the x branch, GeLU on the y branch, elementwise product, out-projection.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    a_t = a^(c·r_t)          with  a = sigmoid(Λ),  c = 8
+    h_t = a_t · h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+The scan is a first-order linear recurrence — we use an associative scan in
+log-space decays (TPU-friendly: O(log T) depth, no per-token HBM state dump).
+Decode keeps (conv_state, h) per layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, w = cfg.d_model, _width(cfg)
+    k = cfg.rglru.d_conv
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ [0.9, 0.999] roughly (standard Griffin init)
+    u = jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (-1.0 / _C) - 1.0) * -1.0  # sigmoid(Λ)^c ≈ u
+    return {
+        "in_x": dense_init(ks[0], (d, w), dtype=dtype),
+        "in_y": dense_init(ks[1], (d, w), dtype=dtype),
+        "conv_w": dense_init(ks[2], (k, w), dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[3], (w, w), dtype=dtype),
+        "w_i": dense_init(ks[4], (w, w), dtype=dtype),
+        "lambda": lam.astype(jnp.float32),
+        "out": dense_init(jax.random.fold_in(key, 7), (w, d), dtype=dtype),
+    }
+
+
+def _gates(params, x):
+    """x: [..., w] -> (log_a, gated_input) both fp32."""
+    r = jax.nn.sigmoid(x.astype(jnp.float32) @ params["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x.astype(jnp.float32) @ params["w_i"].astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(-params["lambda"])  # log sigmoid(Λ)^(c·r)
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a2, 1e-12)) * (i * x.astype(jnp.float32))
+    return log_a, gated
+
+
+def _conv_full(params, x):
+    w = params["conv_w"]
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + params["conv_b"]
+
+
+def rglru_scan(log_a, u, h0=None):
+    """Associative scan of h_t = exp(log_a_t)·h_{t-1} + u_t over axis 1."""
+    if h0 is not None:
+        # fold initial state into the first input
+        u = u.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(left, right):
+        la, xa = left
+        lb, xb = right
+        return la + lb, jnp.exp(lb) * xa + xb
+
+    _, h = jax.lax.associative_scan(combine, (log_a, u), axis=1)
+    return h
+
+
+def rglru_forward(params, cfg: ModelConfig, x_in, *, state=None):
+    """x_in: [B,S,d] -> (out [B,S,d], new_state {conv, h})."""
+    b, s, _ = x_in.shape
+    xb = x_in @ params["in_x"]
+    yb = jax.nn.gelu(x_in @ params["in_y"], approximate=True)
+    k = params["conv_w"].shape[0]
+    if state is not None:
+        pad = jnp.concatenate([state["conv"], xb], axis=1)
+        conv = sum(pad[:, i:i + s, :] * params["conv_w"][i]
+                   for i in range(k)) + params["conv_b"]
+        new_conv = pad[:, -(k - 1):]
+    else:
+        conv = _conv_full(params, xb)
+        new_conv = xb[:, -(k - 1):] if s >= k - 1 else jnp.pad(
+            xb, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    log_a, gated = _gates(params, conv)
+    h0 = state["h"] if state is not None else None
+    h = rglru_scan(log_a, gated, h0)
+    out = (h.astype(x_in.dtype) * yb) @ params["out"]
+    return out, {"conv": new_conv, "h": h[:, -1]}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w, k = _width(cfg), cfg.rglru.d_conv
+    return {"conv": jnp.zeros((batch, k - 1, w), dtype),
+            "h": jnp.zeros((batch, w), jnp.float32)}
+
+
+def rglru_decode(params, cfg: ModelConfig, x_in, state):
+    """One-token step. x_in: [B,1,d] -> (y [B,1,d], state)."""
+    xb = x_in[:, 0] @ params["in_x"]  # [B,w]
+    yb = jax.nn.gelu(x_in[:, 0] @ params["in_y"], approximate=True)
+    window = jnp.concatenate([state["conv"], xb[:, None]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    log_a, gated = _gates(params, conv)
+    h = jnp.exp(log_a) * state["h"] + gated
+    out = (h.astype(x_in.dtype) * yb) @ params["out"]
+    return out[:, None], {"conv": window[:, 1:], "h": h}

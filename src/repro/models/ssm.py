@@ -1,0 +1,211 @@
+"""Mamba-2 (SSD — state-space duality) block, arXiv:2405.21060.
+
+TPU adaptation: the chunked SSD algorithm is the natural fit — intra-chunk
+work is a masked ``[Q,Q]`` matmul (MXU-friendly), inter-chunk state carry is
+a short ``lax.scan``; no ``[T, heads, hd, d_state]`` state materialisation.
+
+Block layout (ngroups = 1):
+    in_proj  -> z (d_inner), xBC (d_inner + 2·d_state), dt (n_heads)
+    conv1d(width d_conv, depthwise) + silu over xBC
+    SSD recurrence per head h (scalar A_h):
+        S_t = exp(dt_t A_h) S_{t-1} + dt_t · x_t ⊗ B_t,   y_t = S_t C_t + D_h x_t
+    y · silu(z) -> RMSNorm -> out_proj
+
+Decode keeps ``(conv_state [B, d_conv-1, ch], ssd_state [B,H,hd,N])``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    return s, di, nh, s.head_dim, s.d_state
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32):
+    s, di, nh, hd, n = _dims(cfg)
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * di + 2 * n + nh),
+                              dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_ch), dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": dense_init(ks[2], (di, cfg.d_model), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    _, di, nh, _, n = _dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _conv_full(params, xbc):
+    """Depthwise causal conv over [B,S,ch] (zero left pad)."""
+    w = params["conv_w"]  # [K, ch]
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + params["conv_b"])
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x:  [b, T, H, hd]   (already conv'd/activated inner activations)
+    dt: [b, T, H]       (softplus'd step sizes)
+    A:  [H]             (negative scalars)
+    B, C: [b, T, N]
+    Returns (y [b,T,H,hd], final_state [b,H,hd,N]).
+    """
+    b, t, h, hd = x.shape
+    n = B.shape[-1]
+    q = chunk
+    assert t % q == 0, (t, q)
+    nc = t // q
+
+    out_dtype = x.dtype
+    # SSD state math in fp32 (long products of decays underflow in bf16)
+    xr = x.reshape(b, nc, q, h, hd).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Br = B.reshape(b, nc, q, n).astype(jnp.float32)
+    Cr = C.reshape(b, nc, q, n).astype(jnp.float32)
+
+    dta = dtr * A  # [b,nc,q,h] log-decay per step
+    cum = jnp.cumsum(dta, axis=2)  # inclusive
+    # decay matrix within chunk: L[i,j] = exp(cum_i - cum_j), j <= i
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,q,q,h]
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, None, :, :, None]
+    L = jnp.where(mask, jnp.exp(li), 0.0)
+
+    # intra-chunk: y[i] = sum_j (C_i·B_j) L[i,j] dt_j x_j
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br)  # [b,nc,q,q]
+    w = cb[..., None] * L  # [b,nc,q,q,h]
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhd->bcihd", w, dtr, xr)
+
+    # chunk-boundary state contributions
+    total = cum[:, :, -1, :]  # [b,nc,h] full-chunk log decay
+    decay_out = jnp.exp(total[:, :, None, :] - cum)  # [b,nc,q,h] j -> chunk end
+    # state injected by chunk c: sum_j decay_out_j dt_j x_j ⊗ B_j
+    s_in = jnp.einsum("bcjh,bcjh,bcjhd,bcjn->bchdn", decay_out, dtr, xr, Br)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, hd, n), jnp.float32)
+    initial_state = initial_state.astype(jnp.float32)
+
+    def step(state, inp):
+        s_chunk, tot = inp  # [b,h,hd,n], [b,h]
+        prev = state
+        new = prev * jnp.exp(tot)[:, :, None, None] + s_chunk
+        return new, prev  # emit state entering this chunk
+
+    # scan over chunks
+    s_in_t = jnp.moveaxis(s_in, 1, 0)
+    tot_t = jnp.moveaxis(total, 1, 0)
+    final, prev_states = jax.lax.scan(step, initial_state, (s_in_t, tot_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [b,nc,h,hd,n]
+
+    # inter-chunk: y[i] += C_i · exp(cum_i) S_prev
+    decay_in = jnp.exp(cum)  # [b,nc,q,h]
+    y_inter = jnp.einsum("bcin,bcih,bchdn->bcihd", Cr, decay_in, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, t, h, hd)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(out_dtype), final
+
+
+def ssm_forward(params, cfg: ModelConfig, x_in, *, initial_state=None
+                ) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence SSD block. x_in: [B,S,d_model] ->
+    (y, state {"conv", "ssd"}) — state is ready for ``ssm_decode``."""
+    s, di, nh, hd, n = _dims(cfg)
+    proj = x_in @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    pre_conv = xbc
+    xbc = _conv_full(params, xbc)
+    xi = xbc[..., :di]
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    b, t, _ = x_in.shape
+    q = min(s.chunk, t)
+    # pad T to a chunk multiple
+    pad = (-t) % q
+    if pad:
+        xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_chunked(xi.reshape(b, t + pad, nh, hd), dt, A, B, C,
+                           params["D"], chunk=q, initial_state=initial_state)
+    y = y[:, :t].reshape(b, t, di)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    # conv window for a subsequent decode step: last d_conv-1 *pre-conv* inputs
+    k = s.d_conv - 1
+    if t >= k:
+        conv_state = pre_conv[:, -k:]
+    else:
+        conv_state = jnp.pad(pre_conv, ((0, 0), (k - t, 0), (0, 0)))
+    state = state.astype(initial_state.dtype if initial_state is not None
+                         else x_in.dtype)
+    return y @ params["out_proj"], {"conv": conv_state, "ssd": state}
+
+
+# --------------------------------------------------------------------------
+# decode (recurrent) path
+# --------------------------------------------------------------------------
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, di, nh, hd, n = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * n), dtype),
+        "ssd": jnp.zeros((batch, nh, hd, n), dtype),
+    }
+
+
+def ssm_decode(params, cfg: ModelConfig, x_in, state):
+    """One-token step. x_in: [B,1,d_model] -> (y [B,1,d_model], state)."""
+    s, di, nh, hd, n = _dims(cfg)
+    proj = x_in[:, 0] @ params["in_proj"]  # [B, ...]
+    z, xbc, dt = _split_proj(cfg, proj)
+    # conv with cached window
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xi = xbc[..., :di].reshape(-1, nh, hd)
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)  # [B,H]
+    inject = jnp.einsum("bh,bhd,bn->bhdn", dt,
+                        xi.astype(jnp.float32), B.astype(jnp.float32))
+    new_ssd = state["ssd"].astype(jnp.float32) * decay[:, :, None, None] \
+        + inject
+    y = jnp.einsum("bhdn,bn->bhd", new_ssd, C.astype(jnp.float32)) \
+        + xi.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(-1, di).astype(x_in.dtype) * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y @ params["out_proj"]
+    return y[:, None, :], {"conv": new_conv,
+                           "ssd": new_ssd.astype(state["ssd"].dtype)}

@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, Result, ServingEngine
+
+__all__ = ["Request", "Result", "ServingEngine"]

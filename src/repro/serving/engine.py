@@ -1,0 +1,119 @@
+"""Serving engine: request queue + two execution modes.
+
+  * ``mode="pp"``      — throughput-oriented batched autoregressive decode
+                         (requests bucketed by prompt length, decoded in
+                         lockstep batches; the paper's PP baseline).
+  * ``mode="pipedec"`` — latency-oriented: the whole pipeline works on ONE
+                         task at a time with the dynamic prediction tree
+                         (the paper's system; Fig. 8 shows the throughput
+                         trade-off this makes).
+
+The KV-cache manager hands out fixed-size cache arenas per batch; prompt
+bucketing keeps row cache offsets identical so lockstep decode needs no
+per-row positions.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import generate_autoregressive
+from repro.core.pipedec import PipeDecConfig, PipeDecEngine
+from repro.core.speculative import ModelBundle, SamplingParams, select_token
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray
+    latency_s: float
+    stats: Optional[object] = None
+
+
+class ServingEngine:
+    def __init__(self, target: ModelBundle, draft: Optional[ModelBundle]
+                 = None, *, mode: str = "pp", max_batch: int = 8,
+                 max_len: int = 512,
+                 pipedec: Optional[PipeDecConfig] = None,
+                 sampling: SamplingParams = SamplingParams()):
+        assert mode in ("pp", "pipedec")
+        if mode == "pipedec":
+            assert draft is not None, "pipedec mode needs a draft model"
+        self.target, self.draft, self.mode = target, draft, mode
+        self.max_batch, self.max_len = max_batch, max_len
+        self.pipedec_cfg = pipedec or PipeDecConfig()
+        self.sampling = sampling
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _run_pp_batch(self, batch: List[Request]) -> List[Result]:
+        t0 = time.perf_counter()
+        tgt = self.target
+        prompts = np.stack([r.prompt for r in batch])
+        b, s = prompts.shape
+        new = max(r.max_new_tokens for r in batch)
+        cache = tgt.init_cache(b, self.max_len)
+        logits, cache = tgt.prefill(jnp.asarray(prompts, jnp.int32), cache)
+        toks = np.asarray(jnp.argmax(logits, -1))
+        outs = [[int(t)] for t in toks]
+        model_len = s
+        key = jax.random.PRNGKey(0)
+        for _ in range(new):
+            logits, cache = tgt.decode(jnp.asarray(toks, jnp.int32), cache,
+                                       model_len)
+            model_len += 1
+            if self.sampling.temperature > 0:
+                keys = jax.random.split(key, b + 1)
+                key = keys[0]
+                toks = np.asarray([
+                    int(select_token(logits[i], self.sampling, keys[i + 1]))
+                    for i in range(b)])
+            else:
+                toks = np.asarray(jnp.argmax(logits, -1))
+            for i, t in enumerate(toks):
+                outs[i].append(int(t))
+        dt = time.perf_counter() - t0
+        return [Result(r.uid, np.asarray(o[: r.max_new_tokens + 1]), dt)
+                for r, o in zip(batch, outs)]
+
+    def _run_pipedec_one(self, req: Request) -> Result:
+        t0 = time.perf_counter()
+        eng = PipeDecEngine(self.target, self.draft, self.pipedec_cfg,
+                            max_len=self.max_len)
+        out, stats = eng.generate(req.prompt, req.max_new_tokens)
+        return Result(req.uid, out, time.perf_counter() - t0, stats)
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[int, Result]:
+        results: Dict[int, Result] = {}
+        if self.mode == "pipedec":
+            for req in self.queue:
+                results[req.uid] = self._run_pipedec_one(req)
+            self.queue.clear()
+            return results
+        # pp: bucket by prompt length, then batch
+        buckets = collections.defaultdict(list)
+        for r in self.queue:
+            buckets[len(r.prompt)].append(r)
+        self.queue.clear()
+        for _, reqs in sorted(buckets.items()):
+            for i in range(0, len(reqs), self.max_batch):
+                for res in self._run_pp_batch(reqs[i: i + self.max_batch]):
+                    results[res.uid] = res
+        return results

@@ -1,0 +1,162 @@
+"""Attention unit tests: variants, cache equivalence, tree-verify path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import transformer as tf
+from repro.models.config import MLAConfig, ModelConfig
+
+
+def mk_cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=1, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_gqa_attend_matches_mha_when_repeated():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 5, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 5, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 5, 2, 16)), jnp.float32)
+    out = A.gqa_attend(q, k, v, A.causal_mask(5, 5, 0))
+    k2 = jnp.repeat(k, 2, axis=2)
+    v2 = jnp.repeat(v, 2, axis=2)
+    out2 = A.gqa_attend(q, k2, v2, A.causal_mask(5, 5, 0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), rtol=1e-6)
+
+
+def test_sliding_window_masks_old_tokens():
+    cfg = mk_cfg()
+    params = A.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 64))
+    pos = jnp.arange(12)[None]
+    full, _ = A.attn_forward(params, cfg, x, pos)
+    win, _ = A.attn_forward(params, cfg, x, pos, window=4)
+    # early positions (inside window) identical, late positions differ
+    np.testing.assert_allclose(np.asarray(full[:, :4]), np.asarray(win[:, :4]),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(full[:, -1]), np.asarray(win[:, -1]))
+
+
+def test_chunked_causal_equals_dense():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 64, 2, 16)), jnp.float32)
+    dense = A.gqa_attend(q, k, v, A.causal_mask(64, 64, 0))
+    old = A.CHUNK_Q
+    try:
+        A.CHUNK_Q = 16
+        chunked = A.chunked_causal_attend(q, k, v)
+    finally:
+        A.CHUNK_Q = old
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               rtol=2e-5, atol=2e-5)
+    # windowed variant too
+    denw = A.gqa_attend(q, k, v, A.causal_mask(64, 64, 0, window=7))
+    try:
+        A.CHUNK_Q = 16
+        chw = A.chunked_causal_attend(q, k, v, window=7)
+    finally:
+        A.CHUNK_Q = old
+    np.testing.assert_allclose(np.asarray(denw), np.asarray(chw),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("mla", [False, True])
+def test_decode_matches_full_forward(mla):
+    cfg = mk_cfg(num_kv_heads=4,
+                 mla=MLAConfig(kv_lora_rank=32, q_lora_rank=0,
+                               qk_nope_head_dim=16, qk_rope_head_dim=8,
+                               v_head_dim=16) if mla else None)
+    params = A.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 64))
+    pos = jnp.broadcast_to(jnp.arange(9)[None], (2, 9))
+    full, _ = A.attn_forward(params, cfg, x, pos)
+
+    cache = A.init_kv_cache(cfg, 2, 16)
+    pre, cache = A.attn_forward(params, cfg, x[:, :8], pos[:, :8],
+                                cache=cache, cache_index=0)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :8]),
+                               rtol=2e-5, atol=2e-5)
+    dec, cache = A.attn_decode(params, cfg, x[:, 8:9],
+                               jnp.full((2,), 8, jnp.int32), cache, 8)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, 8:9]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("mla", [False, True])
+def test_tree_verify_equals_path_decode(mla, tiny_dense, tiny_mla):
+    """A linear chain presented as a 'tree' must reproduce sequential
+    decode logits exactly (the heart of speculative losslessness)."""
+    cfg = tiny_mla if mla else tiny_dense
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[3, 1, 4, 1, 5]], jnp.int32)
+
+    cache = tf.init_cache(cfg, 1, 32)
+    logits0, cache = tf.prefill(params, cfg, prompt, cache)
+    chain = [int(jnp.argmax(logits0[0]))]
+
+    # reference: sequential greedy decode
+    ref_cache = jax.tree.map(lambda x: x, cache)
+    ref_logits = []
+    tok = chain[0]
+    mlen = 5
+    for i in range(3):
+        lg, ref_cache = tf.decode_step(params, cfg,
+                                       jnp.asarray([tok], jnp.int32),
+                                       ref_cache, mlen)
+        ref_logits.append(np.asarray(lg[0]))
+        tok = int(jnp.argmax(lg[0]))
+        chain.append(tok)
+        mlen += 1
+
+    # tree verify: present the same chain as a depth-3 path, one layer at a
+    # time (each node list = one layer of width 1)
+    tcap = 8
+    tcaches = tf.init_tree_caches(cfg, 1, tcap)
+    mask = np.zeros((1, tcap), bool)
+    out_logits = []
+    for d in range(3):
+        mask[0, d] = True
+        row = np.zeros((1, tcap), bool)
+        row[0, : d + 1] = True
+        lg, tcaches = tf.tree_verify_step(
+            params, cfg, jnp.asarray([[chain[d]]], jnp.int32),
+            jnp.asarray([[5 + d]], jnp.int32), jnp.asarray(row),
+            cache, 5, tcaches, d)
+        out_logits.append(np.asarray(lg[0, 0]))
+
+    for got, ref in zip(out_logits, ref_logits):
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_commit_tree_node_moves_kv(tiny_dense):
+    cfg = tiny_dense
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[3, 1, 4]], jnp.int32)
+    cache = tf.init_cache(cfg, 1, 16)
+    logits0, cache = tf.prefill(params, cfg, prompt, cache)
+    tok = int(jnp.argmax(logits0[0]))
+
+    # reference: decode writes KV at position 3
+    ref_cache = jax.tree.map(lambda x: x, cache)
+    _, ref_cache = tf.decode_step(params, cfg, jnp.asarray([tok], jnp.int32),
+                                  ref_cache, 3)
+
+    # tree path: verify node then commit row 0
+    tcaches = tf.init_tree_caches(cfg, 1, 4)
+    row = np.zeros((1, 4), bool)
+    row[0, 0] = True
+    _, tcaches = tf.tree_verify_step(
+        params, cfg, jnp.asarray([[tok]], jnp.int32),
+        jnp.asarray([[3]], jnp.int32), jnp.asarray(row), cache, 3,
+        tcaches, 0)
+    cache2 = tf.commit_tree_node(cfg, cache, tcaches, 0, 3)
+
+    ref_k = np.asarray(ref_cache["stack"][0]["k"][:, :, :4])
+    got_k = np.asarray(cache2["stack"][0]["k"][:, :, :4])
+    np.testing.assert_allclose(got_k, ref_k, rtol=2e-5, atol=2e-5)

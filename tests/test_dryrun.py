@@ -1,0 +1,36 @@
+"""Dry-run smoke: one small (arch × shape × production-mesh) combination
+lowers and compiles in a subprocess (512 fake devices must not leak into
+this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("whisper-base", "decode_32k")])
+def test_dryrun_subprocess(arch, shape, tmp_path):
+    out = tmp_path / "rows.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", str(out)],
+        capture_output=True, text=True, timeout=1200, env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    rows = [json.loads(l) for l in out.read_text().splitlines()]
+    assert len(rows) == 1
+    r = rows[0]
+    assert r["arch"] == arch and r["shape"] == shape
+    assert r["chips"] == 256 and r["mesh"] == "16x16"
+    assert r["hlo_flops"] > 0 and r["hlo_bytes"] > 0
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_devices_not_polluted():
+    import jax
+    assert len(jax.devices()) == 1, \
+        "test process must never see the dry-run's 512 fake devices"

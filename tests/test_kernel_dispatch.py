@@ -1,0 +1,59 @@
+"""REPRO_USE_PALLAS_ATTN=1 path: kernel-backed decode / tree-verify must
+match the jnp path exactly (the kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import transformer as tf
+
+
+def test_kernel_decode_matches_jnp(tiny_dense):
+    cfg = tiny_dense
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128)
+    cache = tf.init_cache(cfg, 2, 16)
+    logits, cache = tf.prefill(params, cfg, toks, cache)
+    tok = jnp.argmax(logits, -1)
+
+    ref, _ = tf.decode_step(params, cfg, tok,
+                            jax.tree.map(lambda x: x, cache), 8)
+    old = A.USE_PALLAS_ATTN
+    try:
+        A.USE_PALLAS_ATTN = True
+        got, _ = tf.decode_step(params, cfg, tok,
+                                jax.tree.map(lambda x: x, cache), 8)
+    finally:
+        A.USE_PALLAS_ATTN = old
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_tree_verify_matches_jnp(tiny_dense):
+    cfg = tiny_dense
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0, 128)
+    cache = tf.init_cache(cfg, 1, 16)
+    logits, cache = tf.prefill(params, cfg, toks, cache)
+    root = jnp.argmax(logits, -1)
+
+    tcap = 8
+    node_tokens = jnp.zeros((1, 4), jnp.int32).at[0, 0].set(root[0])
+    positions = jnp.asarray([[6, 0, 0, 0]], jnp.int32)
+    mask = np.zeros((4, tcap), bool)
+    mask[0, 0] = True
+
+    def go():
+        tcaches = tf.init_tree_caches(cfg, 1, tcap)
+        lg, _ = tf.tree_verify_step(params, cfg, node_tokens, positions,
+                                    jnp.asarray(mask), cache, 6, tcaches, 0)
+        return np.asarray(lg)
+
+    ref = go()
+    old = A.USE_PALLAS_ATTN
+    try:
+        A.USE_PALLAS_ATTN = True
+        got = go()
+    finally:
+        A.USE_PALLAS_ATTN = old
+    np.testing.assert_allclose(got[:, 0], ref[:, 0], rtol=2e-4, atol=2e-4)

@@ -1,0 +1,68 @@
+"""shard_map pipeline tick: lowering + numerical equivalence vs the
+single-device tree-verify step (1-stage CPU mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import pipeline as pl
+from repro.models import transformer as tf
+from repro.models.layers import embed
+
+
+def test_tick_matches_tree_verify(tiny_dense):
+    cfg = tiny_dense
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pcfg = pl.PipelineConfig(n_stages=1, width=4, tree_capacity=16,
+                             max_len=32)
+    sp, valid = pl.stage_params(cfg, params, 1)
+    model_kv, tree_kv = pl.init_stage_caches(cfg, pcfg)
+    ring = pl.init_ring(cfg, pcfg)
+    tick = pl.make_pipedec_tick(cfg, pcfg, mesh)
+
+    # prefill on the reference path, then present one tree layer
+    cache = tf.init_cache(cfg, 1, 32)
+    prompt = jnp.asarray([[5, 3, 2, 7]], jnp.int32)
+    logits0, cache = tf.prefill(params, cfg, prompt, cache)
+    root = jnp.argmax(logits0, -1)  # [1]
+
+    # reference verify
+    tcaps = tf.init_tree_caches(cfg, 1, pcfg.tree_capacity + pcfg.width)
+    mask = np.zeros((4, pcfg.tree_capacity + pcfg.width), bool)
+    mask[0, 0] = True
+    tokens = jnp.zeros((1, 4), jnp.int32).at[0, 0].set(root[0])
+    positions = jnp.asarray([[4, 0, 0, 0]], jnp.int32)
+    ref_logits, _ = tf.tree_verify_step(params, cfg, tokens, positions,
+                                        jnp.asarray(mask), cache, 4, tcaps, 0)
+
+    # pipeline tick: copy the prefilled model cache into stage layout
+    # (list over in-stage layers of [S=1, B, rows, ...])
+    stacked = cache["stack"][0]  # unit has one sublayer: {k,v} [reps,1,...]
+    reps = len(jax.tree.leaves(stacked)[0])
+    model_kv = [jax.tree.map(lambda t: t[l][None], stacked)
+                for l in range(reps)]
+    x_in = embed(params["embed"], tokens)[0]  # [w, d]
+    entry = {
+        "act": x_in, "positions": positions[0],
+        "mask": jnp.asarray(mask), "write_idx": jnp.asarray(0, jnp.int32),
+        "model_len": jnp.asarray(4, jnp.int32),
+        "valid": jnp.asarray(True),
+    }
+    with mesh:
+        # tick 1: ring empty, entry ingested into stage 0
+        tkv1, ring1, exit1 = jax.jit(tick)(sp, valid, model_kv, tree_kv,
+                                           ring, entry)
+        assert not bool(exit1["valid"])
+        # tick 2: stage 0 processes the ingested layer; it exits
+        entry2 = dict(entry)
+        entry2["valid"] = jnp.asarray(False)
+        _, _, exit_out = jax.jit(tick)(sp, valid, model_kv, tkv1, ring1,
+                                       entry2)
+
+    got = exit_out["act"]  # [w, d] final hidden of the exiting layer
+    got_logits = tf._logits(params, cfg, got[None])[0]
+    np.testing.assert_allclose(np.asarray(got_logits[0]),
+                               np.asarray(ref_logits[0, 0]),
+                               rtol=2e-4, atol=2e-4)
+    assert bool(exit_out["valid"])

@@ -1,0 +1,106 @@
+"""Losslessness + acceptance properties of PipeDec / STPP (paper's central
+correctness claim: speculative output ≡ target-model autoregressive output).
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import (STPPConfig, STPPEngine,
+                                  generate_autoregressive)
+from repro.core.pipedec import PipeDecConfig, PipeDecEngine
+from repro.core.speculative import ModelBundle, SamplingParams
+from repro.models import transformer as tf
+
+
+@pytest.fixture(scope="module")
+def bundles(tiny_dense, tiny_draft):
+    tp = tf.init_model(jax.random.PRNGKey(0), tiny_dense)
+    dp = tf.init_model(jax.random.PRNGKey(9), tiny_draft)
+    return ModelBundle(tp, tiny_dense), ModelBundle(dp, tiny_draft)
+
+
+def test_pipedec_lossless_greedy(bundles):
+    target, draft = bundles
+    prompt = np.array([1, 5, 9, 3], np.int32)
+    ar = generate_autoregressive(target, prompt, 16)
+    for stages in (1, 2, 4):
+        eng = PipeDecEngine(target, draft,
+                            PipeDecConfig(n_stages=stages, width=4, branch=2))
+        out, stats = eng.generate(prompt, 16)
+        assert np.array_equal(ar, out), f"stages={stages}"
+        assert stats.commits >= 16
+
+
+def test_stpp_lossless_greedy(bundles):
+    target, draft = bundles
+    prompt = np.array([2, 7, 7, 1], np.int32)
+    ar = generate_autoregressive(target, prompt, 12)
+    eng = STPPEngine(target, draft, STPPConfig(depth=3, width=4, branch=2))
+    out, stats = eng.generate(prompt, 12)
+    assert np.array_equal(ar, out)
+    assert stats.rounds >= 1
+
+
+def test_self_draft_perfect_acceptance(bundles):
+    """Draft == target => every prediction hits; ~1 token/timestep in the
+    steady state (paper Fig. 1 right), and >1 accepted/round for STPP."""
+    target, _ = bundles
+    prompt = np.array([3, 3, 8], np.int32)
+    # width 8: wide enough that the greedy path is never evicted from the
+    # tree by cumulative-probability top-w selection (the paper's "scale
+    # effect" — narrow trees lose deep greedy nodes and refill the pipeline)
+    eng = PipeDecEngine(target, target,
+                        PipeDecConfig(n_stages=4, width=8, branch=4))
+    out, stats = eng.generate(prompt, 20)
+    assert stats.acceptance == 1.0
+    assert stats.tokens_per_timestep > 0.75  # 1 - pipeline-fill overhead
+
+    stpp = STPPEngine(target, target, STPPConfig(depth=3, width=8, branch=4))
+    _, sstats = stpp.generate(prompt, 20)
+    # most rounds accept the full depth; occasional rounds lose the greedy
+    # path to cumulative-probability top-w eviction (faithful STPP behaviour)
+    assert sstats.mean_accepted >= 2.0
+
+
+def test_random_draft_degrades_to_pipeline_rate(bundles):
+    """A useless draft must never break losslessness; throughput degrades to
+    ~1/n_stages tokens per timestep (vanilla PP behaviour)."""
+    target, draft = bundles
+    prompt = np.array([0, 1, 2], np.int32)
+    ar = generate_autoregressive(target, prompt, 10)
+    eng = PipeDecEngine(target, draft,
+                        PipeDecConfig(n_stages=3, width=2, branch=1))
+    out, stats = eng.generate(prompt, 10)
+    assert np.array_equal(ar, out)
+    if stats.acceptance == 0.0:
+        assert abs(stats.tokens_per_timestep - 1 / 3) < 0.12
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 100), stages=st.integers(1, 5))
+def test_pipedec_lossless_property(bundles, seed, stages):
+    target, draft = bundles
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, 100, size=rng.integers(2, 8)).astype(np.int32)
+    ar = generate_autoregressive(target, prompt, 8)
+    eng = PipeDecEngine(target, draft,
+                        PipeDecConfig(n_stages=stages, width=3, branch=2))
+    out, _ = eng.generate(prompt, 8)
+    assert np.array_equal(ar, out)
+
+
+def test_stochastic_decoding_runs(bundles):
+    """Fig. 7 setting: temperature 0.6, top-p 0.9, top-k 80 — sampling is
+    drawn from the target only, so the engine stays valid (same-key
+    equality is not expected; we assert structural health)."""
+    target, draft = bundles
+    sp = SamplingParams(temperature=0.6, top_p=0.9, top_k=80)
+    prompt = np.array([4, 4, 2], np.int32)
+    eng = PipeDecEngine(target, draft,
+                        PipeDecConfig(n_stages=3, width=4, branch=2,
+                                      sampling=sp))
+    out, stats = eng.generate(prompt, 12, key=jax.random.PRNGKey(123))
+    assert len(out) == 13
+    assert stats.commits >= 12
+    assert ((out >= 0) & (out < target.cfg.vocab_size)).all()

@@ -1,0 +1,182 @@
+"""Property tests for the dynamic prediction tree (paper §3.3) against a
+pure-Python reference implementation."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree as T
+
+
+# --------------------------------------------------------------------------
+# python reference tree
+# --------------------------------------------------------------------------
+class PyTree:
+    def __init__(self, root_token):
+        self.tokens = [root_token]
+        self.logprob = [0.0]
+        self.parent = [-1]
+        self.depth = [0]
+        self.layer = [0]  # node indices of deepest layer
+
+    def expand(self, cands, w):
+        """cands: list over deepest-layer nodes of [(token, logp), ...]."""
+        scored = []
+        for slot, node in enumerate(self.layer):
+            for tok, lp in cands[slot]:
+                scored.append((self.logprob[node] + lp, tok, node))
+        scored.sort(key=lambda x: (-x[0]))
+        take = scored[: w]
+        new_layer = []
+        for lp, tok, parent in take:
+            if lp <= -1e29:
+                continue
+            self.tokens.append(tok)
+            self.logprob.append(lp)
+            self.parent.append(parent)
+            self.depth.append(self.depth[parent] + 1)
+            new_layer.append(len(self.tokens) - 1)
+        self.layer = new_layer
+
+    def ancestors(self, i):
+        out = set()
+        while i >= 0:
+            out.add(i)
+            i = self.parent[i]
+        return out
+
+    def subtree(self, r):
+        return {i for i in range(len(self.tokens))
+                if r in self.ancestors(i)}
+
+
+def np_tree(tree):
+    n = int(tree.n_nodes)
+    return (np.asarray(tree.tokens)[:n], np.asarray(tree.logprob)[:n],
+            np.asarray(tree.parent)[:n], np.asarray(tree.depth)[:n],
+            np.asarray(tree.mask)[:n, :n])
+
+
+cand_strategy = st.lists(
+    st.tuples(st.integers(0, 30),
+              st.floats(-5, 0, allow_nan=False)),
+    min_size=1, max_size=4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(layers=st.lists(st.lists(cand_strategy, min_size=4, max_size=4),
+                       min_size=1, max_size=4),
+       w=st.integers(2, 4))
+def test_expand_matches_reference(layers, w):
+    cap = 1 + w * (len(layers) + 1)
+    jt = T.tree_init(cap, 7)
+    pt = PyTree(7)
+    c = 4
+    for layer_cands in layers:
+        # build [w, c] candidate arrays aligned with the deepest layer
+        ct = np.zeros((w, c), np.int32)
+        cp = np.full((w, c), float(T.NEG_INF), np.float32)
+        # dedupe tokens per parent (top-k of a distribution has distinct ids)
+        for slot in range(min(w, len(pt.layer))):
+            seen = {}
+            for tok, lp in layer_cands[slot % len(layer_cands)]:
+                if tok not in seen or lp > seen[tok]:
+                    seen[tok] = lp
+            for j, (tok, lp) in enumerate(sorted(seen.items())[:c]):
+                ct[slot, j] = tok
+                cp[slot, j] = lp
+        jt = T.tree_expand(jt, jnp.asarray(ct), jnp.asarray(cp), w)
+        py_c = [[(int(ct[s, j]), float(cp[s, j])) for j in range(c)
+                 if cp[s, j] > -1e29] for s in range(w)]
+        pt.expand(py_c, w)
+
+        tok, lp, par, dep, mask = np_tree(jt)
+        assert len(tok) == len(pt.tokens)
+        # same multiset of (token, parent-token, logprob) per layer
+        def key(tokens, parents, lps, deps, toks_all):
+            return sorted((int(deps[i]), int(tokens[i]),
+                           round(float(lps[i]), 4)) for i in range(len(tokens)))
+        assert key(tok, par, lp, dep, tok) == \
+            key(np.array(pt.tokens), np.array(pt.parent),
+                np.array(pt.logprob), np.array(pt.depth), None)
+        # mask == ancestor-or-self closure of parent pointers
+        for i in range(len(tok)):
+            anc = {i}
+            j = int(par[i])
+            while j >= 0:
+                anc.add(j)
+                j = int(par[j])
+            assert set(np.nonzero(mask[i])[0].tolist()) == anc
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), w=st.integers(2, 5),
+       depth=st.integers(1, 4))
+def test_prune_keeps_exact_subtree(seed, w, depth):
+    rng = np.random.default_rng(seed)
+    cap = 1 + w * (depth + 1)
+    jt = T.tree_init(cap, 1)
+    c = 3
+    for _ in range(depth):
+        ct = rng.integers(0, 50, size=(w, c)).astype(np.int32)
+        cp = -rng.random((w, c)).astype(np.float32)
+        ls = int(jt.layer_size)
+        cp[ls:] = float(T.NEG_INF)
+        jt = T.tree_expand(jt, jnp.asarray(ct), jnp.asarray(cp), w)
+
+    tok, lp, par, dep, mask = np_tree(jt)
+    children = [i for i in range(len(tok)) if par[i] == 0]
+    if not children:
+        return
+    child = children[rng.integers(len(children))]
+    keep = {i for i in range(len(tok)) if mask[i, child]}
+
+    pruned, index_map = T.tree_prune_to_child(jt, child)
+    imap = np.asarray(index_map)
+    ptok, plp, ppar, pdep, pmask = np_tree(pruned)
+
+    assert int(pruned.n_nodes) == len(keep)
+    # index_map covers exactly the kept set, order-preserving
+    kept_sorted = sorted(keep)
+    for new_i, old_i in enumerate(kept_sorted):
+        assert imap[old_i] == new_i
+        assert ptok[new_i] == tok[old_i]
+        assert pdep[new_i] == dep[old_i] - 1
+        np.testing.assert_allclose(plp[new_i], lp[old_i] - lp[child],
+                                   rtol=1e-5, atol=1e-5)
+    dropped = set(range(len(tok))) - keep
+    assert all(imap[i] == -1 for i in dropped)
+    # new root
+    assert ppar[0] == -1 and pdep[0] == 0
+    # mask consistency after prune
+    for i in range(len(keep)):
+        anc = {i}
+        j = int(ppar[i])
+        while j >= 0:
+            anc.add(j)
+            j = int(ppar[j])
+        assert set(np.nonzero(pmask[i])[0].tolist()) == anc
+
+
+def test_find_child_and_init():
+    jt = T.tree_init(16, 5)
+    assert int(jt.n_nodes) == 1
+    ct = jnp.asarray([[9, 11, 13]], jnp.int32)
+    cp = jnp.log(jnp.asarray([[0.5, 0.3, 0.2]]))
+    jt = T.tree_expand(jt, ct, cp, 1)  # w=1 keeps only best child
+    assert int(jt.layer_size) == 1
+    assert int(T.find_child_with_token(jt, 9)) == 1
+    assert int(T.find_child_with_token(jt, 11)) == -1  # pruned by w
+
+
+def test_capacity_overflow_drops_lowest():
+    jt = T.tree_init(4, 0)  # room for 3 more nodes
+    ct = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    cp = jnp.log(jnp.asarray([[0.4, 0.3, 0.2, 0.1]]))
+    jt = T.tree_expand(jt, ct, cp, 4)
+    assert int(jt.n_nodes) == 4  # capped at capacity
+    toks = np.asarray(jt.tokens)[1:4]
+    assert set(toks.tolist()) == {1, 2, 3}  # lowest-prob candidate dropped
