@@ -1,6 +1,8 @@
 """Fig. 8 — throughput vs concurrency: PipeDec serialises tasks (latency
-priority) while PP/STPP overlap batches; modelled with the same roofline
-stage times as Fig. 5, acceptance from real runs."""
+priority), PP/STPP overlap batches, and SpecPipe-DB keeps several requests'
+trees in every pipeline timestep (dynamic batching — the paper's
+multi-request mode, 1.64–2.08× vLLM); modelled with the same roofline stage
+times as Fig. 5, acceptance from real runs."""
 from __future__ import annotations
 
 import time
@@ -9,13 +11,25 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.fig5_latency import hardware, measure_acceptance
+from repro import configs as reg
 from repro.core import sim
+
+
+def db_batch_scale(w: int):
+    """Stage-time inflation from stacking ``batch`` requests' width-w tree
+    layers in one verify pass — from the same roofline as the stage times
+    (memory-bound verify ⇒ strongly sub-linear)."""
+    tgt = reg.get_config("pipedec-target")
+    base = common.layer_decode_time(tgt, width=w, batch=1)
+    return lambda batch: common.layer_decode_time(tgt, width=w,
+                                                  batch=batch) / base
 
 
 def run(verbose: bool = True, n_stages: int = 14, w: int = 16):
     t0 = time.perf_counter()
     tps, acc, stpp_acc = measure_acceptance(n_stages, w=w)
     hw = hardware(n_stages, w)
+    scale = db_batch_scale(w)
     rows = []
     if verbose:
         print("# Fig8: throughput (tokens/s, modelled) vs concurrency")
@@ -24,13 +38,18 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16):
         thr_pd = sim.pipedec_throughput(hw, batch, tps)
         thr_st = sim.stpp_throughput(hw, batch, depth=4,
                                      mean_accepted=stpp_acc)
+        thr_db = sim.specpipe_db_throughput(hw, batch, tps,
+                                            batch_scale=scale)
+        tbt_db = sim.specpipe_db_tbt(hw, batch, tps, batch_scale=scale)
         rows.append((f"fig8_batch{batch}",
                      (time.perf_counter() - t0) * 1e6,
                      f"pp={thr_pp:.1f};stpp={thr_st:.1f};"
-                     f"pipedec={thr_pd:.1f}"))
+                     f"pipedec={thr_pd:.1f};specpipe_db={thr_db:.1f};"
+                     f"db_tbt_ms={tbt_db*1e3:.2f}"))
         if verbose:
             print(f"  batch={batch}: PP {thr_pp:8.1f}  STPP {thr_st:8.1f}  "
-                  f"PipeDec {thr_pd:8.1f} tok/s")
+                  f"PipeDec {thr_pd:8.1f}  SpecPipe-DB {thr_db:8.1f} tok/s "
+                  f"(TBT {tbt_db*1e3:.2f} ms)")
     return rows
 
 

@@ -52,8 +52,8 @@ def main():
         print(f"  req {uid}: {res.latency_s*1e3:7.1f} ms")
 
     print("\n== mode=pipedec (draft-in-pipeline speculative) ==")
-    pd = ServingEngine(target, draft, mode="pipedec",
-                       pipedec=PipeDecConfig(n_stages=6, width=16, branch=4))
+    pcfg = PipeDecConfig(n_stages=6, width=16, branch=4)
+    pd = ServingEngine(target, draft, mode="pipedec", pipedec=pcfg)
     for r in reqs:
         pd.submit(r)
     pd_results = pd.run()
@@ -67,6 +67,27 @@ def main():
             "PipeDec output must equal the PP output (lossless)"
     print(f"\nmean acceptance {np.mean(accs):.2f}; outputs identical to "
           f"PP for every request ✓")
+
+    print("\n== mode=pipedec-db (SpecPipe-DB dynamic batching, staggered "
+          "arrivals) ==")
+    db = ServingEngine(target, draft, mode="pipedec-db", max_batch=3,
+                       pipedec=pcfg)
+    for r in reqs:
+        # stagger arrivals: a new request every 4 pipeline timesteps
+        db.submit(Request(r.uid, r.prompt, r.max_new_tokens,
+                          arrival_t=4 * r.uid))
+    db_results = db.run()
+    for uid, res in sorted(db_results.items()):
+        adm = db.db_stats.per_request[uid]
+        print(f"  req {uid}: acc={adm.acceptance:.2f} "
+              f"tokens/timestep={adm.tokens_per_timestep:.2f}")
+        assert np.array_equal(res.tokens, pp_results[uid].tokens), \
+            "SpecPipe-DB output must equal the PP output (lossless)"
+    s = db.db_stats
+    print(f"\nDB: {s.timesteps} shared timesteps, "
+          f"{s.total_commits} tokens, "
+          f"{s.tokens_per_timestep:.2f} tokens/timestep aggregate, "
+          f"peak occupancy {s.peak_occupancy}; outputs identical to PP ✓")
 
 
 if __name__ == "__main__":

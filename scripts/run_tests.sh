@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 test entrypoint: sets PYTHONPATH=src and forwards extra args to
+# pytest (e.g. scripts/run_tests.sh -k serving_db -x).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q "$@"

@@ -1,0 +1,96 @@
+"""Batched prediction-tree state for dynamic batching (SpecPipe-DB).
+
+The multi-request engine (``repro.serving.dynbatch``) keeps every in-flight
+request's dynamic prediction tree stacked along a leading *slot* axis, the
+paper's DB state layout: one fixed-capacity ``Tree`` buffer per KV slot,
+all stored as a single pytree of ``[slots, ...]`` arrays.  Per-request
+operations (init on admission, expand on proposal, prune-to-child on
+commit) are the pure ``core.tree`` functions applied to one row and written
+back, so a DB request's tree trace is bit-identical to the single-request
+engine's — the property the equivalence tests pin.
+
+``deepest_layers`` exposes the stacked view of every slot's entry layer
+(tokens / indices / validity / ancestor-mask rows, all ``[slots, w, ...]``)
+via ``jax.vmap`` — the fusion point for a future single batched
+``tree_verify`` call per timestep once the model path takes per-row
+``model_len``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tree as tree_lib
+
+
+class TreeBatch:
+    """Fixed-slot store of prediction trees stacked along axis 0."""
+
+    def __init__(self, slots: int, capacity: int):
+        assert slots >= 1 and capacity >= 1
+        self.slots, self.capacity = slots, capacity
+        proto = tree_lib.tree_init(capacity, 0)
+        self.stacked: tree_lib.Tree = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (slots, *x.shape)).copy(),
+            proto)
+        self.active = np.zeros((slots,), bool)
+
+    # -- row access -----------------------------------------------------
+    def _check(self, slot: int) -> None:
+        assert 0 <= slot < self.slots, f"slot {slot} out of range"
+
+    def get_row(self, slot: int) -> tree_lib.Tree:
+        self._check(slot)
+        return jax.tree.map(lambda x: x[slot], self.stacked)
+
+    def set_row(self, slot: int, tree: tree_lib.Tree) -> None:
+        self._check(slot)
+        self.stacked = jax.tree.map(lambda b, r: b.at[slot].set(r),
+                                    self.stacked, tree)
+
+    # -- per-request tree ops (reuse core.tree on one row) --------------
+    def init_row(self, slot: int, root_token: int) -> tree_lib.Tree:
+        """Admission: fresh single-root tree in ``slot``."""
+        t = tree_lib.tree_init(self.capacity, root_token)
+        self.adopt_row(slot, t)
+        return t
+
+    def adopt_row(self, slot: int, tree: tree_lib.Tree) -> None:
+        """Admission of an already-built tree (the decode state's)."""
+        assert tree.capacity == self.capacity
+        self.set_row(slot, tree)
+        self.active[slot] = True
+
+    def release_row(self, slot: int) -> None:
+        """Retire: the slot may be recycled by the next admission."""
+        self._check(slot)
+        self.active[slot] = False
+
+    def expand_row(self, slot: int, cand_tokens: jnp.ndarray,
+                   cand_logprobs: jnp.ndarray, w: int) -> tree_lib.Tree:
+        t = tree_lib.tree_expand(self.get_row(slot), cand_tokens,
+                                 cand_logprobs, w)
+        self.set_row(slot, t)
+        return t
+
+    def prune_row(self, slot: int,
+                  child_idx) -> Tuple[tree_lib.Tree, jnp.ndarray]:
+        """Prune one slot's tree to a depth-1 child; returns (tree,
+        old→new index_map) so the caller can remap its in-flight state."""
+        t, index_map = tree_lib.tree_prune_to_child(self.get_row(slot),
+                                                    child_idx)
+        self.set_row(slot, t)
+        return t, index_map
+
+    # -- stacked views ---------------------------------------------------
+    def deepest_layers(self, w: int):
+        """Every slot's entry layer, stacked: (tokens [S,w], idx [S,w],
+        valid [S,w], mask_rows [S,w,N]).  Inactive slots still produce rows
+        (their stale trees); filter with ``self.active``."""
+        return jax.vmap(lambda tr: tree_lib.last_layer(tr, w))(self.stacked)
+
+    def occupancy(self) -> int:
+        return int(self.active.sum())

@@ -19,13 +19,20 @@ Per timestep (paper §3.4, Fig. 2):
      matching x (hit) or re-initialised at x (miss), and all in-flight
      state is remapped/invalidated accordingly.
 
+The per-request loop state lives in ``DecodeState`` and one timestep is
+``PipeDecEngine.step``; ``generate`` drives a single state to completion,
+while the dynamic-batching engine (``repro.serving.dynbatch``) multiplexes
+many states through one shared pipeline schedule — each request's operation
+trace is identical either way, so SpecPipe-DB inherits losslessness from
+this engine.
+
 Vanilla pipeline parallelism is the degenerate case w=0 (every step a
 miss); STPP (static tree) is in ``core/baselines.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +68,14 @@ class Flight:
     logits: jnp.ndarray       # [w, V]
 
 
+def remap_flight_indices(node_idx: np.ndarray, index_map) -> np.ndarray:
+    """Apply a prune's old→new ``index_map`` to buffered flight/draft node
+    indices (-1 rows stay -1; dropped nodes become -1)."""
+    imap = np.asarray(index_map)
+    out = np.where(node_idx >= 0, imap[np.maximum(node_idx, 0)], -1)
+    return out.astype(np.int64)
+
+
 @dataclasses.dataclass
 class GenStats:
     timesteps: int = 0
@@ -80,6 +95,40 @@ class GenStats:
         return self.commits / self.timesteps if self.timesteps else 0.0
 
 
+@dataclasses.dataclass
+class DecodeState:
+    """Everything one in-flight request carries between timesteps."""
+    committed: List[int]
+    tree: tree_lib.Tree
+    t_cache: Any              # target model (level-1) KV cache
+    d_cache: Any              # draft model cache
+    t_tree: Any               # target tree (level-2) KV cache
+    d_tree: Any               # draft tree cache
+    model_len: int
+    key: jax.Array
+    max_new_tokens: int
+    limit: int                # local-timestep budget
+    flights: List[Flight] = dataclasses.field(default_factory=list)
+    pending: bool = True      # deepest layer not yet entered
+    last_draft: Optional[Tuple[np.ndarray, jnp.ndarray]] = None
+    stats: GenStats = dataclasses.field(default_factory=GenStats)
+    t: int = 0                # local timestep counter
+    eos: Optional[int] = None
+    eos_hit: bool = False
+
+    @property
+    def done(self) -> bool:
+        return (self.eos_hit
+                or len(self.committed) >= 1 + self.max_new_tokens
+                or self.t >= self.limit)
+
+    def output(self) -> np.ndarray:
+        return np.asarray(self.committed[: 1 + self.max_new_tokens])
+
+    def caches(self):
+        return (self.t_cache, self.d_cache, self.t_tree, self.d_tree)
+
+
 class PipeDecEngine:
     def __init__(self, target: ModelBundle, draft: ModelBundle,
                  pcfg: PipeDecConfig, max_len: int = 512):
@@ -92,17 +141,35 @@ class PipeDecEngine:
         n, cap = mask_rows.shape
         return jnp.pad(mask_rows, ((0, 0), (0, tcap - cap)))
 
-    def generate(self, prompt: np.ndarray, max_new_tokens: int,
-                 key: Optional[jax.Array] = None,
-                 max_timesteps: Optional[int] = None):
+    @property
+    def tree_buffer_capacity(self) -> int:
+        return self.pcfg.capacity + self.pcfg.width  # slack for fixed-w writes
+
+    # ------------------------------------------------------------------
+    def init_state(self, prompt: np.ndarray, max_new_tokens: int,
+                   key: Optional[jax.Array] = None,
+                   max_timesteps: Optional[int] = None, *,
+                   caches=None, eos: Optional[int] = None) -> DecodeState:
+        """Prefill both models and commit the first token.
+
+        ``caches`` optionally supplies recycled (t_cache, d_cache, t_tree,
+        d_tree) buffers (the serving KV arena): prefill overwrites the
+        prompt prefix and every attention mask is bounded by ``model_len``
+        / the ancestor mask, so stale rows from a previous occupant are
+        never attended and outputs are unchanged.
+        """
         p = self.pcfg
-        w, c, cap = p.width, p.branch, p.capacity
         key = key if key is not None else jax.random.PRNGKey(0)
-        tcap = cap + w  # slack for fixed-w layer writes
+        tcap = self.tree_buffer_capacity
 
         tgt, drf = self.target, self.draft
-        t_cache = tgt.init_cache(1, self.max_len)
-        d_cache = drf.init_cache(1, self.max_len)
+        if caches is None:
+            t_cache = tgt.init_cache(1, self.max_len)
+            d_cache = drf.init_cache(1, self.max_len)
+            t_tree = tgt.init_tree_caches(1, tcap)
+            d_tree = drf.init_tree_caches(1, tcap)
+        else:
+            t_cache, d_cache, t_tree, d_tree = caches
         prompt_j = jnp.asarray(prompt, jnp.int32)[None]
         t_logits, t_cache = tgt.prefill(prompt_j, t_cache)
         _, d_cache = drf.prefill(prompt_j, d_cache)
@@ -114,113 +181,130 @@ class PipeDecEngine:
 
         key, sk = jax.random.split(key)
         first = int(select_token(t_logits[0], p.sampling, sk))
-        committed = [first]
 
-        tree = tree_lib.tree_init(cap, first)
-        t_tree = tgt.init_tree_caches(1, tcap)
-        d_tree = drf.init_tree_caches(1, tcap)
+        st = DecodeState(
+            committed=[first],
+            tree=tree_lib.tree_init(p.capacity, first),
+            t_cache=t_cache, d_cache=d_cache, t_tree=t_tree, d_tree=d_tree,
+            model_len=model_len, key=key, max_new_tokens=max_new_tokens,
+            limit=max_timesteps or (max_new_tokens * (p.n_stages + 2) + 16),
+            eos=eos)
+        st.eos_hit = eos is not None and first == eos
+        return st
 
-        flights: List[Flight] = []
-        pending = True            # deepest layer not yet entered
-        last_draft = None         # (node_idx np [w], logits [w, V])
-        stats = GenStats()
-        t = 0
-        limit = max_timesteps or (max_new_tokens * (p.n_stages + 2) + 16)
+    def step(self, st: DecodeState) -> DecodeState:
+        """Advance one pipeline timestep (entry + proposal, then exit +
+        two-level cache sync).  Mutates and returns ``st``."""
+        p = self.pcfg
+        w, c, cap = p.width, p.branch, p.capacity
+        tcap = self.tree_buffer_capacity
+        tgt, drf = self.target, self.draft
 
-        while len(committed) < 1 + max_new_tokens and t < limit:
-            t += 1
-            stats.timesteps = t
-            step_commits = 0
+        st.t += 1
+        st.stats.timesteps = st.t
+        step_commits = 0
 
-            # ---- phase 1: entry (target) + proposal (draft) -------------
-            if pending:
-                tokens, idxs, valid, mask_rows = tree_lib.last_layer(tree, w)
-                depths = jnp.where(valid, tree.depth[idxs], 0)
-                positions = (model_len + depths)[None]  # [1, w]
-                pmask = self._pad_mask(mask_rows, tcap)
-                wi = tree.layer_start
+        # ---- phase 1: entry (target) + proposal (draft) -------------
+        if st.pending:
+            tokens, idxs, valid, mask_rows = tree_lib.last_layer(st.tree, w)
+            depths = jnp.where(valid, st.tree.depth[idxs], 0)
+            positions = (st.model_len + depths)[None]  # [1, w]
+            pmask = self._pad_mask(mask_rows, tcap)
+            wi = st.tree.layer_start
 
-                v_logits, t_tree = tgt.tree_verify(
-                    tokens[None], positions, pmask, t_cache, model_len,
-                    t_tree, wi)
-                flights.append(Flight(
-                    exit_t=t + p.n_stages - 1,
-                    node_idx=np.where(np.asarray(valid), np.asarray(idxs), -1),
-                    logits=v_logits[0]))
-                stats.entries += 1
+            v_logits, st.t_tree = tgt.tree_verify(
+                tokens[None], positions, pmask, st.t_cache, st.model_len,
+                st.t_tree, wi)
+            st.flights.append(Flight(
+                exit_t=st.t + p.n_stages - 1,
+                node_idx=np.where(np.asarray(valid), np.asarray(idxs), -1),
+                logits=v_logits[0]))
+            st.stats.entries += 1
 
-                dl_logits, d_tree = drf.tree_verify(
-                    tokens[None], positions, pmask, d_cache, model_len,
-                    d_tree, wi)
-                last_draft = (np.where(np.asarray(valid),
-                                       np.asarray(idxs), -1),
-                              dl_logits[0])
-                pending = False
+            dl_logits, st.d_tree = drf.tree_verify(
+                tokens[None], positions, pmask, st.d_cache, st.model_len,
+                st.d_tree, wi)
+            st.last_draft = (np.where(np.asarray(valid),
+                                      np.asarray(idxs), -1),
+                             dl_logits[0])
+            st.pending = False
 
-            # expansion (may be deferred by the depth cap)
-            if last_draft is not None and not pending:
-                cur_depth = int(jnp.max(jnp.where(tree.valid(), tree.depth, 0)))
-                if cur_depth < p.depth_cap and \
-                        int(tree.n_nodes) + w <= cap + 1:
-                    nidx, dlog = last_draft
-                    rows_valid = nidx >= 0
-                    if rows_valid.any():
-                        # surviving rows, in (compacted) index order, align
-                        # with the deepest layer's slots
-                        order = np.argsort(np.where(rows_valid, nidx,
-                                                    np.iinfo(np.int32).max))
-                        dlog_sorted = dlog[jnp.asarray(order)]
-                        valid_sorted = jnp.asarray(rows_valid[order])
-                        cand_tok, cand_lp = draft_candidates(
-                            dlog_sorted, valid_sorted, c)
-                        tree = tree_lib.tree_expand(tree, cand_tok, cand_lp, w)
-                        pending = True
-                        last_draft = None
+        # expansion (may be deferred by the depth cap)
+        if st.last_draft is not None and not st.pending:
+            cur_depth = int(jnp.max(jnp.where(st.tree.valid(),
+                                              st.tree.depth, 0)))
+            if cur_depth < p.depth_cap and \
+                    int(st.tree.n_nodes) + w <= cap + 1:
+                nidx, dlog = st.last_draft
+                rows_valid = nidx >= 0
+                if rows_valid.any():
+                    # surviving rows, in (compacted) index order, align
+                    # with the deepest layer's slots
+                    order = np.argsort(np.where(rows_valid, nidx,
+                                                np.iinfo(np.int32).max))
+                    dlog_sorted = dlog[jnp.asarray(order)]
+                    valid_sorted = jnp.asarray(rows_valid[order])
+                    cand_tok, cand_lp = draft_candidates(
+                        dlog_sorted, valid_sorted, c)
+                    st.tree = tree_lib.tree_expand(st.tree, cand_tok,
+                                                   cand_lp, w)
+                    st.pending = True
+                    st.last_draft = None
 
-            # ---- phase 2: exit + sync (commit, prune) -------------------
-            exiting = [f for f in flights if f.exit_t == t]
-            flights = [f for f in flights if f.exit_t != t]
-            for fl in exiting:
-                root_rows = np.where(fl.node_idx == 0)[0]
-                if len(root_rows) == 0:
-                    continue  # stale flight (should not happen)
-                r = int(root_rows[0])
-                key, sk = jax.random.split(key)
-                x = int(select_token(fl.logits[r], p.sampling, sk))
-                committed.append(x)
-                stats.commits += 1
-                step_commits += 1
+        # ---- phase 2: exit + sync (commit, prune) -------------------
+        exiting = [f for f in st.flights if f.exit_t == st.t]
+        st.flights = [f for f in st.flights if f.exit_t != st.t]
+        for fl in exiting:
+            root_rows = np.where(fl.node_idx == 0)[0]
+            if len(root_rows) == 0:
+                continue  # stale flight (should not happen)
+            r = int(root_rows[0])
+            st.key, sk = jax.random.split(st.key)
+            x = int(select_token(fl.logits[r], p.sampling, sk))
+            st.committed.append(x)
+            st.stats.commits += 1
+            step_commits += 1
 
-                # two-level cache sync: migrate the old root's KV row (tree
-                # buffer row 0) into the model cache at position model_len
-                t_cache = tgt.commit(t_cache, t_tree, 0, model_len)
-                d_cache = drf.commit(d_cache, d_tree, 0, model_len)
-                model_len += 1
+            # two-level cache sync: migrate the old root's KV row (tree
+            # buffer row 0) into the model cache at position model_len
+            st.t_cache = tgt.commit(st.t_cache, st.t_tree, 0, st.model_len)
+            st.d_cache = drf.commit(st.d_cache, st.d_tree, 0, st.model_len)
+            st.model_len += 1
+            if st.eos is not None and x == st.eos:
+                st.eos_hit = True
 
-                hit = int(tree_lib.find_child_with_token(tree, x))
-                if hit >= 0:
-                    stats.hits += 1
-                    tree, index_map = tree_lib.tree_prune_to_child(tree, hit)
-                    t_tree = remap_tree_caches(t_tree, index_map, cap)
-                    d_tree = remap_tree_caches(d_tree, index_map, cap)
-                    imap = np.asarray(index_map)
+            hit = int(tree_lib.find_child_with_token(st.tree, x))
+            if hit >= 0:
+                st.stats.hits += 1
+                st.tree, index_map = tree_lib.tree_prune_to_child(st.tree,
+                                                                  hit)
+                st.t_tree = remap_tree_caches(st.t_tree, index_map, cap)
+                st.d_tree = remap_tree_caches(st.d_tree, index_map, cap)
+                for f2 in st.flights:
+                    f2.node_idx = remap_flight_indices(f2.node_idx,
+                                                       index_map)
+                if st.last_draft is not None:
+                    st.last_draft = (remap_flight_indices(st.last_draft[0],
+                                                          index_map),
+                                     st.last_draft[1])
+            else:
+                st.stats.misses += 1
+                st.tree = tree_lib.tree_init(cap, x)
+                st.flights = []
+                st.last_draft = None
+                st.pending = True
+            if len(st.committed) >= 1 + st.max_new_tokens or st.eos_hit:
+                break
+        st.stats.commits_per_step.append(step_commits)
+        return st
 
-                    def remap(ix):
-                        out = np.where(ix >= 0, imap[np.maximum(ix, 0)], -1)
-                        return out.astype(np.int64)
-
-                    for f2 in flights:
-                        f2.node_idx = remap(f2.node_idx)
-                    if last_draft is not None:
-                        last_draft = (remap(last_draft[0]), last_draft[1])
-                else:
-                    stats.misses += 1
-                    tree = tree_lib.tree_init(cap, x)
-                    flights = []
-                    last_draft = None
-                    pending = True
-                if len(committed) >= 1 + max_new_tokens:
-                    break
-            stats.commits_per_step.append(step_commits)
-
-        return np.asarray(committed[: 1 + max_new_tokens]), stats
+    # ------------------------------------------------------------------
+    def generate(self, prompt: np.ndarray, max_new_tokens: int,
+                 key: Optional[jax.Array] = None,
+                 max_timesteps: Optional[int] = None, *,
+                 eos: Optional[int] = None):
+        st = self.init_state(prompt, max_new_tokens, key, max_timesteps,
+                             eos=eos)
+        while not st.done:
+            self.step(st)
+        return st.output(), st.stats

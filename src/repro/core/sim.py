@@ -1,5 +1,5 @@
-"""Discrete-event wall-clock model of the three deployments (PP / STPP /
-PipeDec) — reproduces the paper's Fig. 5 / Fig. 8 *shape* on CPU.
+"""Discrete-event wall-clock model of the deployments (PP / STPP / PipeDec
+/ SpecPipe-DB) — reproduces the paper's Fig. 5 / Fig. 8 *shape* on CPU.
 
 The logical engines (``pipedec.py``, ``baselines.py``) give exact token
 traces and acceptance statistics; this module prices those traces in
@@ -12,6 +12,9 @@ Timing model (paper §2.4):
             latency/token  = timestep / tokens_per_timestep(measured)
   STPP      round          = depth·T_draft + Σ_i T_c,i(tree) + Σ T_t,i
             latency/token  = round / (accepted_per_round + 1)
+  SpecPipe-DB  timestep    = max(T_draft·s(B), s(B)·max_i T_c,i + max T_t,i)
+            throughput     = B · tokens_per_timestep / timestep
+            TBT            = timestep / tokens_per_timestep
 """
 from __future__ import annotations
 
@@ -101,3 +104,44 @@ def stpp_throughput(hw: StageHardware, batch: int, depth: int,
     rounds_per_s = min(batch, hw.n_stages) / (hw.n_stages * stage)
     tokens_per_round = mean_accepted + 1.0
     return rounds_per_s * tokens_per_round
+
+
+# --------------------------------------------------------------------------
+# SpecPipe-DB (dynamic batching): ``batch`` requests share every pipeline
+# timestep — their tree layers are stacked along the batch axis in each
+# stage, so stage compute grows by batch_scale(batch) (sub-linear while the
+# verify pass stays memory-bound) while token output grows linearly with
+# occupancy.  Engine: repro.serving.dynbatch.SpecPipeDBEngine.
+# --------------------------------------------------------------------------
+def specpipe_db_timestep(hw: StageHardware, batch: int,
+                         batch_scale: Callable[[int], float] = None) -> float:
+    """``batch_scale(batch)`` is the stage-time inflation from stacking
+    ``batch`` width-w layers in one verify pass.  ``None`` models the fully
+    memory-bound regime (stage time independent of batch — param streaming
+    dominates), the SAME convention as ``pp_throughput``/``stpp_throughput``
+    above; pass a roofline-derived scale for a finite-compute curve
+    (``benchmarks.fig8_throughput.db_batch_scale``)."""
+    s = batch_scale(batch) if batch_scale else 1.0
+    return max(hw.t_draft * s, hw.t_stage_width * s + hw.t_comm) + hw.t_sync
+
+
+def specpipe_db_throughput(hw: StageHardware, batch: int,
+                           tokens_per_timestep: float,
+                           batch_scale: Callable[[int], float] = None
+                           ) -> float:
+    """Tokens/s with ``batch`` concurrent requests: each timestep emits
+    ~``batch * tokens_per_timestep`` tokens (per-request acceptance is
+    unchanged by batching — the DB engine runs the same per-request
+    schedule, only stacked)."""
+    ts = specpipe_db_timestep(hw, batch, batch_scale)
+    return batch * tokens_per_timestep / ts
+
+
+def specpipe_db_tbt(hw: StageHardware, batch: int,
+                    tokens_per_timestep: float,
+                    batch_scale: Callable[[int], float] = None) -> float:
+    """Time-between-tokens for ONE request under DB (the paper's TBT
+    metric): each request still advances every timestep, so TBT degrades
+    only by the batched stage-time inflation, not by round-robin stalls."""
+    ts = specpipe_db_timestep(hw, batch, batch_scale)
+    return ts / max(tokens_per_timestep, 1e-9)

@@ -28,6 +28,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams; accept either.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 
 def _flash_kernel(plen_ref, q_ref, k_ref, v_ref, qpos_ref,
                   o_ref, m_ref, l_ref,
@@ -159,7 +163,7 @@ def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
             ],
         ),
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -17,6 +17,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams; accept either.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 
 def _tree_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
                  scale):
@@ -71,7 +75,7 @@ def tree_block_attention(q, k_tree, v_tree, tree_mask, *, scale=None,
             pl.BlockSpec((1, 1, n, 128), lambda i, j: (i, j, 0, 0)),
         ],
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(q, k_tree, v_tree, mask_i8)

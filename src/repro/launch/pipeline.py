@@ -26,12 +26,25 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:                                   # jax >= 0.6 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                    # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+_SHARD_MAP_KW = inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, **kwargs):
+    # jax renamed check_rep -> check_vma; translate for older versions
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_KW:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, **kwargs)
 
 from repro.models import attention as attn_mod
 from repro.models import transformer as tf

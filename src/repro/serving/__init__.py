@@ -1,3 +1,7 @@
+from repro.serving.dynbatch import DBStats, SpecPipeDBEngine
 from repro.serving.engine import Request, Result, ServingEngine
+from repro.serving.scheduler import (DynamicBatchScheduler, KVArena,
+                                     SchedulerStats)
 
-__all__ = ["Request", "Result", "ServingEngine"]
+__all__ = ["DBStats", "DynamicBatchScheduler", "KVArena", "Request",
+           "Result", "SchedulerStats", "ServingEngine", "SpecPipeDBEngine"]

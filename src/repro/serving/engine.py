@@ -1,16 +1,30 @@
-"""Serving engine: request queue + two execution modes.
+"""Serving engine: request queue + three execution modes.
 
-  * ``mode="pp"``      — throughput-oriented batched autoregressive decode
-                         (requests bucketed by prompt length, decoded in
-                         lockstep batches; the paper's PP baseline).
-  * ``mode="pipedec"`` — latency-oriented: the whole pipeline works on ONE
-                         task at a time with the dynamic prediction tree
-                         (the paper's system; Fig. 8 shows the throughput
-                         trade-off this makes).
+  * ``mode="pp"``         — throughput-oriented batched autoregressive
+                            decode (requests bucketed by prompt length,
+                            decoded in lockstep batches; the paper's PP
+                            baseline).  Bucketing keeps row cache offsets
+                            identical so lockstep decode needs no per-row
+                            positions; each bucket is split into
+                            ``max_batch`` chunks that run to the longest
+                            ``max_new_tokens`` in the chunk.
+  * ``mode="pipedec"``    — latency-oriented: the whole pipeline works on
+                            ONE task at a time with the dynamic prediction
+                            tree (the paper's single-request system; Fig. 8
+                            shows the throughput trade-off this makes).
+  * ``mode="pipedec-db"`` — SpecPipe-DB dynamic batching
+                            (``serving.dynbatch.SpecPipeDBEngine``): up to
+                            ``max_batch`` requests' trees share every
+                            pipeline timestep; finished requests are
+                            replaced from the queue (join-on-prefill /
+                            retire-on-eos) without draining the pipeline.
+                            Greedy output is bit-equal to ``pipedec`` per
+                            request; throughput scales with occupancy
+                            (``core.sim.specpipe_db_throughput``).
 
-The KV-cache manager hands out fixed-size cache arenas per batch; prompt
-bucketing keeps row cache offsets identical so lockstep decode needs no
-per-row positions.
+KV management: ``pp`` allocates one fixed-size cache arena per lockstep
+batch; ``pipedec-db`` draws per-request arenas from the recycled slot pool
+in ``serving.scheduler.KVArena``.
 """
 from __future__ import annotations
 
@@ -33,6 +47,7 @@ class Request:
     uid: int
     prompt: np.ndarray
     max_new_tokens: int = 32
+    arrival_t: int = 0        # arrival time in pipeline timesteps (DB mode)
 
 
 @dataclasses.dataclass
@@ -48,14 +63,17 @@ class ServingEngine:
                  = None, *, mode: str = "pp", max_batch: int = 8,
                  max_len: int = 512,
                  pipedec: Optional[PipeDecConfig] = None,
-                 sampling: SamplingParams = SamplingParams()):
-        assert mode in ("pp", "pipedec")
-        if mode == "pipedec":
-            assert draft is not None, "pipedec mode needs a draft model"
+                 sampling: SamplingParams = SamplingParams(),
+                 eos_token: Optional[int] = None):
+        assert mode in ("pp", "pipedec", "pipedec-db")
+        if mode in ("pipedec", "pipedec-db"):
+            assert draft is not None, f"{mode} mode needs a draft model"
         self.target, self.draft, self.mode = target, draft, mode
         self.max_batch, self.max_len = max_batch, max_len
         self.pipedec_cfg = pipedec or PipeDecConfig()
         self.sampling = sampling
+        self.eos_token = eos_token
+        self.db_stats = None      # DBStats after a mode="pipedec-db" run
         self.queue: List[Request] = []
 
     def submit(self, req: Request) -> None:
@@ -89,14 +107,22 @@ class ServingEngine:
             for i, t in enumerate(toks):
                 outs[i].append(int(t))
         dt = time.perf_counter() - t0
-        return [Result(r.uid, np.asarray(o[: r.max_new_tokens + 1]), dt)
+
+        def cut(o, limit):
+            o = o[:limit]
+            if self.eos_token is not None and self.eos_token in o:
+                o = o[: o.index(self.eos_token) + 1]
+            return np.asarray(o)
+
+        return [Result(r.uid, cut(o, r.max_new_tokens + 1), dt)
                 for r, o in zip(batch, outs)]
 
     def _run_pipedec_one(self, req: Request) -> Result:
         t0 = time.perf_counter()
         eng = PipeDecEngine(self.target, self.draft, self.pipedec_cfg,
                             max_len=self.max_len)
-        out, stats = eng.generate(req.prompt, req.max_new_tokens)
+        out, stats = eng.generate(req.prompt, req.max_new_tokens,
+                                  eos=self.eos_token)
         return Result(req.uid, out, time.perf_counter() - t0, stats)
 
     # ------------------------------------------------------------------
@@ -106,6 +132,18 @@ class ServingEngine:
             for req in self.queue:
                 results[req.uid] = self._run_pipedec_one(req)
             self.queue.clear()
+            return results
+        if self.mode == "pipedec-db":
+            from repro.serving.dynbatch import SpecPipeDBEngine
+            eng = SpecPipeDBEngine(self.target, self.draft, self.pipedec_cfg,
+                                   max_len=self.max_len,
+                                   max_slots=self.max_batch,
+                                   eos_token=self.eos_token)
+            for req in self.queue:
+                eng.submit(req)
+            self.queue.clear()
+            results = eng.run()
+            self.db_stats = eng.stats
             return results
         # pp: bucket by prompt length, then batch
         buckets = collections.defaultdict(list)

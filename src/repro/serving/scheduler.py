@@ -1,0 +1,136 @@
+"""KV arena + admission/eviction scheduler for SpecPipe-DB.
+
+The paper's dynamic batching keeps the pipeline full of *different*
+requests: whenever one finishes, the next queued request joins at its
+prefill and decodes alongside the rest.  Two pieces implement that here:
+
+  * ``KVArena`` — a fixed pool of per-slot cache arenas (target + draft
+    model caches and the two tree caches).  Slots are recycled across
+    requests without zeroing: every attention mask is bounded by the new
+    occupant's ``model_len`` / ancestor mask, so a previous occupant's
+    stale rows are never attended and outputs are unchanged (the
+    equivalence tests pin this).
+  * ``DynamicBatchScheduler`` — FIFO arrival queue with per-request
+    ``arrival_t`` (in pipeline timesteps), admission onto free slots each
+    timestep (join-on-prefill), and retire-on-completion (eos or token
+    budget) which frees the slot for the next refill.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+class KVArena:
+    """Fixed pool of per-slot KV cache arenas, allocated lazily and
+    recycled across requests."""
+
+    def __init__(self, target, draft, *, slots: int, max_len: int,
+                 tree_capacity: int):
+        assert slots >= 1
+        self.target, self.draft = target, draft
+        self.slots, self.max_len, self.tree_capacity = \
+            slots, max_len, tree_capacity
+        self._free: List[int] = list(range(slots - 1, -1, -1))  # pop -> 0..
+        self._in_use: set = set()
+        self._arenas: List[Optional[tuple]] = [None] * slots
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._in_use)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KVArena exhausted: no free slot")
+        slot = self._free.pop()
+        if slot in self._in_use:
+            raise RuntimeError(f"KV slot {slot} double-allocated")
+        self._in_use.add(slot)
+        if self._arenas[slot] is None:
+            self._arenas[slot] = (
+                self.target.init_cache(1, self.max_len),
+                self.draft.init_cache(1, self.max_len),
+                self.target.init_tree_caches(1, self.tree_capacity),
+                self.draft.init_tree_caches(1, self.tree_capacity))
+        return slot
+
+    def caches(self, slot: int) -> tuple:
+        assert slot in self._in_use, f"slot {slot} not allocated"
+        return self._arenas[slot]
+
+    def store(self, slot: int, caches: tuple) -> None:
+        """Hand a request's final cache buffers back to the pool so the
+        next occupant reuses them (stale rows are masked, never zeroed)."""
+        assert slot in self._in_use, f"slot {slot} not allocated"
+        self._arenas[slot] = caches
+
+    def free(self, slot: int) -> None:
+        if slot not in self._in_use:
+            raise RuntimeError(f"KV slot {slot} freed but not in use")
+        self._in_use.remove(slot)
+        self._free.append(slot)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Per-uid lifecycle timestamps (in global pipeline timesteps) plus an
+    occupancy trace — the no-starvation / no-double-allocation invariants
+    in tests/test_serving_db.py are asserted against these."""
+    submitted_t: Dict[int, int] = dataclasses.field(default_factory=dict)
+    admitted_t: Dict[int, int] = dataclasses.field(default_factory=dict)
+    finished_t: Dict[int, int] = dataclasses.field(default_factory=dict)
+    occupancy: List[int] = dataclasses.field(default_factory=list)
+
+    def queue_delay(self, uid: int) -> int:
+        return self.admitted_t[uid] - self.submitted_t[uid]
+
+
+class DynamicBatchScheduler:
+    """FIFO admission of arrived requests onto free KV slots."""
+
+    def __init__(self, arena: KVArena):
+        self.arena = arena
+        self.queue: Deque = collections.deque()
+        self.stats = SchedulerStats()
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+        self.stats.submitted_t[req.uid] = getattr(req, "arrival_t", 0)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def next_arrival(self) -> Optional[int]:
+        """Earliest arrival_t among queued requests (None if queue empty)."""
+        if not self.queue:
+            return None
+        return min(getattr(r, "arrival_t", 0) for r in self.queue)
+
+    def admit(self, now: int) -> List[Tuple[object, int]]:
+        """Admit arrived requests (FIFO) while slots are free.  Returns
+        [(request, slot)] for this timestep's joins."""
+        admitted: List[Tuple[object, int]] = []
+        while self.arena.n_free:
+            req = next((r for r in self.queue
+                        if getattr(r, "arrival_t", 0) <= now), None)
+            if req is None:
+                break
+            self.queue.remove(req)
+            slot = self.arena.alloc()
+            self.stats.admitted_t[req.uid] = now
+            admitted.append((req, slot))
+        return admitted
+
+    def retire(self, uid: int, slot: int, now: int, caches=None) -> None:
+        """Release a finished request's slot (optionally recycling its
+        cache buffers) so the next refill can claim it."""
+        if caches is not None:
+            self.arena.store(slot, caches)
+        self.arena.free(slot)
+        self.stats.finished_t[uid] = now

@@ -1,0 +1,102 @@
+"""Regression pins for pre-DB serving semantics, so the dynamic-batching
+refactor cannot silently change the baselines it is measured against."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree as tree_lib
+from repro.core.pipedec import PipeDecConfig
+from repro.core.speculative import ModelBundle
+from repro.models import transformer as tf
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def target(tiny_dense):
+    return ModelBundle(tf.init_model(jax.random.PRNGKey(0), tiny_dense),
+                       tiny_dense)
+
+
+def test_pp_bucketing_regression(target):
+    """mode="pp" pins: requests are bucketed by prompt length, buckets are
+    chunked into ``max_batch`` lockstep batches, every uid is answered, and
+    outputs are independent of which batch a request lands in."""
+    rng = np.random.default_rng(1)
+    lengths = [4, 6, 4, 6, 4]
+    reqs = [Request(i, rng.integers(0, 100, ln).astype(np.int32), 5)
+            for i, ln in enumerate(lengths)]
+
+    eng = ServingEngine(target, mode="pp", max_batch=2)
+    for r in reqs:
+        eng.submit(r)
+    res = eng.run()
+    assert set(res) == set(range(5))
+    for r in res.values():
+        assert len(r.tokens) == 6  # max_new_tokens + 1
+
+    # requests in one lockstep batch share a wall-clock measurement, so the
+    # latency values expose the batch partition: len-4 bucket -> {0,2},{4};
+    # len-6 bucket -> {1,3}
+    groups = {}
+    for uid, r in res.items():
+        groups.setdefault(r.latency_s, set()).add(uid)
+    assert {frozenset(g) for g in groups.values()} == \
+        {frozenset({0, 2}), frozenset({4}), frozenset({1, 3})}
+
+    # batching must not change tokens: unbatched run bit-matches
+    solo = ServingEngine(target, mode="pp", max_batch=1)
+    for r in reqs:
+        solo.submit(Request(r.uid, r.prompt, r.max_new_tokens))
+    solo_res = solo.run()
+    for uid in res:
+        np.testing.assert_array_equal(res[uid].tokens, solo_res[uid].tokens)
+
+
+def test_pp_mixed_token_budgets_truncated(target):
+    """A batch decodes to the longest budget; shorter requests are cut back
+    to their own max_new_tokens + 1."""
+    rng = np.random.default_rng(2)
+    eng = ServingEngine(target, mode="pp", max_batch=4)
+    for i, new in enumerate([3, 7]):
+        eng.submit(Request(i, rng.integers(0, 100, 5).astype(np.int32), new))
+    res = eng.run()
+    assert len(res[0].tokens) == 4 and len(res[1].tokens) == 8
+
+
+# --------------------------------------------------------------------------
+# PipeDecConfig depth-cap / capacity invariants (the DB engine sizes its
+# TreeBatch and KV arenas from these)
+# --------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(n_stages=st.integers(1, 24), width=st.integers(1, 32),
+       max_depth=st.integers(0, 40))
+def test_pipedec_config_depth_capacity_property(n_stages, width, max_depth):
+    cfg = PipeDecConfig(n_stages=n_stages, width=width, max_depth=max_depth)
+    if max_depth:
+        assert cfg.depth_cap == max_depth
+    else:
+        assert cfg.depth_cap == n_stages + 4  # default: stages + slack
+    assert cfg.capacity == 1 + width * cfg.depth_cap
+    # the tree buffer can hold the root plus depth_cap full layers — the
+    # expand deferral check (n_nodes + w <= capacity + 1) then guarantees
+    # tree_expand never drops a layer for space
+    assert cfg.capacity >= 1 + width
+
+
+@settings(max_examples=15, deadline=None)
+@given(width=st.integers(1, 6), depth=st.integers(1, 5),
+       seed=st.integers(0, 10_000))
+def test_tree_expand_respects_capacity(width, depth, seed):
+    """n_nodes never exceeds capacity no matter the expansion sequence."""
+    cfg = PipeDecConfig(n_stages=2, width=width, max_depth=depth)
+    rng = np.random.default_rng(seed)
+    tree = tree_lib.tree_init(cfg.capacity, 1)
+    for _ in range(depth + 2):  # two layers beyond the cap
+        lp = jax.numpy.asarray(rng.normal(size=(width, 3)),
+                               jax.numpy.float32)
+        tok = jax.numpy.asarray(rng.integers(0, 50, size=(width, 3)),
+                                jax.numpy.int32)
+        tree = tree_lib.tree_expand(tree, tok, lp, width)
+        assert int(tree.n_nodes) <= cfg.capacity
+        assert int(tree.layer_start) + int(tree.layer_size) <= cfg.capacity

@@ -1,0 +1,209 @@
+"""SpecPipe-DB dynamic-batching engine tests.
+
+Equivalence strategy (see tests/README.md): the DB engine multiplexes
+unchanged per-request ``PipeDecEngine`` state machines through one shared
+schedule, so every request's greedy output must BIT-MATCH running it alone
+— across slot contention, staggered arrivals, and KV-arena recycling.  The
+scheduler invariants (no starvation, no double-allocated slot, every
+submitted uid in results) are asserted against the scheduler's lifecycle
+stats under churn.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree as tree_lib
+from repro.core.dynbatch import TreeBatch
+from repro.core.pipedec import PipeDecConfig, PipeDecEngine
+from repro.core.speculative import ModelBundle, draft_candidates
+from repro.models import transformer as tf
+from repro.serving import KVArena, Request, ServingEngine, SpecPipeDBEngine
+
+PCFG = PipeDecConfig(n_stages=3, width=4, branch=2)
+MAX_LEN = 128
+
+
+@pytest.fixture(scope="module")
+def bundles(tiny_dense, tiny_draft):
+    tp = tf.init_model(jax.random.PRNGKey(0), tiny_dense)
+    dp = tf.init_model(jax.random.PRNGKey(9), tiny_draft)
+    return ModelBundle(tp, tiny_dense), ModelBundle(dp, tiny_draft)
+
+
+def _single_outputs(bundles, reqs):
+    target, draft = bundles
+    eng = PipeDecEngine(target, draft, PCFG, max_len=MAX_LEN)
+    return {r.uid: eng.generate(r.prompt, r.max_new_tokens)[0] for r in reqs}
+
+
+def _mk_reqs(seed, n, arrivals=None, max_new=None):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(0, 100, size=int(rng.integers(3, 8)))
+        reqs.append(Request(
+            i, prompt.astype(np.int32),
+            int(max_new[i]) if max_new else int(rng.integers(3, 7)),
+            arrival_t=int(arrivals[i]) if arrivals else 0))
+    return reqs
+
+
+# --------------------------------------------------------------------------
+# (a) greedy-mode equivalence
+# --------------------------------------------------------------------------
+def test_db_greedy_bitmatches_single_request(bundles):
+    """More requests than slots: queueing + slot recycling must not change
+    a single token of any request's output."""
+    target, draft = bundles
+    reqs = _mk_reqs(0, 4)
+    want = _single_outputs(bundles, reqs)
+    eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN, max_slots=2)
+    for r in reqs:
+        eng.submit(r)
+    res = eng.run()
+    assert set(res) == set(want)
+    for uid, tokens in want.items():
+        np.testing.assert_array_equal(res[uid].tokens, tokens)
+        assert len(res[uid].tokens) == \
+            next(r for r in reqs if r.uid == uid).max_new_tokens + 1
+
+
+def test_db_via_serving_engine_facade(bundles):
+    target, draft = bundles
+    reqs = _mk_reqs(1, 3)
+    want = _single_outputs(bundles, reqs)
+    se = ServingEngine(target, draft, mode="pipedec-db", max_batch=2,
+                       max_len=MAX_LEN, pipedec=PCFG)
+    for r in reqs:
+        se.submit(r)
+    res = se.run()
+    for uid, tokens in want.items():
+        np.testing.assert_array_equal(res[uid].tokens, tokens)
+    assert se.db_stats.total_commits >= sum(r.max_new_tokens for r in reqs)
+
+
+# --------------------------------------------------------------------------
+# (b) scheduler invariants under churn
+# --------------------------------------------------------------------------
+def test_db_staggered_arrivals_all_complete(bundles):
+    """≥4 requests with staggered arrivals and mixed token budgets on 2
+    slots: nobody starves, occupancy never exceeds the slot count, and the
+    arena fully drains."""
+    target, draft = bundles
+    reqs = _mk_reqs(2, 5, arrivals=[0, 2, 5, 9, 11], max_new=[4, 6, 3, 5, 4])
+    want = _single_outputs(bundles, reqs)
+    eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN, max_slots=2)
+    for r in reqs:
+        eng.submit(r)
+    res = eng.run()
+
+    assert set(res) == {r.uid for r in reqs}, "every submitted uid completes"
+    for uid, tokens in want.items():
+        np.testing.assert_array_equal(res[uid].tokens, tokens)
+
+    ss = eng.sched.stats
+    for r in reqs:
+        assert ss.admitted_t[r.uid] >= r.arrival_t, "admission after arrival"
+        assert ss.finished_t[r.uid] > ss.admitted_t[r.uid]
+        # no starvation: bounded queueing delay (predecessors hold a slot
+        # for at most their own decode length)
+        assert ss.queue_delay(r.uid) <= sum(
+            q.max_new_tokens * (PCFG.n_stages + 2) + 17 for q in reqs)
+    assert max(ss.occupancy) <= 2
+    assert eng.arena.n_used == 0 and eng.arena.n_free == 2
+    assert eng.stats.peak_occupancy == 2, "slots actually shared"
+
+
+def test_kv_arena_no_double_allocation(bundles):
+    target, draft = bundles
+    arena = KVArena(target, draft, slots=2, max_len=64, tree_capacity=16)
+    a = arena.alloc()
+    b = arena.alloc()
+    assert a != b
+    with pytest.raises(RuntimeError, match="exhausted"):
+        arena.alloc()
+    with pytest.raises(RuntimeError, match="not in use"):
+        arena.free(7)
+    arena.free(a)
+    assert arena.alloc() == a  # slot recycled, caches preserved
+    c1 = arena.caches(a)
+    assert c1 is not None and len(c1) == 4
+    arena.free(a)
+    arena.free(b)
+    assert arena.n_free == 2 and arena.n_used == 0
+
+
+# --------------------------------------------------------------------------
+# batched tree store (core/dynbatch.py) vs tree_lib on standalone trees
+# --------------------------------------------------------------------------
+def test_treebatch_rows_match_tree_lib():
+    w, c, cap = 3, 2, 13
+    tb = TreeBatch(slots=2, capacity=cap)
+    ref = [tree_lib.tree_init(cap, 5), tree_lib.tree_init(cap, 9)]
+    tb.init_row(0, 5)
+    tb.init_row(1, 9)
+
+    rng = np.random.default_rng(0)
+    for step in range(3):
+        for slot in range(2):
+            logits = jnp.asarray(rng.normal(size=(w, 32)), jnp.float32)
+            valid = jnp.asarray([True] * min(w, step + 1) +
+                                [False] * (w - min(w, step + 1)))
+            tok, lp = draft_candidates(logits, valid, c)
+            ref[slot] = tree_lib.tree_expand(ref[slot], tok, lp, w)
+            tb.expand_row(slot, tok, lp, w)
+    for slot in range(2):
+        got = tb.get_row(slot)
+        for name in tree_lib.Tree._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, name)),
+                np.asarray(getattr(ref[slot], name)), err_msg=name)
+
+    # prune one row; the other must be untouched
+    child = int(np.asarray(tree_lib.root_argmax_child(ref[0])))
+    ref0, imap_ref = tree_lib.tree_prune_to_child(ref[0], child)
+    got0, imap_got = tb.prune_row(0, child)
+    np.testing.assert_array_equal(np.asarray(imap_got), np.asarray(imap_ref))
+    np.testing.assert_array_equal(np.asarray(tb.get_row(0).tokens),
+                                  np.asarray(ref0.tokens))
+    np.testing.assert_array_equal(np.asarray(tb.get_row(1).tokens),
+                                  np.asarray(ref[1].tokens))
+
+    # stacked deepest-layer view == per-row last_layer
+    toks_b, idx_b, valid_b, mask_b = tb.deepest_layers(w)
+    for slot, t in enumerate([ref0, ref[1]]):
+        toks, idx, valid, mask = tree_lib.last_layer(t, w)
+        np.testing.assert_array_equal(np.asarray(toks_b[slot]),
+                                      np.asarray(toks))
+        np.testing.assert_array_equal(np.asarray(valid_b[slot]),
+                                      np.asarray(valid))
+        np.testing.assert_array_equal(np.asarray(mask_b[slot]),
+                                      np.asarray(mask))
+    tb.release_row(0)
+    assert tb.occupancy() == 1
+
+
+# --------------------------------------------------------------------------
+# (c) property test over random arrival orders
+# --------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_db_random_arrival_orders_property(bundles, seed):
+    target, draft = bundles
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 6))
+    reqs = _mk_reqs(seed, n,
+                    arrivals=[int(a) for a in rng.integers(0, 8, size=n)],
+                    max_new=[int(m) for m in rng.integers(2, 6, size=n)])
+    want = _single_outputs(bundles, reqs)
+    eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                           max_slots=int(rng.integers(1, 4)))
+    for r in reqs:
+        eng.submit(r)
+    res = eng.run()
+    assert set(res) == set(want)
+    for uid, tokens in want.items():
+        np.testing.assert_array_equal(res[uid].tokens, tokens)
+    assert eng.arena.n_used == 0
