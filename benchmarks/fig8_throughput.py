@@ -2,7 +2,13 @@
 priority), PP/STPP overlap batches, and SpecPipe-DB keeps several requests'
 trees in every pipeline timestep (dynamic batching — the paper's
 multi-request mode, 1.64–2.08× vLLM); modelled with the same roofline stage
-times as Fig. 5, acceptance from real runs."""
+times as Fig. 5, acceptance from real runs.
+
+``db_batch_scale`` prices the batch-stacked verify pass — since the fused
+dispatch landed (``ModelBundle.tree_verify_rows``: ONE batched tree-verify
+per model per timestep over the slot-stacked KV arena) this is the pass
+``serving.dynbatch.SpecPipeDBEngine`` actually executes, not just the
+priced regime."""
 from __future__ import annotations
 
 import time

@@ -11,9 +11,10 @@ engine's — the property the equivalence tests pin.
 
 ``deepest_layers`` exposes the stacked view of every slot's entry layer
 (tokens / indices / validity / ancestor-mask rows, all ``[slots, w, ...]``)
-via ``jax.vmap`` — the fusion point for a future single batched
-``tree_verify`` call per timestep once the model path takes per-row
-``model_len``.
+via ``jax.vmap`` — the fusion point: the DB engine feeds it (with per-row
+``model_len`` / ``tree_write_index`` / masks) into ONE batched
+``tree_verify`` dispatch per model per timestep
+(``ModelBundle.tree_verify_rows``).
 """
 from __future__ import annotations
 
@@ -89,7 +90,9 @@ class TreeBatch:
     def deepest_layers(self, w: int):
         """Every slot's entry layer, stacked: (tokens [S,w], idx [S,w],
         valid [S,w], mask_rows [S,w,N]).  Inactive slots still produce rows
-        (their stale trees); filter with ``self.active``."""
+        (their stale trees); the fused dispatch masks them with
+        ``self.active`` / its pending set so they only ever write into
+        their own slot's slack region."""
         return jax.vmap(lambda tr: tree_lib.last_layer(tr, w))(self.stacked)
 
     def occupancy(self) -> int:

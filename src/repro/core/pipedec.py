@@ -3,10 +3,14 @@
 This is the *logical* engine: it executes the exact computation and
 information schedule of the paper's distributed system on one device.  The
 pipeline-stage partition of the target model changes only *when* a layer's
-logits become available (``n_stages`` timesteps after entry), never *what*
-is computed, so the single-device engine is bit-identical to the multi-node
-system.  Wall-clock behaviour is modelled separately (``core/sim.py``) and
-the sharded deployment lives in ``repro.launch``.
+logits become available (``n_stages - 1`` timesteps after the entry
+timestep: the layer occupies stage 1 during the timestep it enters, so an
+entry at timestep t exits at ``t + n_stages - 1`` and entry-to-exit spans
+``n_stages`` timesteps inclusive — tests/test_serving_db.py pins this
+pipeline-fill latency), never *what* is computed, so the single-device
+engine is bit-identical to the multi-node system.  Wall-clock behaviour is
+modelled separately (``core/sim.py``) and the sharded deployment lives in
+``repro.launch``.
 
 Per timestep (paper §3.4, Fig. 2):
   1. the current deepest tree layer *enters* the pipeline: the target
@@ -64,16 +68,31 @@ class PipeDecConfig:
 @dataclasses.dataclass
 class Flight:
     exit_t: int
-    node_idx: np.ndarray      # [w] global tree indices (-1 invalid)
+    node_idx: np.ndarray      # [w] int32 global tree indices (-1 invalid)
     logits: jnp.ndarray       # [w, V]
+
+
+@dataclasses.dataclass
+class EntryInputs:
+    """One request's deepest tree layer, ready for the (fused) tree-verify
+    dispatch — the per-slot unit the DB engine stacks along the batch axis
+    (``TreeBatch.deepest_layers`` produces the same views already stacked).
+    """
+    tokens: jnp.ndarray       # [w] int32 layer tokens (padded with 0)
+    positions: jnp.ndarray    # [w] int32 absolute positions
+    mask: jnp.ndarray         # [w, Tcap] padded ancestor-mask rows
+    write_index: jnp.ndarray  # () int32 tree-buffer write offset
+    node_idx: np.ndarray      # [w] int32 global tree indices (-1 invalid)
 
 
 def remap_flight_indices(node_idx: np.ndarray, index_map) -> np.ndarray:
     """Apply a prune's old→new ``index_map`` to buffered flight/draft node
-    indices (-1 rows stay -1; dropped nodes become -1)."""
+    indices (-1 rows stay -1; dropped nodes become -1).  int32 in, int32
+    out — all tree/flight indices share one dtype across hit/prune cycles
+    (tests pin the stability)."""
     imap = np.asarray(index_map)
     out = np.where(node_idx >= 0, imap[np.maximum(node_idx, 0)], -1)
-    return out.astype(np.int64)
+    return out.astype(np.int32)
 
 
 @dataclasses.dataclass
@@ -192,109 +211,164 @@ class PipeDecEngine:
         st.eos_hit = eos is not None and first == eos
         return st
 
-    def step(self, st: DecodeState) -> DecodeState:
-        """Advance one pipeline timestep (entry + proposal, then exit +
-        two-level cache sync).  Mutates and returns ``st``."""
+    # ---- phase 1a: gather-entry (pure read) --------------------------
+    def gather_entry(self, st: DecodeState) -> Optional["EntryInputs"]:
+        """Read the deepest tree layer as stacked-axis-ready entry inputs.
+        No state change; returns None when no layer is pending entry.  The
+        DB engine stacks these across slots for ONE fused tree-verify
+        dispatch per model; ``step`` runs the same arrays at B=1."""
+        if not st.pending:
+            return None
+        w = self.pcfg.width
+        tokens, idxs, valid, mask_rows = tree_lib.last_layer(st.tree, w)
+        depths = jnp.where(valid, st.tree.depth[idxs], 0)
+        positions = (st.model_len + depths).astype(jnp.int32)       # [w]
+        pmask = self._pad_mask(mask_rows, self.tree_buffer_capacity)
+        node_idx = np.where(np.asarray(valid), np.asarray(idxs),
+                            -1).astype(np.int32)
+        return EntryInputs(tokens=tokens, positions=positions, mask=pmask,
+                           write_index=st.tree.layer_start,
+                           node_idx=node_idx)
+
+    # ---- phase 1b: apply-fused (bookkeeping from the verify logits) --
+    def apply_entry(self, st: DecodeState, entry: "EntryInputs",
+                    v_logits: jnp.ndarray, d_logits: jnp.ndarray) -> None:
+        """Record the entry's in-flight state from this request's rows of
+        the (possibly fused) tree-verify logits ([w, V] each)."""
+        st.flights.append(Flight(exit_t=st.t + self.pcfg.n_stages - 1,
+                                 node_idx=entry.node_idx,
+                                 logits=v_logits))
+        st.stats.entries += 1
+        st.last_draft = (entry.node_idx.copy(), d_logits)
+        st.pending = False
+
+    # ---- phase 1c: tree expansion (may be deferred) ------------------
+    def can_expand(self, tree: tree_lib.Tree) -> bool:
+        """Depth-cap / buffer-capacity guard for appending one layer.  A
+        full layer appends ``width`` slots, so ``n_nodes + width`` must fit
+        within ``capacity`` NOW — admitting ``n_nodes + w == cap + 1``
+        (the old off-by-one) makes ``tree_expand`` silently truncate the
+        layer's last candidate at the buffer edge (pinned by the
+        capacity-saturation regression test)."""
         p = self.pcfg
-        w, c, cap = p.width, p.branch, p.capacity
-        tcap = self.tree_buffer_capacity
-        tgt, drf = self.target, self.draft
+        cur_depth = int(jnp.max(jnp.where(tree.valid(), tree.depth, 0)))
+        return (cur_depth < p.depth_cap
+                and int(tree.n_nodes) + p.width <= p.capacity)
 
-        st.t += 1
-        st.stats.timesteps = st.t
-        step_commits = 0
+    def maybe_expand(self, st: DecodeState) -> None:
+        p = self.pcfg
+        w, c = p.width, p.branch
+        if st.last_draft is None or st.pending:
+            return
+        if not self.can_expand(st.tree):
+            return  # deferred: retried next timestep once a prune frees room
+        nidx, dlog = st.last_draft
+        rows_valid = nidx >= 0
+        if not rows_valid.any():
+            return
+        # surviving rows, in (compacted) index order, align with the
+        # deepest layer's slots
+        order = np.argsort(np.where(rows_valid, nidx,
+                                    np.iinfo(np.int32).max))
+        dlog_sorted = dlog[jnp.asarray(order)]
+        valid_sorted = jnp.asarray(rows_valid[order])
+        cand_tok, cand_lp = draft_candidates(dlog_sorted, valid_sorted, c)
+        st.tree = tree_lib.tree_expand(st.tree, cand_tok, cand_lp, w)
+        st.pending = True
+        st.last_draft = None
 
-        # ---- phase 1: entry (target) + proposal (draft) -------------
-        if st.pending:
-            tokens, idxs, valid, mask_rows = tree_lib.last_layer(st.tree, w)
-            depths = jnp.where(valid, st.tree.depth[idxs], 0)
-            positions = (st.model_len + depths)[None]  # [1, w]
-            pmask = self._pad_mask(mask_rows, tcap)
-            wi = st.tree.layer_start
-
-            v_logits, st.t_tree = tgt.tree_verify(
-                tokens[None], positions, pmask, st.t_cache, st.model_len,
-                st.t_tree, wi)
-            st.flights.append(Flight(
-                exit_t=st.t + p.n_stages - 1,
-                node_idx=np.where(np.asarray(valid), np.asarray(idxs), -1),
-                logits=v_logits[0]))
-            st.stats.entries += 1
-
-            dl_logits, st.d_tree = drf.tree_verify(
-                tokens[None], positions, pmask, st.d_cache, st.model_len,
-                st.d_tree, wi)
-            st.last_draft = (np.where(np.asarray(valid),
-                                      np.asarray(idxs), -1),
-                             dl_logits[0])
-            st.pending = False
-
-        # expansion (may be deferred by the depth cap)
-        if st.last_draft is not None and not st.pending:
-            cur_depth = int(jnp.max(jnp.where(st.tree.valid(),
-                                              st.tree.depth, 0)))
-            if cur_depth < p.depth_cap and \
-                    int(st.tree.n_nodes) + w <= cap + 1:
-                nidx, dlog = st.last_draft
-                rows_valid = nidx >= 0
-                if rows_valid.any():
-                    # surviving rows, in (compacted) index order, align
-                    # with the deepest layer's slots
-                    order = np.argsort(np.where(rows_valid, nidx,
-                                                np.iinfo(np.int32).max))
-                    dlog_sorted = dlog[jnp.asarray(order)]
-                    valid_sorted = jnp.asarray(rows_valid[order])
-                    cand_tok, cand_lp = draft_candidates(
-                        dlog_sorted, valid_sorted, c)
-                    st.tree = tree_lib.tree_expand(st.tree, cand_tok,
-                                                   cand_lp, w)
-                    st.pending = True
-                    st.last_draft = None
-
-        # ---- phase 2: exit + sync (commit, prune) -------------------
+    # ---- phase 2a: pick the exiting flight ---------------------------
+    def exit_pick(self, st: DecodeState) -> Optional[Tuple[Flight, int]]:
+        """Pop the flight exiting this timestep.  Returns (flight,
+        root_row) or None (nothing exiting, or a stale flight whose root
+        was pruned away — should not happen)."""
         exiting = [f for f in st.flights if f.exit_t == st.t]
         st.flights = [f for f in st.flights if f.exit_t != st.t]
         for fl in exiting:
             root_rows = np.where(fl.node_idx == 0)[0]
-            if len(root_rows) == 0:
-                continue  # stale flight (should not happen)
-            r = int(root_rows[0])
-            st.key, sk = jax.random.split(st.key)
-            x = int(select_token(fl.logits[r], p.sampling, sk))
-            st.committed.append(x)
-            st.stats.commits += 1
-            step_commits += 1
+            if len(root_rows):
+                return fl, int(root_rows[0])
+        return None
 
-            # two-level cache sync: migrate the old root's KV row (tree
-            # buffer row 0) into the model cache at position model_len
-            st.t_cache = tgt.commit(st.t_cache, st.t_tree, 0, st.model_len)
-            st.d_cache = drf.commit(st.d_cache, st.d_tree, 0, st.model_len)
-            st.model_len += 1
-            if st.eos is not None and x == st.eos:
-                st.eos_hit = True
+    # ---- phase 2b: exit-commit (token, prune, remap) -----------------
+    def exit_apply(self, st: DecodeState, fl: Flight, root_row: int, *,
+                   commit_caches, remap_caches) -> int:
+        """Commit the root's token and sync all in-flight state.  Cache
+        mutation is delegated: ``commit_caches(st)`` migrates tree-buffer
+        row 0 into the model caches at ``st.model_len`` (two-level cache
+        sync, §3.4.3) and ``remap_caches(st, index_map)`` compacts the
+        tree caches after a prune — the single-request engine mutates
+        ``st``'s own caches, the DB engine its arena rows.  Returns the
+        number of commits (1)."""
+        p = self.pcfg
+        st.key, sk = jax.random.split(st.key)
+        x = int(select_token(fl.logits[root_row], p.sampling, sk))
+        st.committed.append(x)
+        st.stats.commits += 1
+        commit_caches(st)
+        st.model_len += 1
+        if st.eos is not None and x == st.eos:
+            st.eos_hit = True
 
-            hit = int(tree_lib.find_child_with_token(st.tree, x))
-            if hit >= 0:
-                st.stats.hits += 1
-                st.tree, index_map = tree_lib.tree_prune_to_child(st.tree,
-                                                                  hit)
-                st.t_tree = remap_tree_caches(st.t_tree, index_map, cap)
-                st.d_tree = remap_tree_caches(st.d_tree, index_map, cap)
-                for f2 in st.flights:
-                    f2.node_idx = remap_flight_indices(f2.node_idx,
-                                                       index_map)
-                if st.last_draft is not None:
-                    st.last_draft = (remap_flight_indices(st.last_draft[0],
-                                                          index_map),
-                                     st.last_draft[1])
-            else:
-                st.stats.misses += 1
-                st.tree = tree_lib.tree_init(cap, x)
-                st.flights = []
-                st.last_draft = None
-                st.pending = True
-            if len(st.committed) >= 1 + st.max_new_tokens or st.eos_hit:
-                break
+        hit = int(tree_lib.find_child_with_token(st.tree, x))
+        if hit >= 0:
+            st.stats.hits += 1
+            st.tree, index_map = tree_lib.tree_prune_to_child(st.tree, hit)
+            remap_caches(st, index_map)
+            for f2 in st.flights:
+                f2.node_idx = remap_flight_indices(f2.node_idx, index_map)
+            if st.last_draft is not None:
+                st.last_draft = (remap_flight_indices(st.last_draft[0],
+                                                      index_map),
+                                 st.last_draft[1])
+        else:
+            st.stats.misses += 1
+            st.tree = tree_lib.tree_init(p.capacity, x)
+            st.flights = []
+            st.last_draft = None
+            st.pending = True
+        return 1
+
+    # default cache plumbing: the request owns its caches (B=1)
+    def _commit_own_caches(self, st: DecodeState) -> None:
+        st.t_cache = self.target.commit(st.t_cache, st.t_tree, 0,
+                                        st.model_len)
+        st.d_cache = self.draft.commit(st.d_cache, st.d_tree, 0,
+                                       st.model_len)
+
+    def _remap_own_caches(self, st: DecodeState, index_map) -> None:
+        cap = self.pcfg.capacity
+        st.t_tree = remap_tree_caches(st.t_tree, index_map, cap)
+        st.d_tree = remap_tree_caches(st.d_tree, index_map, cap)
+
+    def step(self, st: DecodeState) -> DecodeState:
+        """Advance one pipeline timestep: gather-entry → verify (target
+        entry + draft proposal) → expansion → exit-commit.  Mutates and
+        returns ``st``.  The DB engine drives the same phases with the
+        verify dispatch fused across slots; this per-request path is its
+        B=1 case."""
+        st.t += 1
+        st.stats.timesteps = st.t
+        step_commits = 0
+
+        entry = self.gather_entry(st)
+        if entry is not None:
+            v_logits, st.t_tree = self.target.tree_verify(
+                entry.tokens[None], entry.positions[None], entry.mask[None],
+                st.t_cache, st.model_len, st.t_tree, entry.write_index)
+            d_logits, st.d_tree = self.draft.tree_verify(
+                entry.tokens[None], entry.positions[None], entry.mask[None],
+                st.d_cache, st.model_len, st.d_tree, entry.write_index)
+            self.apply_entry(st, entry, v_logits[0], d_logits[0])
+
+        self.maybe_expand(st)
+
+        ev = self.exit_pick(st)
+        if ev is not None:
+            fl, root_row = ev
+            step_commits += self.exit_apply(
+                st, fl, root_row, commit_caches=self._commit_own_caches,
+                remap_caches=self._remap_own_caches)
         st.stats.commits_per_step.append(step_commits)
         return st
 

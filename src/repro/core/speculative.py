@@ -12,6 +12,7 @@ much latency the commit costs — so the output distribution is lossless.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Any, Optional
@@ -49,8 +50,35 @@ def select_token(logits: jnp.ndarray, sp: SamplingParams, key) -> jnp.ndarray:
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
+def _tree_verify_rows_impl(params, node_tokens, node_positions, tree_mask,
+                           cache, cache_len, tree_caches, tree_write_index,
+                           *, bucket: int, cfg, enc_out, window_override):
+    """ONE fused tree-verify dispatch over the first ``bucket`` slot rows
+    of slot-stacked caches (SpecPipe-DB).
+
+    The full arena rides through unsliced; the static ``bucket`` bounds
+    the rows actually read/computed, and the updated tree-cache rows are
+    scattered back — so growing/shrinking occupancy only recompiles per
+    bucket size (power-of-two slot-count bucketing), never per step.
+    """
+    cache_b = tf.slice_cache_rows(cache, 0, bucket)
+    tc_b = tf.slice_cache_rows(tree_caches, 0, bucket)
+    logits, tc_b = tf.tree_verify_step(
+        params, cfg=cfg, node_tokens=node_tokens,
+        node_positions=node_positions, tree_mask=tree_mask, cache=cache_b,
+        cache_len=cache_len, tree_caches=tc_b,
+        tree_write_index=tree_write_index, enc_out=enc_out,
+        window_override=window_override)
+    return logits, tf.update_cache_rows(tree_caches, tc_b, 0)
+
+
 class ModelBundle:
-    """params+cfg with jitted prefill / decode / tree-verify / commit."""
+    """params+cfg with jitted prefill / decode / tree-verify / commit.
+
+    ``calls`` counts dispatches by closure name — the call-count hook the
+    SpecPipe-DB equivalence tests use to assert the fused path issues
+    exactly ONE tree-verify per model per global timestep.
+    """
 
     def __init__(self, params, cfg: ModelConfig, *, enc_out=None,
                  prefix_embeds=None, window_override: int = -1):
@@ -59,6 +87,7 @@ class ModelBundle:
         self.enc_out = enc_out
         self.prefix_embeds = prefix_embeds
         self.window_override = window_override
+        self.calls = collections.Counter()
 
         self._prefill = jax.jit(functools.partial(
             tf.prefill, cfg=cfg, prefix_embeds=prefix_embeds,
@@ -70,14 +99,21 @@ class ModelBundle:
         self._tree_verify = jax.jit(functools.partial(
             tf.tree_verify_step, cfg=cfg, enc_out=enc_out,
             window_override=window_override))
+        self._tree_verify_rows = jax.jit(functools.partial(
+            _tree_verify_rows_impl, cfg=cfg, enc_out=enc_out,
+            window_override=window_override),
+            static_argnames=("bucket",))
         self._commit = jax.jit(functools.partial(
             tf.commit_tree_node, cfg=cfg))
+        self._commit_rows = jax.jit(functools.partial(
+            tf.commit_tree_nodes, cfg))
         self._forward = jax.jit(functools.partial(
             tf.forward, cfg=cfg, prefix_embeds=prefix_embeds,
             enc_out=enc_out, window_override=window_override))
 
     # thin wrappers (keyword plumbing) -------------------------------------
     def prefill(self, tokens, cache):
+        self.calls["prefill"] += 1
         return self._prefill(self.params, tokens=tokens, cache=cache)
 
     def decode(self, token, cache, cache_len):
@@ -86,15 +122,37 @@ class ModelBundle:
 
     def tree_verify(self, node_tokens, node_positions, tree_mask, cache,
                     cache_len, tree_caches, tree_write_index):
+        self.calls["tree_verify"] += 1
         return self._tree_verify(
             self.params, node_tokens=node_tokens,
             node_positions=node_positions, tree_mask=tree_mask, cache=cache,
             cache_len=cache_len, tree_caches=tree_caches,
             tree_write_index=tree_write_index)
 
+    def tree_verify_rows(self, node_tokens, node_positions, tree_mask,
+                         cache, cache_len, tree_caches, tree_write_index,
+                         *, bucket: int):
+        """Fused per-timestep dispatch over slot-stacked caches: row b is
+        request b's deepest tree layer, bounded by its own ``cache_len[b]``
+        / ancestor mask, written at its own ``tree_write_index[b]``."""
+        self.calls["tree_verify_rows"] += 1
+        return self._tree_verify_rows(
+            self.params, node_tokens=node_tokens,
+            node_positions=node_positions, tree_mask=tree_mask, cache=cache,
+            cache_len=cache_len, tree_caches=tree_caches,
+            tree_write_index=tree_write_index, bucket=bucket)
+
     def commit(self, cache, tree_caches, node_idx, model_len):
+        self.calls["commit"] += 1
         return self._commit(cache=cache, tree_caches=tree_caches,
                             node_idx=node_idx, model_len=model_len)
+
+    def commit_rows(self, cache, tree_caches, node_idx, model_len,
+                    commit_mask):
+        """Batched per-row two-level cache sync (masked rows untouched)."""
+        self.calls["commit_rows"] += 1
+        return self._commit_rows(cache, tree_caches, node_idx, model_len,
+                                 commit_mask)
 
     def init_cache(self, batch, max_len):
         return tf.init_cache(self.cfg, batch, max_len)

@@ -55,7 +55,7 @@ def _flash_kernel(plen_ref, q_ref, k_ref, v_ref, qpos_ref,
                             preferred_element_type=jnp.float32)  # [n, bk]
 
     kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (n, block_k), 1)
-    plen = plen_ref[0]
+    plen = plen_ref[pl.program_id(0)]     # per-batch-row valid prefix
     valid = kpos < plen
     if causal or window > 0:
         qp = qpos_ref[0, 0][:, :1]                       # [n, 1] int32
@@ -94,13 +94,14 @@ def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
                         block_k: int = 512, block_q: int = 0,
                         window: int = 0, causal: bool = False,
                         interpret: bool = True):
-    """q: [B,H,n,hd]; k/v: [B,KV,L,hd]; kv_len: () int32 valid prefix.
+    """q: [B,H,n,hd]; k/v: [B,KV,L,hd]; kv_len: () or per-row [B] int32
+    valid prefix (a scalar broadcasts over the batch).
 
-    qpos: [n] int32 absolute query positions (required when window > 0 or
-    causal).  block_q tiles the query dim (0 => one tile — decode/tree
-    widths; prefill passes e.g. 512).  Returns (o [B,H,n,hd],
-    m [B,H,n,128], l [B,H,n,128]) — lane-replicated LSE stats for
-    flash-decoding combination.
+    qpos: [n] or per-row [B,n] int32 absolute query positions (required
+    when window > 0 or causal).  block_q tiles the query dim (0 => one tile
+    — decode/tree widths; prefill passes e.g. 512).  Returns
+    (o [B,H,n,hd], m [B,H,n,128], l [B,H,n,128]) — lane-replicated LSE
+    stats for flash-decoding combination.
     """
     b, h, n0, hd = q.shape
     kvh, lmax = k.shape[1], k.shape[2]
@@ -114,16 +115,19 @@ def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
     nb = lmax // block_k
     if qpos is None:
         qpos = jnp.zeros((n0,), jnp.int32)
+    qpos = jnp.asarray(qpos, jnp.int32)
+    if qpos.ndim == 1:
+        qpos = jnp.broadcast_to(qpos[None], (b, n0))
     bq = block_q or n0
     qpad = (-n0) % bq
     n = n0 + qpad
     if qpad:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0)))
-        qpos = jnp.pad(qpos, (0, qpad))
+        qpos = jnp.pad(qpos, ((0, 0), (0, qpad)))
     nq = n // bq
-    qpos2 = jnp.broadcast_to(qpos[None, None, :, None],
-                             (1, 1, n, 128)).astype(jnp.int32)
-    plen = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    qpos2 = jnp.broadcast_to(qpos[:, None, :, None],
+                             (b, 1, n, 128)).astype(jnp.int32)
+    plen = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
 
     grid = (b, h, nq, nb)
     kernel = functools.partial(_flash_kernel, scale=scale, block_k=block_k,
@@ -146,7 +150,7 @@ def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
                 pl.BlockSpec((1, 1, block_k, hd),
                              lambda i, j, qi, kb, *_: (i, j // rep, kb, 0)),
                 pl.BlockSpec((1, 1, bq, 128),
-                             lambda i, j, qi, kb, *_: (0, 0, qi, 0)),
+                             lambda i, j, qi, kb, *_: (i, 0, qi, 0)),
             ],
             out_specs=[
                 pl.BlockSpec((1, 1, bq, hd),

@@ -42,7 +42,12 @@ def combine_lse(parts):
 def tree_attention(q, k_past, v_past, k_tree, v_tree, tree_mask, past_len,
                    *, scale=None, window: int = 0, qpos=None,
                    use_kernel: bool = True, block_k: int = 512):
-    """Two-level tree attention — see kernels/ref.py for the oracle."""
+    """Two-level tree attention — see kernels/ref.py for the oracle.
+
+    ``past_len`` may be a scalar or per-row [B], ``tree_mask`` [n,T] or
+    per-row [B,n,T] (the SpecPipe-DB fused dispatch stacks one request per
+    batch row, each with its own committed prefix and ancestor mask).
+    """
     if not use_kernel:
         return ref.tree_attention_ref(q, k_past, v_past, k_tree, v_tree,
                                       tree_mask, past_len, scale=scale)

@@ -14,8 +14,9 @@ def tree_attention_ref(q, k_past, v_past, k_tree, v_tree, tree_mask,
     v_past:   [B, KV, Lmax, hd]
     k_tree:   [B, KV, T, hd]
     v_tree:   [B, KV, T, hd]
-    tree_mask:[n, T] bool — ancestor-or-self mask (True = attend)
-    past_len: scalar int
+    tree_mask:[n, T] or per-row [B, n, T] bool — ancestor-or-self mask
+              (True = attend)
+    past_len: scalar int, or per-row [B] int
     Returns   [B, H, n, hd].
     """
     b, h, n, hd = q.shape
@@ -30,9 +31,13 @@ def tree_attention_ref(q, k_past, v_past, k_tree, v_tree, tree_mask,
     lp = jnp.einsum("bhnd,bhsd->bhns", q, k_past).astype(jnp.float32) * scale
     lt = jnp.einsum("bhnd,bhsd->bhns", q, k_tree).astype(jnp.float32) * scale
     lmax = k_past.shape[2]
-    past_ok = jnp.arange(lmax)[None, None, None, :] < past_len
+    plen = jnp.broadcast_to(jnp.asarray(past_len, jnp.int32).reshape(-1),
+                            (b,))
+    past_ok = jnp.arange(lmax)[None, None, None, :] < \
+        plen[:, None, None, None]
+    tmask = tree_mask if tree_mask.ndim == 3 else tree_mask[None]
     lp = jnp.where(past_ok, lp, -jnp.inf)
-    lt = jnp.where(tree_mask[None, None], lt, -jnp.inf)
+    lt = jnp.where(tmask[:, None], lt, -jnp.inf)
     logits = jnp.concatenate([lp, lt], axis=-1)
     probs = jax.nn.softmax(logits, axis=-1)
     pv = probs[..., :lmax].astype(v_past.dtype)

@@ -27,7 +27,7 @@ def _tree_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
     q = q_ref[0, 0].astype(jnp.float32) * scale          # [n, hd]
     k = k_ref[0, 0].astype(jnp.float32)                  # [t, hd]
     v = v_ref[0, 0].astype(jnp.float32)
-    mask = mask_ref[...] != 0                            # [n, t]
+    mask = mask_ref[0] != 0                              # [n, t] (this row's)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     s = jnp.where(mask, s, NEG_INF)
@@ -45,7 +45,9 @@ def _tree_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
 @functools.partial(jax.jit, static_argnames=("interpret", "scale"))
 def tree_block_attention(q, k_tree, v_tree, tree_mask, *, scale=None,
                          interpret: bool = True):
-    """q: [B,H,n,hd]; k/v_tree: [B,KV,T,hd]; tree_mask: [n,T] bool.
+    """q: [B,H,n,hd]; k/v_tree: [B,KV,T,hd]; tree_mask: [n,T] bool, or
+    per-row [B,n,T] (SpecPipe-DB fused dispatch: each batch row is a
+    different request's tree, so each row carries its own ancestor mask).
 
     Returns (o [B,H,n,hd], m [B,H,n,128], l [B,H,n,128]).
     """
@@ -53,7 +55,9 @@ def tree_block_attention(q, k_tree, v_tree, tree_mask, *, scale=None,
     kvh, t = k_tree.shape[1], k_tree.shape[2]
     rep = h // kvh
     scale = scale if scale is not None else 1.0 / (hd ** 0.5)
-    mask_i8 = tree_mask.astype(jnp.int8)
+    if tree_mask.ndim == 2:
+        tree_mask = tree_mask[None]
+    mask_i8 = jnp.broadcast_to(tree_mask, (b, n, t)).astype(jnp.int8)
 
     out_shape = [
         jax.ShapeDtypeStruct((b, h, n, hd), q.dtype),
@@ -67,7 +71,7 @@ def tree_block_attention(q, k_tree, v_tree, tree_mask, *, scale=None,
             pl.BlockSpec((1, 1, n, hd), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, 1, t, hd), lambda i, j: (i, j // rep, 0, 0)),
             pl.BlockSpec((1, 1, t, hd), lambda i, j: (i, j // rep, 0, 0)),
-            pl.BlockSpec((n, t), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, n, t), lambda i, j: (i, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, n, hd), lambda i, j: (i, j, 0, 0)),

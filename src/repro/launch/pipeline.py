@@ -143,8 +143,10 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
                     write_idx, model_len, in_valid):
         """Apply this stage's layers to its in-flight tree layer."""
         ctx = tf.Ctx(mode="tree", positions=positions[None],
-                     cache_len=model_len, tree_write_index=write_idx,
-                     tree_mask=mask)
+                     cache_len=jnp.asarray(model_len, jnp.int32).reshape(1),
+                     tree_write_index=jnp.asarray(write_idx,
+                                                  jnp.int32).reshape(1),
+                     tree_mask=mask[None])
         xs = x[None]  # [1, w, d]
         new_tkv = []
         for l in range(lps):

@@ -214,6 +214,23 @@ def _cache_write(cache, updates, index):
     return out
 
 
+def _cache_write_rows(cache, updates, indices):
+    """Per-row cache write: row b of every update is written at its own
+    offset ``indices[b]`` (SpecPipe-DB fused dispatch — every in-flight
+    request's tree layer lands at that request's ``layer_start``)."""
+    indices = jnp.asarray(indices, jnp.int32)
+    out = {}
+    for name, u in updates.items():
+        buf = cache[name]
+
+        def write_row(b, u_row, i):
+            return jax.lax.dynamic_update_slice_in_dim(
+                b, u_row.astype(b.dtype), i, axis=0)
+
+        out[name] = jax.vmap(write_row)(buf, u, indices)
+    return out
+
+
 # --------------------------------------------------------------------------
 # entry points
 # --------------------------------------------------------------------------
@@ -349,11 +366,16 @@ def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
 
     x:            [B, n, d]    hidden states of the new tree layer nodes
     positions:    [B, n]       absolute positions (model_len-1 + depth)
-    model_cache:  committed-token KV, ``model_len`` valid entries
-    tree_cache:   speculative KV; this layer written at ``tree_write_index``
-    tree_mask:    [n, T_cap] bool — ancestor mask of the new nodes against
-                  the whole tree buffer (True = attend), already includes
-                  self-attention of each node.
+    model_cache:  committed-token KV; row b has ``model_len[b]`` valid rows
+    model_len:    [B] int32    per-row committed-prefix bound
+    tree_cache:   speculative KV; row b's layer written at
+                  ``tree_write_index[b]``
+    tree_write_index: [B] int32 per-row tree-buffer write offsets
+    tree_mask:    [B, n, T_cap] bool — per-row ancestor mask of the new
+                  nodes against the whole tree buffer (True = attend),
+                  already includes self-attention of each node.
+    Rows are independent, so the SpecPipe-DB fused dispatch stacks every
+    in-flight request here and the single-request engine is the B=1 case.
     Returns (out [B,n,d], new_tree_cache).
     """
     b, n, _ = x.shape
@@ -361,18 +383,21 @@ def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
     max_len = (model_cache["c_kv"] if cfg.mla is not None
                else model_cache["k"]).shape[1]
     kpos = jnp.arange(max_len)[None, None, None, :]
-    past_valid = kpos < model_len  # every committed token is an ancestor
+    mlen = jnp.asarray(model_len, jnp.int32).reshape(-1)
+    # per-row bound: every committed token of THIS row is an ancestor
+    past_valid = kpos < mlen[:, None, None, None]
     if window:
         past_valid = past_valid & (kpos > positions[:, None, :, None] - window)
     tcap = (tree_cache["c_kv"] if cfg.mla is not None
             else tree_cache["k"]).shape[1]
-    tmask = tree_mask[None, None]  # [1,1,n,Tcap]
+    tmask = tree_mask[:, None]  # [B,1,n,Tcap]
 
     if cfg.mla is not None:
         q_nope, q_rope = _project_q_mla(params, cfg, x, positions)
         c_kv, k_rope = _project_ckv_mla(params, cfg, x, positions)
-        tree_cache = _cache_write(tree_cache, {"c_kv": c_kv, "k_rope": k_rope},
-                                  tree_write_index)
+        tree_cache = _cache_write_rows(tree_cache,
+                                       {"c_kv": c_kv, "k_rope": k_rope},
+                                       tree_write_index)
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
 
         def expand(cache_part):
@@ -389,8 +414,8 @@ def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
         scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
     else:
         q, k_new, v_new = _project_qkv(params, cfg, x, positions)
-        tree_cache = _cache_write(tree_cache, {"k": k_new, "v": v_new},
-                                  tree_write_index)
+        tree_cache = _cache_write_rows(tree_cache, {"k": k_new, "v": v_new},
+                                       tree_write_index)
         k_past, v_past = model_cache["k"], model_cache["v"]
         k_tree, v_tree = tree_cache["k"], tree_cache["v"]
         scale = None
@@ -402,7 +427,7 @@ def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
         out = kops.tree_attention(
             q.swapaxes(1, 2), k_past.swapaxes(1, 2), v_past.swapaxes(1, 2),
             k_tree.swapaxes(1, 2), v_tree.swapaxes(1, 2), tree_mask,
-            model_len).swapaxes(1, 2)
+            mlen).swapaxes(1, 2)
         y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
         return y, tree_cache
     # Joint softmax over [past ‖ tree] (paper computes the two score blocks

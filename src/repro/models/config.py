@@ -54,13 +54,21 @@ class SSMConfig:
         return self.d_inner(d_model) // self.head_dim
 
 
+# hybrid block-pattern characters -> sub-layer kinds (single source of
+# truth for ModelConfig.block_kind and transformer.unit_kinds); any other
+# character means local attention
+PATTERN_KINDS = {"r": "rglru", "s": "ssm"}
+
+
 @dataclasses.dataclass(frozen=True)
 class RGLRUConfig:
     """RecurrentGemma RG-LRU + local attention hybrid."""
 
     lru_width: int = 0  # 0 => d_model
     d_conv: int = 4
-    # repeating block pattern: 'r' = recurrent, 'a' = local attention.
+    # repeating block pattern: 'r' = RG-LRU recurrent, 's' = Mamba-2 SSD
+    # (requires ``ModelConfig.ssm``; Jamba-style attn+ssm hybrids),
+    # anything else = local attention.
     pattern: str = "rra"
     window: int = 2048
 
@@ -127,7 +135,7 @@ class ModelConfig:
             return "ssm"
         if self.rglru is not None:
             c = self.rglru.pattern[layer % len(self.rglru.pattern)]
-            return "rglru" if c == "r" else "local"
+            return PATTERN_KINDS.get(c, "local")
         return "attn"
 
     def layer_is_moe(self, layer: int) -> bool:

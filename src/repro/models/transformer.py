@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
+from repro.models import config as config_mod
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
@@ -44,7 +45,8 @@ def unit_kinds(cfg: ModelConfig) -> Tuple[str, ...]:
     if cfg.family == "ssm":
         return ("ssm",)
     if cfg.rglru is not None:
-        return tuple("rglru" if c == "r" else "local" for c in cfg.rglru.pattern)
+        return tuple(config_mod.PATTERN_KINDS.get(c, "local")
+                     for c in cfg.rglru.pattern)
     return ("attn",)
 
 
@@ -276,9 +278,10 @@ class Ctx:
     """Static + traced context threaded through the layers."""
     mode: str                       # full | decode | tree
     positions: Any                  # [B,S] absolute positions
-    cache_len: Any = None           # traced scalar: committed tokens
-    tree_write_index: Any = None    # traced scalar: tree buffer write offset
-    tree_mask: Any = None           # [n, Tcap]
+    cache_len: Any = None           # committed tokens: scalar (decode) or
+                                    # per-row [B] (tree mode)
+    tree_write_index: Any = None    # [B] per-row tree buffer write offsets
+    tree_mask: Any = None           # [B, n, Tcap] per-row ancestor masks
     enc_kv: Any = None              # per-layer (k, v) list for cross-attn
     enc_kv_idx: int = 0
     window_override: int = -1       # -1: use config default per kind
@@ -317,15 +320,33 @@ def _apply_sublayer(p, cfg: ModelConfig, kind: str, x, cache, tree_cache,
                 tree_mask=ctx.tree_mask, window=win)
             cache = None  # model cache is read-only here; don't re-emit it
     elif kind == "ssm":
+        if ctx.mode == "tree":
+            # a width-w tree layer has no single recurrent successor state;
+            # recurrent architectures speculate in chain-mode instead
+            # (core/chain.py) — fail loudly rather than decode garbage
+            raise NotImplementedError(
+                "tree-verify through an ssm sub-layer is undefined; use "
+                "chain-mode speculation (repro.core.chain) for recurrent "
+                "architectures")
         if ctx.mode == "full":
-            init_s = None if cache is None else cache["ssd"]
-            y, state = ssm_mod.ssm_forward(p["mixer"], cfg, h,
-                                           initial_state=init_s)
+            # full mode is always a from-scratch prefill (positions start at
+            # 0), so the SSD scan must seed from the zero state — a recycled
+            # KV-arena slot's ``cache["ssd"]`` holds the PREVIOUS occupant's
+            # final recurrent state and must never leak into the new
+            # request (tests/test_serving_db.py pins fresh == recycled).
+            y, state = ssm_mod.ssm_forward(p["mixer"], cfg, h)
             cache = state if cache is not None else None
         else:  # decode
             y, cache = ssm_mod.ssm_decode(p["mixer"], cfg, h, cache)
     elif kind == "rglru":
+        if ctx.mode == "tree":
+            raise NotImplementedError(
+                "tree-verify through an rglru sub-layer is undefined; use "
+                "chain-mode speculation (repro.core.chain) for recurrent "
+                "architectures")
         if ctx.mode == "full":
+            # like the ssm branch: prefill starts the recurrence from the
+            # zero state (no ``state=`` seed), so recycled slots are clean
             y, state = rglru_mod.rglru_forward(p["mixer"], cfg, h)
             cache = state if cache is not None else None
         else:
@@ -529,9 +550,24 @@ def tree_verify_step(params, cfg: ModelConfig, node_tokens, node_positions,
 
     node_tokens: [B, n] token ids of the new layer (padded);
     node_positions: [B, n] absolute positions;
-    tree_mask: [n, Tcap] ancestor mask vs the whole tree buffer.
+    tree_mask: [B, n, Tcap] per-row ancestor mask vs the whole tree buffer
+               (a single [n, Tcap] mask broadcasts over the batch);
+    cache_len: [B] per-row committed-prefix length (scalar broadcasts);
+    tree_write_index: [B] per-row tree-buffer write offset (scalar
+               broadcasts).
+    Rows are fully independent — SpecPipe-DB stacks every in-flight
+    request's deepest layer here for ONE fused dispatch per timestep; the
+    single-request engine is the B=1 case of the same code.
     Returns (logits [B, n, V], tree_caches).
     """
+    b = node_tokens.shape[0]
+    cache_len = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+    tree_write_index = jnp.broadcast_to(
+        jnp.asarray(tree_write_index, jnp.int32).reshape(-1), (b,))
+    if tree_mask.ndim == 2:
+        tree_mask = tree_mask[None]
+    tree_mask = jnp.broadcast_to(tree_mask, (b, *tree_mask.shape[1:]))
     x = embed(params["embed"], node_tokens)
     ctx = Ctx(mode="tree", positions=node_positions, cache_len=cache_len,
               tree_write_index=tree_write_index, tree_mask=tree_mask,
@@ -550,12 +586,56 @@ def cache_len_axis(name: str, arr) -> int:
     return arr.ndim - CACHE_LEN_AXIS_FROM_END[name]
 
 
+# --------------------------------------------------------------------------
+# slot-stacked cache views (SpecPipe-DB KV arena)
+# --------------------------------------------------------------------------
+def _slot_axis(path) -> int:
+    """Axis carrying the slot/batch dim of an arena buffer: stacked
+    repeated-unit buffers ("stack") have a leading reps dim, so their slot
+    axis is 1; prefix/tail/units buffers use axis 0.  Works for KV buffers
+    and recurrent state dicts alike."""
+    return 1 if path and getattr(path[0], "key", None) == "stack" else 0
+
+
+def slice_cache_rows(cache, start: int, size: int):
+    """Static slice of ``size`` slot rows starting at ``start`` from every
+    buffer of a slot-stacked cache pytree (``None`` leaves pass through)."""
+
+    def f(path, buf):
+        if buf is None:
+            return None
+        return jax.lax.slice_in_dim(buf, start, start + size,
+                                    axis=_slot_axis(path))
+
+    return jax.tree_util.tree_map_with_path(f, cache,
+                                            is_leaf=lambda x: x is None)
+
+
+def update_cache_rows(cache, rows, start: int = 0):
+    """Write a row slice (as produced by ``slice_cache_rows``) back into the
+    full slot-stacked cache pytree at slot ``start``."""
+
+    def f(path, buf, upd):
+        if buf is None:
+            return None
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, upd.astype(buf.dtype), start, axis=_slot_axis(path))
+
+    return jax.tree_util.tree_map_with_path(f, cache, rows,
+                                            is_leaf=lambda x: x is None)
+
+
 def commit_tree_node(cfg: ModelConfig, cache, tree_caches, node_idx,
                      model_len):
     """Two-level cache sync (paper §3.4.3): move one verified tree node's KV
-    from every tree cache into the model cache at position ``model_len``."""
+    from every tree cache into the model cache at position ``model_len``.
 
-    def merge(path, model_buf, tree_buf):
+    Mapped over ``tree_caches`` first with its ``None`` entries (recurrent
+    sub-layers have no tree cache) treated as leaves, so hybrid configs
+    pass their state dicts through untouched.
+    """
+
+    def merge(path, tree_buf, model_buf):
         if tree_buf is None:
             return model_buf
         name = path[-1].key
@@ -565,7 +645,47 @@ def commit_tree_node(cfg: ModelConfig, cache, tree_caches, node_idx,
             model_buf, row.astype(model_buf.dtype), model_len, axis=ax)
 
     return jax.tree_util.tree_map_with_path(
-        merge, cache, tree_caches, is_leaf=lambda x: x is None)
+        merge, tree_caches, cache, is_leaf=lambda x: x is None)
+
+
+def commit_tree_nodes(cfg: ModelConfig, cache, tree_caches, node_idx,
+                      model_len, commit_mask=None):
+    """Batched per-row two-level cache sync (SpecPipe-DB exit phase).
+
+    Row b migrates its tree-cache row ``node_idx[b]`` into its model cache
+    at position ``model_len[b]``.  Rows where ``commit_mask`` is False (no
+    flight exiting this timestep) keep their caches bit-unchanged.  The
+    batch axis of every buffer sits immediately before its length axis
+    (``cache_len_axis``), which also holds for stacked (leading ``reps``
+    dim) buffers.
+    """
+    node_idx = jnp.asarray(node_idx, jnp.int32).reshape(-1)
+    model_len = jnp.asarray(model_len, jnp.int32).reshape(-1)
+
+    def merge(path, tree_buf, model_buf):
+        if tree_buf is None:
+            return model_buf
+        name = path[-1].key
+        ax = cache_len_axis(name, model_buf)
+        bx = ax - 1                    # batch axis precedes the length axis
+        inner = ax - 1                 # length axis once batch is vmapped out
+
+        def one(mb, tb, ni, ml):
+            row = jax.lax.dynamic_slice_in_dim(tb, ni, 1, axis=inner)
+            return jax.lax.dynamic_update_slice_in_dim(
+                mb, row.astype(mb.dtype), ml, axis=inner)
+
+        upd = jax.vmap(one, in_axes=(bx, bx, 0, 0), out_axes=bx)(
+            model_buf, tree_buf, node_idx, model_len)
+        if commit_mask is not None:
+            sel_shape = [1] * model_buf.ndim
+            sel_shape[bx] = commit_mask.shape[0]
+            upd = jnp.where(jnp.asarray(commit_mask).reshape(sel_shape),
+                            upd, model_buf)
+        return upd
+
+    return jax.tree_util.tree_map_with_path(
+        merge, tree_caches, cache, is_leaf=lambda x: x is None)
 
 
 def _hidden(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,

@@ -8,20 +8,34 @@ each stage) and finished requests are replaced from the queue without
 draining the pipeline (§ dynamic batching; 1.64–2.08× vLLM throughput in
 the paper's Table).
 
-Logical model (wall-clock is priced in ``core.sim.specpipe_db_*``): one
-*global* timestep advances every active request by one ``PipeDecEngine``
-timestep — entry + proposal, then exit + commit — using per-request state
-(``DecodeState``), trees stacked in a ``core.dynbatch.TreeBatch``, and KV
-arenas handed out by ``serving.scheduler.KVArena``.  Each request's
-operation trace is identical to running it alone through
-``PipeDecEngine.generate``, so DB output is bit-equal per request
-(tests/test_serving_db.py pins this); only *when* layers run changes, never
-*what* is computed — the same argument the paper makes for losslessness.
+Fused dispatch: one *global* timestep issues exactly ONE batched
+``tree_verify`` per model (target + draft) covering every active slot —
+inputs are stacked via ``core.dynbatch.TreeBatch.deepest_layers`` (inactive
+or non-pending rows ride along masked, writing only into their own slot's
+slack region), the slot-stacked caches in ``serving.scheduler.KVArena`` are
+read/written in place, and the logits are scattered back per slot.  The
+exit phase batches the two-level cache sync the same way
+(``ModelBundle.commit_rows``).
+
+Slot-count bucketing keeps the fused path recompile-free: the dispatch
+covers the power-of-two prefix of slot rows spanning every active slot
+(1, 2, 4, …, ``max_slots``), so at most log2(slots)+1 shapes ever compile
+per model.
+
+Per-request *decisions* (flight bookkeeping, token selection, tree
+expand/prune, index remaps) run through the same ``PipeDecEngine`` phase
+methods (gather-entry / apply-fused / exit-commit) the single-request
+engine uses — that engine is literally the B=1 case of this code — so each
+request's operation trace is identical to running it alone and DB output
+is bit-equal per request (tests/test_serving_db.py pins this); only *when*
+layers run changes, never *what* is computed — the same argument the paper
+makes for losslessness.  Wall-clock is priced in ``core.sim.specpipe_db_*``.
 
 Scheduling per global timestep:
   1. refill — admit arrived requests (FIFO) onto free KV slots, running
-     their prefill (join-on-prefill);
-  2. advance — step every active request's entry/exit phases;
+     their prefill (join-on-prefill) into their arena rows;
+  2. advance — gather every active request's entry, run the fused verify,
+     then expansion and (batched-commit) exit per slot;
   3. retire — requests that hit eos or their token budget release their
      slot (retire-on-eos) for the next refill.
 """
@@ -32,11 +46,14 @@ import time
 from typing import Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dynbatch import TreeBatch
-from repro.core.pipedec import (DecodeState, GenStats, PipeDecConfig,
-                                PipeDecEngine)
-from repro.core.speculative import ModelBundle
+from repro.core.pipedec import (DecodeState, EntryInputs, GenStats,
+                                PipeDecConfig, PipeDecEngine)
+from repro.core.speculative import ModelBundle, remap_tree_caches
+from repro.models import transformer as tf
 from repro.serving.scheduler import DynamicBatchScheduler, KVArena
 
 
@@ -54,12 +71,16 @@ class DBStats:
     ``timesteps`` counts *executed* shared pipeline timesteps (idle gaps
     between sparse arrivals are fast-forwarded, not counted), so
     ``tokens_per_timestep`` prices what the pipeline does while busy and
-    aligns 1:1 with the ``occupancy`` trace.
+    aligns 1:1 with the ``occupancy`` trace.  ``verify_dispatches`` traces
+    the number of fused tree-verify calls per model per timestep (0 when
+    no slot had a pending entry, otherwise exactly 1 — the fusion the
+    equivalence test asserts via the ``ModelBundle.calls`` hook).
     """
     timesteps: int = 0
     total_commits: int = 0
     per_request: Dict[int, GenStats] = dataclasses.field(default_factory=dict)
     occupancy: List[int] = dataclasses.field(default_factory=list)
+    verify_dispatches: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def tokens_per_timestep(self) -> float:
@@ -76,7 +97,12 @@ class SpecPipeDBEngine:
     def __init__(self, target: ModelBundle, draft: ModelBundle,
                  pcfg: Optional[PipeDecConfig] = None, *,
                  max_len: int = 512, max_slots: int = 4,
-                 eos_token: Optional[int] = None):
+                 eos_token: Optional[int] = None, fused: bool = True):
+        """``fused=False`` falls back to the looped per-slot dispatch (two
+        ``tree_verify`` calls per request per timestep) — kept as the
+        reference the fused-vs-looped equivalence test pins outputs
+        against."""
+        self.fused = fused
         self.pcfg = pcfg or PipeDecConfig()
         self.inner = PipeDecEngine(target, draft, self.pcfg, max_len=max_len)
         self.arena = KVArena(
@@ -102,6 +128,161 @@ class SpecPipeDBEngine:
                         for r in self.sched.queue), default=0)
         return 64 + arrivals + per_req
 
+    def _bucket(self, rows: int) -> int:
+        """Slot-count bucketing policy: the fused dispatch covers the
+        smallest power-of-two prefix of slot rows spanning every row that
+        must participate (capped at ``max_slots``)."""
+        b = 1
+        while b < rows:
+            b *= 2
+        return min(b, self.max_slots)
+
+    # -- fused phase 1: stacked entry + ONE verify dispatch per model ----
+    def _fused_entry(self, active: Dict[int, _Active],
+                     pending: List[int]) -> None:
+        """Stack every pending slot's entry layer (via the TreeBatch's
+        vmapped deepest-layer view — no per-slot gather), run one bucketed
+        ``tree_verify_rows`` per model against the slot-stacked arena, and
+        scatter the logits back through ``apply_entry``."""
+        p, tcap = self.pcfg, self.inner.tree_buffer_capacity
+        nb = self._bucket(max(pending) + 1)
+        w = p.width
+
+        row_on = np.zeros((nb,), bool)
+        for slot in pending:
+            row_on[slot] = True
+        on = jnp.asarray(row_on)
+
+        # stacked entry views of ALL slot rows (stale/non-pending rows are
+        # masked below and only ever write into their own slack region)
+        toks_b, idx_b, valid_b, mask_b = self.trees.deepest_layers(w)
+        toks_b, mask_b = toks_b[:nb], mask_b[:nb]
+        valid_b = valid_b[:nb] & on[:, None]
+        depth_b = jnp.take_along_axis(self.trees.stacked.depth[:nb],
+                                      idx_b[:nb], axis=1)
+
+        mlen_rows = np.zeros((nb,), np.int32)
+        for slot in pending:
+            mlen_rows[slot] = active[slot].state.model_len
+        mlen = jnp.asarray(mlen_rows)
+
+        # padded rows of a pending layer sit at model_len (depth 0), exactly
+        # like the single-request gather; fully-masked slots sit at 0
+        depths = jnp.where(valid_b, depth_b, 0)
+        positions = jnp.where(on[:, None], mlen[:, None] + depths,
+                              0).astype(jnp.int32)
+        masks = jnp.pad(mask_b, ((0, 0), (0, 0),
+                                 (0, tcap - mask_b.shape[-1])))
+        masks = masks & valid_b[:, :, None]
+        tokens = jnp.where(valid_b, toks_b, 0)
+        # masked rows park their (never-attended) writes in the slack
+        # region [capacity, capacity + w) of their OWN slot's tree buffer
+        wi = jnp.where(on, self.trees.stacked.layer_start[:nb],
+                       p.capacity).astype(jnp.int32)
+        mlen = jnp.where(on, mlen, 0)
+
+        tgt, drf = self.inner.target, self.inner.draft
+        t_cache, d_cache, t_tree, d_tree = self.arena.stacked
+        v_all, t_tree = tgt.tree_verify_rows(
+            tokens, positions, masks, t_cache, mlen, t_tree, wi, bucket=nb)
+        d_all, d_tree = drf.tree_verify_rows(
+            tokens, positions, masks, d_cache, mlen, d_tree, wi, bucket=nb)
+        self.arena.set_tree_caches(t_tree, d_tree)
+
+        # one host sync for every slot's node indices (the only entry
+        # metadata the bookkeeping needs)
+        node_idx_b = np.where(np.asarray(valid_b), np.asarray(idx_b[:nb]),
+                              -1).astype(np.int32)
+        for slot in pending:
+            entry = EntryInputs(tokens=tokens[slot],
+                                positions=positions[slot],
+                                mask=masks[slot], write_index=wi[slot],
+                                node_idx=node_idx_b[slot])
+            self.inner.apply_entry(active[slot].state, entry,
+                                   v_all[slot], d_all[slot])
+
+    # -- fused phase 2: batched two-level cache sync ---------------------
+    def _fused_commit(self, active: Dict[int, _Active],
+                      picks: Dict[int, tuple]) -> None:
+        """One batched per-row commit per model: every slot with an exiting
+        flight migrates its tree-buffer row 0 into its model cache at its
+        own ``model_len``; masked rows stay bit-unchanged."""
+        nb = self.max_slots   # masked rows are untouched; no slicing needed
+        mask_rows = np.zeros((nb,), bool)
+        mlen_rows = np.zeros((nb,), np.int32)
+        for slot in picks:
+            mask_rows[slot] = True
+            mlen_rows[slot] = active[slot].state.model_len
+        commit_mask = jnp.asarray(mask_rows)
+        mlen = jnp.asarray(mlen_rows)
+        node0 = jnp.zeros((nb,), jnp.int32)   # row 0 is always the root
+
+        tgt, drf = self.inner.target, self.inner.draft
+        t_cache, d_cache, t_tree, d_tree = self.arena.stacked
+        t_cache = tgt.commit_rows(t_cache, t_tree, node0, mlen, commit_mask)
+        d_cache = drf.commit_rows(d_cache, d_tree, node0, mlen, commit_mask)
+        self.arena.set_model_caches(t_cache, d_cache)
+
+    def _remap_arena_rows(self, slot: int, st: DecodeState,
+                          index_map) -> None:
+        """Post-prune tree-cache compaction on this slot's arena rows."""
+        cap = self.pcfg.capacity
+        _, _, t_tree, d_tree = self.arena.stacked
+        t_row = remap_tree_caches(tf.slice_cache_rows(t_tree, slot, 1),
+                                  index_map, cap)
+        d_row = remap_tree_caches(tf.slice_cache_rows(d_tree, slot, 1),
+                                  index_map, cap)
+        self.arena.set_tree_caches(
+            tf.update_cache_rows(t_tree, t_row, slot),
+            tf.update_cache_rows(d_tree, d_row, slot))
+
+    # ------------------------------------------------------------------
+    def _advance_fused(self, active: Dict[int, _Active],
+                       stepping: List[int]) -> None:
+        """One shared pipeline timestep over all stepping slots: gather
+        entries → ONE fused verify per model → per-slot expansion →
+        batched commit → per-slot prune/remap."""
+        for slot in stepping:
+            st = active[slot].state
+            st.t += 1
+            st.stats.timesteps = st.t
+            st.tree = self.trees.get_row(slot)
+
+        # phase 1: stacked gather-entry, ONE fused verify per model (the
+        # pending flag alone decides participation — the entry inputs come
+        # from the stacked TreeBatch views, not a per-slot gather)
+        pending = [s for s in stepping if active[s].state.pending]
+        if pending:
+            self._fused_entry(active, pending)
+        self.stats.verify_dispatches.append(1 if pending else 0)
+
+        # expansion per slot (tree ops only; may defer at the caps)
+        for slot in stepping:
+            self.inner.maybe_expand(active[slot].state)
+
+        # phase 2: exit — batched commit, then per-slot prune/remap
+        picks = {}
+        for slot in stepping:
+            ev = self.inner.exit_pick(active[slot].state)
+            if ev is not None:
+                picks[slot] = ev
+        if picks:
+            self._fused_commit(active, picks)
+        for slot in stepping:
+            st = active[slot].state
+            commits = 0
+            if slot in picks:
+                fl, root_row = picks[slot]
+                commits = self.inner.exit_apply(
+                    st, fl, root_row,
+                    commit_caches=lambda _st: None,  # batched above
+                    remap_caches=lambda _st, imap, s=slot:
+                        self._remap_arena_rows(s, _st, imap))
+            st.stats.commits_per_step.append(commits)
+            self.trees.set_row(slot, st.tree)
+            st.tree = None
+
+    # ------------------------------------------------------------------
     def run(self, key: Optional[jax.Array] = None):
         """Drive the shared pipeline schedule until queue and slots drain.
         Returns {uid: Result} (same shape as ``ServingEngine.run``)."""
@@ -121,12 +302,18 @@ class SpecPipeDBEngine:
                 if nxt is not None and nxt > now:
                     now = nxt
 
-            # 1. refill: join-on-prefill for arrived requests
+            # 1. refill: join-on-prefill for arrived requests — prefill
+            # runs on the slot's arena rows and is written straight back
+            # (looped mode: the request keeps its row views instead)
             for req, slot in self.sched.admit(now):
                 rkey = jax.random.fold_in(base_key, req.uid)
                 st = self.inner.init_state(
                     req.prompt, req.max_new_tokens, key=rkey,
                     caches=self.arena.caches(slot), eos=self.eos_token)
+                if self.fused:
+                    self.arena.store(slot, st.caches())
+                    st.t_cache = st.d_cache = None
+                    st.t_tree = st.d_tree = None
                 self.trees.adopt_row(slot, st.tree)
                 st.tree = None  # canonical copy lives in the TreeBatch
                 active[slot] = _Active(req, st, time.perf_counter())
@@ -134,16 +321,20 @@ class SpecPipeDBEngine:
             # 2. advance: every active request shares this timestep
             now += 1
             self.stats.timesteps += 1
-            for slot in sorted(active):
-                st = active[slot].state
-                if st.done:   # finished at admission (eos-on-first, 0 budget)
-                    continue
-                st.tree = self.trees.get_row(slot)
-                self.inner.step(st)
-                self.trees.set_row(slot, st.tree)
-                st.tree = None
+            stepping = [s for s in sorted(active)
+                        if not active[s].state.done]
+            if self.fused:
+                self._advance_fused(active, stepping)
+            else:
+                for slot in stepping:
+                    st = active[slot].state
+                    st.tree = self.trees.get_row(slot)
+                    self.inner.step(st)
+                    self.trees.set_row(slot, st.tree)
+                    st.tree = None
 
-            # 3. retire: free slots for the next refill
+            # 3. retire: free slots for the next refill (fused mode: the
+            # slot's caches already live in the stacked arena)
             for slot in [s for s, a in active.items() if a.state.done]:
                 a = active.pop(slot)
                 st = a.state
@@ -153,7 +344,9 @@ class SpecPipeDBEngine:
                 self.stats.per_request[a.req.uid] = st.stats
                 self.stats.total_commits += st.stats.commits
                 self.trees.release_row(slot)
-                self.sched.retire(a.req.uid, slot, now, caches=st.caches())
+                self.sched.retire(
+                    a.req.uid, slot, now,
+                    caches=None if self.fused else st.caches())
 
             occ = len(active)
             self.stats.occupancy.append(occ)

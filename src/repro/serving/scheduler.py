@@ -4,12 +4,15 @@ The paper's dynamic batching keeps the pipeline full of *different*
 requests: whenever one finishes, the next queued request joins at its
 prefill and decodes alongside the rest.  Two pieces implement that here:
 
-  * ``KVArena`` — a fixed pool of per-slot cache arenas (target + draft
-    model caches and the two tree caches).  Slots are recycled across
-    requests without zeroing: every attention mask is bounded by the new
-    occupant's ``model_len`` / ancestor mask, so a previous occupant's
-    stale rows are never attended and outputs are unchanged (the
-    equivalence tests pin this).
+  * ``KVArena`` — slot-stacked cache arenas (target + draft model caches
+    and the two tree caches, each ONE pytree with a leading slot axis) so
+    the fused per-timestep tree-verify dispatch reads every in-flight
+    request from one buffer; per-slot row views serve admission prefill
+    and retire.  Slots are recycled across requests without zeroing:
+    every attention mask is bounded by the new occupant's ``model_len`` /
+    ancestor mask, and recurrent (ssm/rglru) state is re-seeded from zero
+    at prefill, so a previous occupant's stale rows and state never leak
+    (the equivalence tests pin this).
   * ``DynamicBatchScheduler`` — FIFO arrival queue with per-request
     ``arrival_t`` (in pipeline timesteps), admission onto free slots each
     timestep (join-on-prefill), and retire-on-completion (eos or token
@@ -21,10 +24,27 @@ import collections
 import dataclasses
 from typing import Deque, Dict, List, Optional, Tuple
 
+import jax
+
+from repro.models import transformer as tf
+
+# Row write-back donates the full arena buffer so XLA can update the slot
+# rows in place (on backends without donation this degrades to a copy —
+# same result, just not O(1)).  ``start`` is static: one compile per slot.
+_store_rows = jax.jit(tf.update_cache_rows, static_argnames=("start",),
+                      donate_argnums=(0,))
+
 
 class KVArena:
-    """Fixed pool of per-slot KV cache arenas, allocated lazily and
-    recycled across requests."""
+    """Slot-stacked KV cache arenas, allocated lazily and recycled across
+    requests.
+
+    All four cache pytrees carry a leading *slot* axis (buffers of the
+    repeated-unit "stack" layout carry it right after their reps dim) —
+    the layout the fused SpecPipe-DB dispatch and the batched per-row
+    commit read/write in place.  ``caches(slot)`` / ``store(slot, ...)``
+    expose per-slot row views for admission prefill and retire.
+    """
 
     def __init__(self, target, draft, *, slots: int, max_len: int,
                  tree_capacity: int):
@@ -34,7 +54,15 @@ class KVArena:
             slots, max_len, tree_capacity
         self._free: List[int] = list(range(slots - 1, -1, -1))  # pop -> 0..
         self._in_use: set = set()
-        self._arenas: List[Optional[tuple]] = [None] * slots
+        self._stacked: Optional[list] = None
+
+    def _ensure(self) -> None:
+        if self._stacked is None:
+            self._stacked = [
+                self.target.init_cache(self.slots, self.max_len),
+                self.draft.init_cache(self.slots, self.max_len),
+                self.target.init_tree_caches(self.slots, self.tree_capacity),
+                self.draft.init_tree_caches(self.slots, self.tree_capacity)]
 
     @property
     def n_free(self) -> int:
@@ -51,23 +79,35 @@ class KVArena:
         if slot in self._in_use:
             raise RuntimeError(f"KV slot {slot} double-allocated")
         self._in_use.add(slot)
-        if self._arenas[slot] is None:
-            self._arenas[slot] = (
-                self.target.init_cache(1, self.max_len),
-                self.draft.init_cache(1, self.max_len),
-                self.target.init_tree_caches(1, self.tree_capacity),
-                self.draft.init_tree_caches(1, self.tree_capacity))
+        self._ensure()
         return slot
 
     def caches(self, slot: int) -> tuple:
+        """Per-slot row views (t_cache, d_cache, t_tree, d_tree), each a
+        batch-1 cache pytree sliced out of the stacked arena."""
         assert slot in self._in_use, f"slot {slot} not allocated"
-        return self._arenas[slot]
+        return tuple(tf.slice_cache_rows(c, slot, 1) for c in self._stacked)
 
     def store(self, slot: int, caches: tuple) -> None:
-        """Hand a request's final cache buffers back to the pool so the
-        next occupant reuses them (stale rows are masked, never zeroed)."""
+        """Write a request's (t_cache, d_cache, t_tree, d_tree) row views
+        back into the stacked arena so the next occupant reuses the slot
+        (stale rows are masked, never zeroed)."""
         assert slot in self._in_use, f"slot {slot} not allocated"
-        self._arenas[slot] = caches
+        self._stacked = [_store_rows(full, row, start=slot)
+                         for full, row in zip(self._stacked, caches)]
+
+    # -- fused-path access (whole-arena pytrees) ------------------------
+    @property
+    def stacked(self) -> tuple:
+        """(t_cache, d_cache, t_tree, d_tree), slot axis leading."""
+        self._ensure()
+        return tuple(self._stacked)
+
+    def set_model_caches(self, t_cache, d_cache) -> None:
+        self._stacked[0], self._stacked[1] = t_cache, d_cache
+
+    def set_tree_caches(self, t_tree, d_tree) -> None:
+        self._stacked[2], self._stacked[3] = t_tree, d_tree
 
     def free(self, slot: int) -> None:
         if slot not in self._in_use:

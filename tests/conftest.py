@@ -140,3 +140,15 @@ def tiny_hybrid():
         name="t-hyb", family="hybrid", num_layers=5, d_model=64, num_heads=4,
         num_kv_heads=1, d_ff=128, vocab_size=128,
         rglru=RGLRUConfig(lru_width=64, window=8, pattern="rra"))
+
+
+@pytest.fixture(scope="session")
+def tiny_hybrid_ssm():
+    """Jamba-style attn+ssm hybrid (pattern 's' = Mamba-2 SSD sub-layer):
+    the recycled-KV-arena regression config — its SSD prefill must seed
+    from the zero state, never a previous slot occupant's."""
+    return ModelConfig(
+        name="t-hyb-ssm", family="hybrid", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+        ssm=SSMConfig(d_state=16, head_dim=16, chunk=8),
+        rglru=RGLRUConfig(pattern="sa", window=0))

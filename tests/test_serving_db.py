@@ -186,7 +186,109 @@ def test_treebatch_rows_match_tree_lib():
 
 
 # --------------------------------------------------------------------------
-# (c) property test over random arrival orders
+# (c) fused dispatch: ONE batched tree-verify per model per timestep
+# --------------------------------------------------------------------------
+def test_db_fused_single_dispatch_per_timestep(bundles):
+    """With N active slots, one global timestep issues exactly one target
+    and one draft tree-verify dispatch (counted via the ModelBundle.calls
+    hook), and every per-request output still bit-matches the
+    single-request engine."""
+    target, draft = bundles
+    reqs = _mk_reqs(7, 4, arrivals=[0, 0, 1, 4], max_new=[5, 4, 6, 3])
+    want = _single_outputs(bundles, reqs)
+
+    eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN, max_slots=3)
+    for r in reqs:
+        eng.submit(r)
+    before = {b: dict(b.calls) for b in (target, draft)}
+    res = eng.run()
+
+    for uid, tokens in want.items():
+        np.testing.assert_array_equal(res[uid].tokens, tokens)
+    assert eng.stats.peak_occupancy >= 2, "slots actually shared"
+
+    disp = eng.stats.verify_dispatches
+    assert len(disp) == eng.stats.timesteps
+    assert max(disp) == 1, "never more than one fused dispatch per timestep"
+    for b in (target, draft):
+        fused = b.calls["tree_verify_rows"] - \
+            before[b].get("tree_verify_rows", 0)
+        looped = b.calls["tree_verify"] - before[b].get("tree_verify", 0)
+        assert fused == sum(disp), f"{b.cfg.name}: one fused call per " \
+            "timestep with pending entries"
+        assert looped == 0, f"{b.cfg.name}: no per-slot dispatch in DB mode"
+
+
+def test_db_fused_bitmatches_looped_and_single(bundles):
+    """Fused-vs-looped equivalence under staggered arrivals and slot
+    churn: the fused entry bit-matches both the per-slot loop
+    (``fused=False``) and the single-request engine, per uid."""
+    target, draft = bundles
+    reqs = _mk_reqs(8, 5, arrivals=[0, 1, 2, 6, 8], max_new=[4, 5, 3, 6, 4])
+    want = _single_outputs(bundles, reqs)
+
+    outs = {}
+    for fused in (True, False):
+        eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                               max_slots=2, fused=fused)
+        for r in reqs:
+            eng.submit(r)
+        outs[fused] = eng.run()
+    for uid, tokens in want.items():
+        np.testing.assert_array_equal(outs[True][uid].tokens, tokens,
+                                      err_msg=f"fused vs single uid={uid}")
+        np.testing.assert_array_equal(outs[False][uid].tokens, tokens,
+                                      err_msg=f"looped vs single uid={uid}")
+
+
+# --------------------------------------------------------------------------
+# (d) recycled-arena regression: recurrent state must reset at prefill
+# --------------------------------------------------------------------------
+def test_recycled_slot_matches_fresh_slot_hybrid_ssm(tiny_hybrid_ssm,
+                                                     tiny_draft):
+    """Hybrid (ssm-layer) config on a recycled KV slot: prefill must seed
+    the SSD scan from the zero state, not the previous occupant's final
+    recurrent state — fresh-slot and recycled-slot outputs are identical.
+    (Failed before the _apply_sublayer ssm full-mode fix.)"""
+    target = ModelBundle(tf.init_model(jax.random.PRNGKey(3),
+                                       tiny_hybrid_ssm), tiny_hybrid_ssm)
+    draft = ModelBundle(tf.init_model(jax.random.PRNGKey(9), tiny_draft),
+                        tiny_draft)
+    eng = PipeDecEngine(target, draft, PCFG, max_len=MAX_LEN)
+    arena = KVArena(target, draft, slots=1, max_len=MAX_LEN,
+                    tree_capacity=eng.tree_buffer_capacity)
+    p_a = np.array([3, 1, 4, 1, 5, 9, 2], np.int32)
+    p_b = np.array([9, 2, 6], np.int32)
+
+    # occupy the slot with request A, then retire it (caches stored back)
+    slot = arena.alloc()
+    st_a = eng.init_state(p_a, 0, caches=arena.caches(slot))
+    arena.store(slot, st_a.caches())
+    arena.free(slot)
+
+    # recycled slot for request B vs a fresh-cache reference
+    slot2 = arena.alloc()
+    assert slot2 == slot
+    st_b = eng.init_state(p_b, 0, caches=arena.caches(slot2))
+    ref = eng.init_state(p_b, 0)
+    assert st_b.committed[0] == ref.committed[0]
+
+    # the prefill logits themselves are bit-identical
+    lg_rec, _ = target.prefill(jnp.asarray(p_b, jnp.int32)[None],
+                               arena.caches(slot2)[0])
+    lg_fresh, _ = target.prefill(jnp.asarray(p_b, jnp.int32)[None],
+                                 target.init_cache(1, MAX_LEN))
+    np.testing.assert_array_equal(np.asarray(lg_rec), np.asarray(lg_fresh))
+
+    # tree-verify through a recurrent sub-layer has no defined semantics
+    # (chain-mode covers recurrent architectures) — it must fail loudly
+    # instead of silently decoding garbage
+    with pytest.raises(NotImplementedError, match="chain-mode"):
+        eng.generate(p_b, 2)
+
+
+# --------------------------------------------------------------------------
+# (e) property test over random arrival orders
 # --------------------------------------------------------------------------
 @settings(max_examples=5, deadline=None)
 @given(seed=st.integers(0, 1000))
