@@ -8,9 +8,21 @@ times as Fig. 5, acceptance from real runs.
 dispatch landed (``ModelBundle.tree_verify_rows``: ONE batched tree-verify
 per model per timestep over the slot-stacked KV arena) this is the pass
 ``serving.dynbatch.SpecPipeDBEngine`` actually executes, not just the
-priced regime."""
+priced regime.  The ``specpipe_db_sharded`` curve prices the same schedule
+on the pipelined deployment (``serving.executor.ShardedPipelineExecutor``:
+per-hop ppermute transfer explicit; steady-state overlap), and
+``_flush`` its synchronous-flush variant (what the executor dispatches
+today — bit-exactness first, overlap is the async-stage roadmap item).
+
+Besides printing, ``run()`` writes a machine-readable ``BENCH_fig8.json``
+(modelled curves + a small *measured* SpecPipe-DB engine run with
+tokens/timestep, a TBT proxy, and the executor dispatch counts) so the
+perf trajectory is tracked across PRs.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -31,12 +43,45 @@ def db_batch_scale(w: int):
                                                   batch=batch) / base
 
 
-def run(verbose: bool = True, n_stages: int = 14, w: int = 16):
+def measure_db_engine(n_stages: int, w: int, c: int = 4, *,
+                      slots: int = 3, new_tokens: int = 24):
+    """Small REAL SpecPipe-DB run (local fused executor): measured
+    tokens/timestep, per-request timesteps-per-token (TBT in timestep
+    units), and the executor dispatch counters the fusion tests pin."""
+    from repro.core.pipedec import PipeDecConfig
+    from repro.serving import Request, SpecPipeDBEngine
+
+    target, draft = common.trained_pair()
+    prompts = common.eval_prompts(n=4, length=32)
+    eng = SpecPipeDBEngine(
+        target, draft, PipeDecConfig(n_stages=n_stages, width=w, branch=c),
+        max_len=256, max_slots=slots)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, new_tokens, arrival_t=2 * uid))
+    res = eng.run()
+    tbt = [1.0 / max(s.tokens_per_timestep, 1e-9)
+           for s in (r.stats for r in res.values())]
+    return {
+        "slots": slots,
+        "requests": len(prompts),
+        "new_tokens": new_tokens,
+        "tokens_per_timestep": round(eng.stats.tokens_per_timestep, 4),
+        "timesteps": eng.stats.timesteps,
+        "peak_occupancy": eng.stats.peak_occupancy,
+        "timesteps_per_token_mean": round(float(np.mean(tbt)), 4),
+        "dispatch_counts": dict(eng.executor.calls),
+        "verify_dispatches_total": sum(eng.stats.verify_dispatches),
+    }
+
+
+def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
+        out_json: str = "BENCH_fig8.json"):
     t0 = time.perf_counter()
     tps, acc, stpp_acc = measure_acceptance(n_stages, w=w)
     hw = hardware(n_stages, w)
     scale = db_batch_scale(w)
     rows = []
+    curves = []
     if verbose:
         print("# Fig8: throughput (tokens/s, modelled) vs concurrency")
     for batch in (1, 2, 4, 8):
@@ -47,15 +92,53 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16):
         thr_db = sim.specpipe_db_throughput(hw, batch, tps,
                                             batch_scale=scale)
         tbt_db = sim.specpipe_db_tbt(hw, batch, tps, batch_scale=scale)
+        thr_sh = sim.specpipe_db_sharded_throughput(hw, batch, tps,
+                                                    batch_scale=scale)
+        thr_fl = sim.specpipe_db_sharded_throughput(
+            hw, batch, tps, batch_scale=scale, flush=True)
+        tbt_sh = sim.specpipe_db_sharded_tbt(hw, batch, tps,
+                                             batch_scale=scale)
+        curves.append({
+            "batch": batch, "pp": thr_pp, "stpp": thr_st,
+            "pipedec": thr_pd, "specpipe_db": thr_db,
+            "specpipe_db_tbt_s": tbt_db,
+            "specpipe_db_sharded": thr_sh,
+            "specpipe_db_sharded_flush": thr_fl,
+            "specpipe_db_sharded_tbt_s": tbt_sh,
+        })
         rows.append((f"fig8_batch{batch}",
                      (time.perf_counter() - t0) * 1e6,
                      f"pp={thr_pp:.1f};stpp={thr_st:.1f};"
                      f"pipedec={thr_pd:.1f};specpipe_db={thr_db:.1f};"
+                     f"sharded={thr_sh:.1f};sharded_flush={thr_fl:.1f};"
                      f"db_tbt_ms={tbt_db*1e3:.2f}"))
         if verbose:
             print(f"  batch={batch}: PP {thr_pp:8.1f}  STPP {thr_st:8.1f}  "
-                  f"PipeDec {thr_pd:8.1f}  SpecPipe-DB {thr_db:8.1f} tok/s "
+                  f"PipeDec {thr_pd:8.1f}  SpecPipe-DB {thr_db:8.1f}  "
+                  f"sharded {thr_sh:8.1f} (flush {thr_fl:8.1f}) tok/s "
                   f"(TBT {tbt_db*1e3:.2f} ms)")
+
+    measured = measure_db_engine(n_stages, w)
+    if verbose:
+        print(f"  measured DB engine: "
+              f"{measured['tokens_per_timestep']:.2f} tokens/timestep, "
+              f"{measured['verify_dispatches_total']} fused dispatches in "
+              f"{measured['timesteps']} timesteps")
+    payload = {
+        "n_stages": n_stages, "width": w,
+        "acceptance": {"pipedec_tokens_per_timestep": tps,
+                       "pipedec_acceptance": acc,
+                       "stpp_mean_accepted": stpp_acc},
+        "modelled_tokens_per_s": curves,
+        "measured_engine": measured,
+    }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        rows.append(("fig8_json", (time.perf_counter() - t0) * 1e6,
+                     os.path.abspath(out_json)))
+        if verbose:
+            print(f"  wrote {os.path.abspath(out_json)}")
     return rows
 
 

@@ -13,7 +13,8 @@ from repro.core.speculative import ModelBundle
 from repro.data import ByteCorpus, DataConfig, synthetic_corpus
 from repro.launch.train import train
 from repro.models.config import ModelConfig
-from repro.serving import Request, ServingEngine
+from repro.serving import (Request, ServingEngine, ShardedPipelineExecutor,
+                           SpecPipeDBEngine)
 
 TARGET = ModelConfig(name="srv-target", family="dense", num_layers=4,
                      d_model=256, num_heads=8, num_kv_heads=2, d_ff=704,
@@ -69,25 +70,58 @@ def main():
           f"PP for every request ✓")
 
     print("\n== mode=pipedec-db (SpecPipe-DB dynamic batching, staggered "
-          "arrivals) ==")
+          "arrivals, streaming) ==")
     db = ServingEngine(target, draft, mode="pipedec-db", max_batch=3,
                        pipedec=pcfg)
     for r in reqs:
         # stagger arrivals: a new request every 4 pipeline timesteps
         db.submit(Request(r.uid, r.prompt, r.max_new_tokens,
                           arrival_t=4 * r.uid))
-    db_results = db.run()
+    # streaming: tokens arrive at COMMIT time (not at retire) — collect
+    # (uid, token, timestep) and verify the prefix matches the final result
+    streamed = {}
+    db_results = db.run(
+        on_token=lambda uid, tok, t: streamed.setdefault(uid, []).append(tok))
     for uid, res in sorted(db_results.items()):
         adm = db.db_stats.per_request[uid]
         print(f"  req {uid}: acc={adm.acceptance:.2f} "
-              f"tokens/timestep={adm.tokens_per_timestep:.2f}")
+              f"tokens/timestep={adm.tokens_per_timestep:.2f} "
+              f"streamed={len(streamed[uid])} tokens")
         assert np.array_equal(res.tokens, pp_results[uid].tokens), \
             "SpecPipe-DB output must equal the PP output (lossless)"
+        assert np.array_equal(np.asarray(streamed[uid]), res.tokens), \
+            "streamed prefix must equal the final result"
     s = db.db_stats
     print(f"\nDB: {s.timesteps} shared timesteps, "
           f"{s.total_commits} tokens, "
           f"{s.tokens_per_timestep:.2f} tokens/timestep aggregate, "
           f"peak occupancy {s.peak_occupancy}; outputs identical to PP ✓")
+
+    print("\n== executor API: same engine, pluggable compute backend ==")
+    # default backend = LocalFusedExecutor (fused single-device dispatch).
+    # ShardedPipelineExecutor runs the identical logical schedule on the
+    # n-stage pipelined deployment (stage-partitioned target, ppermute
+    # activation ring).  On a 1-device host the mesh has one stage; run
+    #   XLA_FLAGS=--xla_force_host_platform_device_count=8 ...
+    # (or a real multi-device host) for one stage per device.
+    import jax
+    sharded = ShardedPipelineExecutor(
+        target, draft, slots=3, max_len=512,
+        tree_capacity=pcfg.tree_buffer_capacity, capacity=pcfg.capacity,
+        n_stages=len(jax.devices()))
+    dbx = SpecPipeDBEngine(target, draft, pcfg, max_slots=3,
+                           executor=sharded)
+    for r in reqs:
+        dbx.submit(Request(r.uid, r.prompt, r.max_new_tokens,
+                           arrival_t=4 * r.uid))
+    shard_results = dbx.run()
+    for uid, res in sorted(shard_results.items()):
+        assert np.array_equal(res.tokens, pp_results[uid].tokens), \
+            "sharded executor output must be bit-identical too"
+    print(f"  {sharded.n_stages}-stage mesh: "
+          f"{dbx.stats.tokens_per_timestep:.2f} tokens/timestep, "
+          f"{sharded.calls['pipeline_verify']} batched pipeline dispatches "
+          f"in {dbx.stats.timesteps} timesteps; outputs identical ✓")
 
 
 if __name__ == "__main__":

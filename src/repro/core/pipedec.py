@@ -64,6 +64,13 @@ class PipeDecConfig:
     def capacity(self) -> int:
         return 1 + self.width * self.depth_cap
 
+    @property
+    def tree_buffer_capacity(self) -> int:
+        """Tree KV buffer rows: ``capacity`` plus width-w slack so every
+        fixed-width layer write (and masked DB rows parked at
+        ``capacity``) fits without clamping."""
+        return self.capacity + self.width
+
 
 @dataclasses.dataclass
 class Flight:
@@ -134,6 +141,7 @@ class DecodeState:
     t: int = 0                # local timestep counter
     eos: Optional[int] = None
     eos_hit: bool = False
+    sampling: Optional[SamplingParams] = None  # per-request (None => cfg's)
 
     @property
     def done(self) -> bool:
@@ -162,13 +170,15 @@ class PipeDecEngine:
 
     @property
     def tree_buffer_capacity(self) -> int:
-        return self.pcfg.capacity + self.pcfg.width  # slack for fixed-w writes
+        return self.pcfg.tree_buffer_capacity
 
     # ------------------------------------------------------------------
     def init_state(self, prompt: np.ndarray, max_new_tokens: int,
                    key: Optional[jax.Array] = None,
                    max_timesteps: Optional[int] = None, *,
-                   caches=None, eos: Optional[int] = None) -> DecodeState:
+                   caches=None, eos: Optional[int] = None,
+                   sampling: Optional[SamplingParams] = None,
+                   prefill_fn=None) -> DecodeState:
         """Prefill both models and commit the first token.
 
         ``caches`` optionally supplies recycled (t_cache, d_cache, t_tree,
@@ -176,22 +186,38 @@ class PipeDecEngine:
         prompt prefix and every attention mask is bounded by ``model_len``
         / the ancestor mask, so stale rows from a previous occupant are
         never attended and outputs are unchanged.
+
+        ``prefill_fn`` hands the prefill to an executor backend that owns
+        the cache storage (``serving.executor.PipelineExecutor.prefill``):
+        it receives the [1, len] prompt, fills both models' caches
+        wherever the backend keeps them, and returns the target's
+        last-position logits; the state then carries no cache pytrees of
+        its own (they live in the executor's arena).
+
+        ``sampling`` overrides the engine-global ``pcfg.sampling`` for
+        this request only (per-request temperature/top-k/top-p — mixed
+        greedy/stochastic batches under SpecPipe-DB).
         """
         p = self.pcfg
         key = key if key is not None else jax.random.PRNGKey(0)
         tcap = self.tree_buffer_capacity
+        sp = sampling if sampling is not None else p.sampling
 
         tgt, drf = self.target, self.draft
-        if caches is None:
-            t_cache = tgt.init_cache(1, self.max_len)
-            d_cache = drf.init_cache(1, self.max_len)
-            t_tree = tgt.init_tree_caches(1, tcap)
-            d_tree = drf.init_tree_caches(1, tcap)
-        else:
-            t_cache, d_cache, t_tree, d_tree = caches
         prompt_j = jnp.asarray(prompt, jnp.int32)[None]
-        t_logits, t_cache = tgt.prefill(prompt_j, t_cache)
-        _, d_cache = drf.prefill(prompt_j, d_cache)
+        if prefill_fn is not None:
+            t_cache = d_cache = t_tree = d_tree = None
+            t_logits = prefill_fn(prompt_j)
+        else:
+            if caches is None:
+                t_cache = tgt.init_cache(1, self.max_len)
+                d_cache = drf.init_cache(1, self.max_len)
+                t_tree = tgt.init_tree_caches(1, tcap)
+                d_tree = drf.init_tree_caches(1, tcap)
+            else:
+                t_cache, d_cache, t_tree, d_tree = caches
+            t_logits, t_cache = tgt.prefill(prompt_j, t_cache)
+            _, d_cache = drf.prefill(prompt_j, d_cache)
 
         prefix = 0
         if tgt.prefix_embeds is not None:
@@ -199,7 +225,7 @@ class PipeDecEngine:
         model_len = prefix + len(prompt)
 
         key, sk = jax.random.split(key)
-        first = int(select_token(t_logits[0], p.sampling, sk))
+        first = int(select_token(t_logits[0], sp, sk))
 
         st = DecodeState(
             committed=[first],
@@ -207,7 +233,7 @@ class PipeDecEngine:
             t_cache=t_cache, d_cache=d_cache, t_tree=t_tree, d_tree=d_tree,
             model_len=model_len, key=key, max_new_tokens=max_new_tokens,
             limit=max_timesteps or (max_new_tokens * (p.n_stages + 2) + 16),
-            eos=eos)
+            eos=eos, sampling=sp)
         st.eos_hit = eos is not None and first == eos
         return st
 
@@ -301,8 +327,9 @@ class PipeDecEngine:
         ``st``'s own caches, the DB engine its arena rows.  Returns the
         number of commits (1)."""
         p = self.pcfg
+        sp = st.sampling if st.sampling is not None else p.sampling
         st.key, sk = jax.random.split(st.key)
-        x = int(select_token(fl.logits[root_row], p.sampling, sk))
+        x = int(select_token(fl.logits[root_row], sp, sk))
         st.committed.append(x)
         st.stats.commits += 1
         commit_caches(st)
@@ -376,9 +403,10 @@ class PipeDecEngine:
     def generate(self, prompt: np.ndarray, max_new_tokens: int,
                  key: Optional[jax.Array] = None,
                  max_timesteps: Optional[int] = None, *,
-                 eos: Optional[int] = None):
+                 eos: Optional[int] = None,
+                 sampling: Optional[SamplingParams] = None):
         st = self.init_state(prompt, max_new_tokens, key, max_timesteps,
-                             eos=eos)
+                             eos=eos, sampling=sampling)
         while not st.done:
             self.step(st)
         return st.output(), st.stats

@@ -145,3 +145,39 @@ def specpipe_db_tbt(hw: StageHardware, batch: int,
     only by the batched stage-time inflation, not by round-robin stalls."""
     ts = specpipe_db_timestep(hw, batch, batch_scale)
     return ts / max(tokens_per_timestep, 1e-9)
+
+
+# --------------------------------------------------------------------------
+# SpecPipe-DB on the sharded deployment (serving.executor
+# .ShardedPipelineExecutor over launch.pipeline): the batched tree layers
+# ride the ppermute activation ring, so the per-hop transfer cost is
+# explicit.  ``flush=True`` prices the synchronous-flush executor (each
+# timestep pushes the batched entry through all n_stages hops inside one
+# dispatch — the bit-exactness-preserving schedule this repo ships);
+# ``flush=False`` prices the steady-state overlapped deployment (ring
+# full, one hop per timestep — the paper's wall-clock regime every later
+# async-stage PR moves toward).
+# --------------------------------------------------------------------------
+def specpipe_db_sharded_timestep(hw: StageHardware, batch: int,
+                                 batch_scale: Callable[[int], float] = None,
+                                 flush: bool = False) -> float:
+    s = batch_scale(batch) if batch_scale else 1.0
+    hop = hw.t_stage_width * s + hw.t_comm
+    stages = hw.n_stages if flush else 1
+    return max(hw.t_draft * s, stages * hop) + hw.t_sync
+
+
+def specpipe_db_sharded_throughput(hw: StageHardware, batch: int,
+                                   tokens_per_timestep: float,
+                                   batch_scale: Callable[[int], float]
+                                   = None, flush: bool = False) -> float:
+    ts = specpipe_db_sharded_timestep(hw, batch, batch_scale, flush)
+    return batch * tokens_per_timestep / ts
+
+
+def specpipe_db_sharded_tbt(hw: StageHardware, batch: int,
+                            tokens_per_timestep: float,
+                            batch_scale: Callable[[int], float] = None,
+                            flush: bool = False) -> float:
+    ts = specpipe_db_sharded_timestep(hw, batch, batch_scale, flush)
+    return ts / max(tokens_per_timestep, 1e-9)

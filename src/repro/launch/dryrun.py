@@ -204,13 +204,14 @@ def lower_pipeline_tick(arch: str, *, n_stages: int = 16, width: int = 32,
     ring = jax.eval_shape(lambda: pl.init_ring(cfg, pcfg,
                                                dtype=jnp.bfloat16))
     tcap = pcfg.tree_capacity + pcfg.width
+    # batched entry (B=1 KV slot — single-request deployment)
     entry = {
-        "act": jax.ShapeDtypeStruct((width, cfg.d_model), jnp.bfloat16),
-        "positions": jax.ShapeDtypeStruct((width,), jnp.int32),
-        "mask": jax.ShapeDtypeStruct((width, tcap), jnp.bool_),
-        "write_idx": jax.ShapeDtypeStruct((), jnp.int32),
-        "model_len": jax.ShapeDtypeStruct((), jnp.int32),
-        "valid": jax.ShapeDtypeStruct((), jnp.bool_),
+        "act": jax.ShapeDtypeStruct((1, width, cfg.d_model), jnp.bfloat16),
+        "positions": jax.ShapeDtypeStruct((1, width), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((1, width, tcap), jnp.bool_),
+        "write_idx": jax.ShapeDtypeStruct((1,), jnp.int32),
+        "model_len": jax.ShapeDtypeStruct((1,), jnp.int32),
+        "valid": jax.ShapeDtypeStruct((1,), jnp.bool_),
     }
     from jax.sharding import NamedSharding, PartitionSpec as P
     stage_sh = lambda tree_: jax.tree.map(

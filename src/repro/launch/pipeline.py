@@ -18,6 +18,17 @@ mask rows, tree-buffer write index, committed length) in the same ring so
 every stage uses the values frozen at that layer's entry — exactly the
 paper's data-flow semantics.
 
+SpecPipe-DB rides the same ring *batched*: every ring/entry leaf and every
+stage cache carries a leading slot axis (``batch`` = KV slots), so one tick
+moves EVERY in-flight request's tree layer one stage forward — the
+per-row ``model_len`` / ``tree_write_index`` / ``tree_mask [B, n, Tcap]``
+Ctx from the fused single-device path is exactly what each stage applies
+to its local slice.  ``make_pipeline_verify`` flushes one batched layer
+through all stages inside ONE compiled dispatch (ingest + ``n_stages``
+ticks, ``ppermute`` rotation untouched) — the compute backend
+``serving.executor.ShardedPipelineExecutor`` issues it once per global
+timestep.
+
 Supports attention-family architectures (dense / VLM / MoE-with-attention);
 recurrent families use chain-mode speculative decoding instead (DESIGN.md
 §Arch-applicability).
@@ -94,12 +105,14 @@ def stage_params(cfg: ModelConfig, params, n_stages: int):
 
 
 def init_stage_caches(cfg: ModelConfig, pcfg: PipelineConfig,
-                      dtype=jnp.float32):
+                      dtype=jnp.float32, batch: int = 1):
     """Per-stage model + tree caches: lists (per in-stage layer) of
-    [S, B=1, rows, ...] buffers."""
+    [S, B, rows, ...] buffers.  ``batch`` is the KV-slot axis mirroring
+    the slot-stacked ``serving.scheduler.KVArena`` (B=1 = the
+    single-request deployment)."""
     lps, _ = stage_layout(cfg, pcfg.n_stages)
-    kv = attn_mod.init_kv_cache(cfg, 1, pcfg.max_len, dtype)
-    tkv = attn_mod.init_kv_cache(cfg, 1, pcfg.tree_capacity + pcfg.width,
+    kv = attn_mod.init_kv_cache(cfg, batch, pcfg.max_len, dtype)
+    tkv = attn_mod.init_kv_cache(cfg, batch, pcfg.tree_capacity + pcfg.width,
                                  dtype)
     tile = lambda c: [jax.tree.map(
         lambda x: jnp.zeros((pcfg.n_stages, *x.shape), x.dtype), c)
@@ -107,31 +120,37 @@ def init_stage_caches(cfg: ModelConfig, pcfg: PipelineConfig,
     return tile(kv), tile(tkv)
 
 
-def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32):
-    """In-flight activation + metadata ring, one slot per stage."""
+def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32,
+              batch: int = 1):
+    """In-flight activation + metadata ring, one slot per stage.  Every
+    leaf carries the KV-slot axis ``batch`` right after the stage dim —
+    a batched tick moves every slot's layer one stage forward together."""
     s, w = pcfg.n_stages, pcfg.width
     return {
-        "act": jnp.zeros((s, w, cfg.d_model), dtype),
-        "positions": jnp.zeros((s, w), jnp.int32),
-        "mask": jnp.zeros((s, w, pcfg.tree_capacity + pcfg.width), bool),
-        "write_idx": jnp.zeros((s,), jnp.int32),
-        "model_len": jnp.zeros((s,), jnp.int32),
-        "valid": jnp.zeros((s,), bool),
+        "act": jnp.zeros((s, batch, w, cfg.d_model), dtype),
+        "positions": jnp.zeros((s, batch, w), jnp.int32),
+        "mask": jnp.zeros((s, batch, w, pcfg.tree_capacity + pcfg.width),
+                          bool),
+        "write_idx": jnp.zeros((s, batch), jnp.int32),
+        "model_len": jnp.zeros((s, batch), jnp.int32),
+        "valid": jnp.zeros((s, batch), bool),
     }
 
 
 def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
-    """Build the jittable one-timestep pipeline tick.
+    """Build the jittable one-timestep pipeline tick (slot-batched).
 
-    Inputs (global shapes):
+    Inputs (global shapes; ``B`` = KV slots, B=1 = single-request):
       stage_p:    unit params [S, Lps, ...]        (stage-sharded)
       stage_valid:[S, Lps] bool
-      caches:     (model_kv, tree_kv) [S, Lps, 1, rows, ...]
-      ring:       see init_ring
+      caches:     (model_kv, tree_kv) [S, B, rows, ...] per in-stage layer
+      ring:       see init_ring (every leaf [S, B, ...])
       entry:      dict with the NEW layer for stage 0:
-                  tokens->embedded x [w, d], positions [w],
-                  mask [w, tcap+w], write_idx (), model_len (), valid ()
-    Returns (new caches, new ring, exit: {act [w,d], ...exit metadata}).
+                  tokens->embedded x [B, w, d], positions [B, w],
+                  mask [B, w, tcap+w], write_idx [B], model_len [B],
+                  valid [B]
+    Returns (new tree caches, new ring,
+             exit: {act [B, w, d], valid [B]}).
     """
     s_axis = "model"
     n_stages = pcfg.n_stages
@@ -141,13 +160,13 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
 
     def local_stage(stage_p, valid_row, kv, tkv, x, positions, mask,
                     write_idx, model_len, in_valid):
-        """Apply this stage's layers to its in-flight tree layer."""
-        ctx = tf.Ctx(mode="tree", positions=positions[None],
-                     cache_len=jnp.asarray(model_len, jnp.int32).reshape(1),
-                     tree_write_index=jnp.asarray(write_idx,
-                                                  jnp.int32).reshape(1),
-                     tree_mask=mask[None])
-        xs = x[None]  # [1, w, d]
+        """Apply this stage's layers to its in-flight batched tree layer
+        ([B, w, d] activations; per-row metadata rides the ring)."""
+        ctx = tf.Ctx(mode="tree", positions=positions,
+                     cache_len=jnp.asarray(model_len, jnp.int32),
+                     tree_write_index=jnp.asarray(write_idx, jnp.int32),
+                     tree_mask=mask)
+        xs = x  # [B, w, d]
         new_tkv = []
         for l in range(lps):
             # per-layer param/cache buffers (lists over the in-stage dim)
@@ -155,11 +174,13 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
             c = [kv[l]]
             tc = [tkv[l]]
             y, _, ntc, _ = tf._apply_unit(unit_p, cfg, kinds, xs, c, tc, ctx)
-            ok = valid_row[l] & in_valid
-            xs = jnp.where(ok, y, xs)
+            ok = valid_row[l] & in_valid                 # [B]
+            xs = jnp.where(ok[:, None, None], y, xs)
             new_tkv.append(jax.tree.map(
-                lambda old, new: jnp.where(ok, new, old), tc[0], ntc[0]))
-        return xs[0], new_tkv
+                lambda old, new, k=ok: jnp.where(
+                    k.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
+                tc[0], ntc[0]))
+        return xs, new_tkv
 
     def tick(stage_p, stage_valid, model_kv, tree_kv, ring, entry):
         def body(stage_p, stage_valid, model_kv, tree_kv, ring, entry):
@@ -194,11 +215,12 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
                                        rotated["positions"]),
                 "mask": jnp.where(is0, entry["mask"][None],
                                   rotated["mask"]),
-                "write_idx": jnp.where(is0, entry["write_idx"],
+                "write_idx": jnp.where(is0, entry["write_idx"][None],
                                        rotated["write_idx"]),
-                "model_len": jnp.where(is0, entry["model_len"],
+                "model_len": jnp.where(is0, entry["model_len"][None],
                                        rotated["model_len"]),
-                "valid": jnp.where(is0, entry["valid"], rotated["valid"]),
+                "valid": jnp.where(is0, entry["valid"][None],
+                                   rotated["valid"]),
             }
             # the activation leaving the last stage = exiting layer
             is_last = (idx == n_stages - 1).astype(x.dtype)
@@ -210,7 +232,6 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
             return (new_tkv, new_ring,
                     {"act": exit_act, "valid": exit_valid})
 
-        specs_stage = P(s_axis)
         tkv_spec = jax.tree.map(lambda _: P(s_axis), tree_kv)
         ring_spec = jax.tree.map(lambda _: P(s_axis), ring)
         entry_spec = jax.tree.map(lambda _: P(), entry)
@@ -227,3 +248,42 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
         return out
 
     return tick
+
+
+def make_pipeline_verify(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
+                         dtype=jnp.float32):
+    """One-dispatch batched tree-verify through the sharded pipeline.
+
+    Ingests a batched entry layer into stage 0 of a fresh ring, then runs
+    ``n_stages`` ticks so the layer traverses every stage and exits —
+    yielding the same verification hidden states the single-device
+    ``tree_verify_step`` computes, but partitioned stage-by-stage over the
+    mesh with the metadata riding the ``ppermute`` ring.  The whole flush
+    is ONE compiled computation, so the serving executor issues exactly
+    one sharded dispatch per global timestep.
+
+    (The steady-state deployment overlaps consecutive layers — one tick
+    per timestep with the ring full; its wall-clock is priced in
+    ``core.sim.specpipe_db_sharded_*``.  The flush keeps verify logits
+    available at the layer's *entry* timestep, which is what keeps the
+    logical engine's schedule — and therefore its outputs — bit-identical
+    to the local backends.)
+
+    Returns ``verify(stage_p, stage_valid, model_kv, tree_kv, entry) ->
+    (exit_act [B, w, d], exit_valid [B], new_tree_kv)``.
+    """
+    tick = make_pipedec_tick(cfg, pcfg, mesh)
+
+    def verify(stage_p, stage_valid, model_kv, tree_kv, entry):
+        batch = entry["act"].shape[0]
+        ring = init_ring(cfg, pcfg, dtype=dtype, batch=batch)
+        dead = dict(entry, valid=jnp.zeros_like(entry["valid"]))
+        ent = entry
+        exit_out = None
+        for _ in range(pcfg.n_stages + 1):
+            tree_kv, ring, exit_out = tick(stage_p, stage_valid, model_kv,
+                                           tree_kv, ring, ent)
+            ent = dead
+        return exit_out["act"], exit_out["valid"], tree_kv
+
+    return verify

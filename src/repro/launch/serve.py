@@ -1,7 +1,13 @@
 """Serving driver: load (or randomly init) target + draft, run a batch of
-requests through the ServingEngine in pp or pipedec mode.
+requests through the ServingEngine in pp, pipedec, or pipedec-db mode.
 
   PYTHONPATH=src python -m repro.launch.serve --mode pipedec --requests 4
+
+SpecPipe-DB on the sharded pipeline deployment (one stage per device;
+combine with XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU):
+
+  PYTHONPATH=src python -m repro.launch.serve --mode pipedec-db \
+      --executor sharded --requests 4
 """
 from __future__ import annotations
 
@@ -33,7 +39,12 @@ def build_bundle(arch: str, *, smoke: bool, seed: int, ckpt: str = "",
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["pp", "pipedec"], default="pipedec")
+    ap.add_argument("--mode", choices=["pp", "pipedec", "pipedec-db"],
+                    default="pipedec")
+    ap.add_argument("--executor", choices=["local", "sharded"],
+                    default="local",
+                    help="pipedec-db compute backend (sharded = one "
+                         "pipeline stage per mesh device)")
     ap.add_argument("--target-arch", default="pipedec-target")
     ap.add_argument("--draft-arch", default="pipedec-draft")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -42,14 +53,23 @@ def main(argv=None):
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--width", type=int, default=8)
     ap.add_argument("--branch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=3)
     args = ap.parse_args(argv)
 
     target = build_bundle(args.target_arch, smoke=args.smoke, seed=0)
     draft = build_bundle(args.draft_arch, smoke=args.smoke, seed=1)
+    pcfg = PipeDecConfig(n_stages=args.stages, width=args.width,
+                         branch=args.branch)
+    executor = None
+    if args.mode == "pipedec-db" and args.executor == "sharded":
+        from repro.serving import ShardedPipelineExecutor
+        executor = ShardedPipelineExecutor(
+            target, draft, slots=args.slots, max_len=512,
+            tree_capacity=pcfg.tree_buffer_capacity,
+            capacity=pcfg.capacity, n_stages=len(jax.devices()))
     engine = ServingEngine(
-        target, draft, mode=args.mode,
-        pipedec=PipeDecConfig(n_stages=args.stages, width=args.width,
-                              branch=args.branch))
+        target, draft, mode=args.mode, max_batch=args.slots,
+        pipedec=pcfg, executor=executor)
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         prompt = rng.integers(0, target.cfg.vocab_size,

@@ -1,0 +1,120 @@
+"""Sharded-deployment equivalence check (the PR's acceptance pin, as a
+runnable): on an ``--stages``-device CPU mesh, ``SpecPipeDBEngine`` with
+``ShardedPipelineExecutor`` must produce per-uid token outputs
+bit-identical to ``LocalFusedExecutor`` AND to the single-request
+``PipeDecEngine`` under greedy decoding (staggered arrivals included),
+and the dispatch-count hook must show exactly one batched sharded tick
+per timestep with pending entries.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.sharded_check --stages 8
+
+Prints one JSON summary line; exits non-zero on any mismatch.  Run in its
+own process: the forced host-device count must not leak into other jax
+users (tests spawn it via subprocess, CI runs it as a dedicated leg).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stages", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--layers", type=int, default=0,
+                    help="target layers (default: one per stage)")
+    args = ap.parse_args(argv)
+
+    if "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.stages}")
+
+    import jax
+    import numpy as np
+
+    from repro.core.pipedec import PipeDecConfig, PipeDecEngine
+    from repro.core.speculative import ModelBundle
+    from repro.models import transformer as tf
+    from repro.models.config import ModelConfig
+    from repro.serving import (LocalFusedExecutor, Request,
+                               ShardedPipelineExecutor, SpecPipeDBEngine)
+
+    assert len(jax.devices()) >= args.stages, \
+        f"need {args.stages} devices, have {len(jax.devices())}"
+
+    layers = args.layers or args.stages
+    target_cfg = ModelConfig(name="chk-target", family="dense",
+                             num_layers=layers, d_model=64, num_heads=4,
+                             num_kv_heads=2, d_ff=128, vocab_size=128)
+    draft_cfg = ModelConfig(name="chk-draft", family="dense", num_layers=1,
+                            d_model=32, num_heads=2, num_kv_heads=1,
+                            d_ff=64, vocab_size=128, tie_embeddings=True)
+    target = ModelBundle(tf.init_model(jax.random.PRNGKey(0), target_cfg),
+                         target_cfg)
+    draft = ModelBundle(tf.init_model(jax.random.PRNGKey(9), draft_cfg),
+                        draft_cfg)
+    pcfg = PipeDecConfig(n_stages=4, width=4, branch=2)
+    max_len = 128
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(i,
+                    rng.integers(0, 100, size=int(rng.integers(3, 8)))
+                    .astype(np.int32),
+                    int(rng.integers(3, 7)),
+                    arrival_t=int(rng.integers(0, 3 * args.requests)))
+            for i in range(args.requests)]
+
+    single = PipeDecEngine(target, draft, pcfg, max_len=max_len)
+    want = {r.uid: single.generate(r.prompt, r.max_new_tokens)[0]
+            for r in reqs}
+
+    mk = {
+        "local": lambda: LocalFusedExecutor(
+            target, draft, slots=args.slots, max_len=max_len,
+            tree_capacity=pcfg.tree_buffer_capacity,
+            capacity=pcfg.capacity),
+        "sharded": lambda: ShardedPipelineExecutor(
+            target, draft, slots=args.slots, max_len=max_len,
+            tree_capacity=pcfg.tree_buffer_capacity,
+            capacity=pcfg.capacity, n_stages=args.stages),
+    }
+    summary = {"stages": args.stages, "slots": args.slots,
+               "requests": args.requests, "layers": layers}
+    for name, make in mk.items():
+        ex = make()
+        eng = SpecPipeDBEngine(target, draft, pcfg, max_len=max_len,
+                               max_slots=args.slots, executor=ex)
+        for r in reqs:
+            eng.submit(r)
+        res = eng.run()
+        for uid, tokens in want.items():
+            np.testing.assert_array_equal(
+                res[uid].tokens, tokens,
+                err_msg=f"{name} executor vs single-request uid={uid}")
+        disp = eng.stats.verify_dispatches
+        assert max(disp) == 1, f"{name}: >1 dispatch in one timestep"
+        assert ex.calls["verify_rows"] == sum(disp), \
+            f"{name}: one batched dispatch per pending timestep"
+        if name == "sharded":
+            assert ex.calls["pipeline_verify"] == sum(disp), \
+                "one batched sharded tick per pending timestep"
+        summary[name] = {
+            "timesteps": eng.stats.timesteps,
+            "tokens_per_timestep": round(eng.stats.tokens_per_timestep, 4),
+            "peak_occupancy": eng.stats.peak_occupancy,
+            "dispatches": dict(ex.calls),
+        }
+    summary["bit_identical"] = True
+    print(json.dumps(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

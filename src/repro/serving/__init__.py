@@ -1,7 +1,12 @@
-from repro.serving.dynbatch import DBStats, SpecPipeDBEngine
+from repro.serving.dynbatch import (DBStats, SpecPipeDBEngine,
+                                    generate_with_executor)
 from repro.serving.engine import Request, Result, ServingEngine
+from repro.serving.executor import (LocalFusedExecutor, PipelineExecutor,
+                                    ShardedPipelineExecutor)
 from repro.serving.scheduler import (DynamicBatchScheduler, KVArena,
-                                     SchedulerStats)
+                                     SchedulerStats, SlotPool)
 
-__all__ = ["DBStats", "DynamicBatchScheduler", "KVArena", "Request",
-           "Result", "SchedulerStats", "ServingEngine", "SpecPipeDBEngine"]
+__all__ = ["DBStats", "DynamicBatchScheduler", "KVArena",
+           "LocalFusedExecutor", "PipelineExecutor", "Request", "Result",
+           "SchedulerStats", "ServingEngine", "ShardedPipelineExecutor",
+           "SlotPool", "SpecPipeDBEngine", "generate_with_executor"]

@@ -8,42 +8,49 @@ each stage) and finished requests are replaced from the queue without
 draining the pipeline (§ dynamic batching; 1.64–2.08× vLLM throughput in
 the paper's Table).
 
-Fused dispatch: one *global* timestep issues exactly ONE batched
-``tree_verify`` per model (target + draft) covering every active slot —
-inputs are stacked via ``core.dynbatch.TreeBatch.deepest_layers`` (inactive
-or non-pending rows ride along masked, writing only into their own slot's
-slack region), the slot-stacked caches in ``serving.scheduler.KVArena`` are
-read/written in place, and the logits are scattered back per slot.  The
-exit phase batches the two-level cache sync the same way
-(``ModelBundle.commit_rows``).
+Executor seam: the engine is the logical scheduler only — per-timestep
+batched compute (fused tree-verify, batched commit, prune remap, admission
+prefill) runs through a pluggable ``serving.executor.PipelineExecutor``.
+``LocalFusedExecutor`` (default) is PR-2's fused single-device path: ONE
+batched ``tree_verify`` per model per timestep over the slot-stacked
+``KVArena``, power-of-two slot-count bucketing, batched exit commit.
+``ShardedPipelineExecutor`` runs the same dispatches on the paper's
+pipelined deployment — the target stack partitioned over an
+``n_stages``-device mesh with the per-row metadata riding the ``ppermute``
+activation ring (``launch.pipeline``).  Outputs are bit-identical across
+backends (and to the single-request engine) because only *where* the
+verify runs changes, never *what* is computed — the same argument the
+paper makes for losslessness; tests/test_serving_db.py and
+tests/test_executor_sharded.py pin it.  Wall-clock is priced in
+``core.sim.specpipe_db_*`` / ``specpipe_db_sharded_*``.
 
-Slot-count bucketing keeps the fused path recompile-free: the dispatch
-covers the power-of-two prefix of slot rows spanning every active slot
-(1, 2, 4, …, ``max_slots``), so at most log2(slots)+1 shapes ever compile
-per model.
-
-Per-request *decisions* (flight bookkeeping, token selection, tree
-expand/prune, index remaps) run through the same ``PipeDecEngine`` phase
-methods (gather-entry / apply-fused / exit-commit) the single-request
-engine uses — that engine is literally the B=1 case of this code — so each
-request's operation trace is identical to running it alone and DB output
-is bit-equal per request (tests/test_serving_db.py pins this); only *when*
-layers run changes, never *what* is computed — the same argument the paper
-makes for losslessness.  Wall-clock is priced in ``core.sim.specpipe_db_*``.
+Per-request *decisions* (flight bookkeeping, token selection with
+per-request ``SamplingParams``, tree expand/prune, index remaps) run
+through the same ``PipeDecEngine`` phase methods (gather-entry /
+apply-fused / exit-commit) the single-request engine uses — that engine is
+literally the B=1 case of this code — so each request's operation trace is
+identical to running it alone.
 
 Scheduling per global timestep:
-  1. refill — admit arrived requests (FIFO) onto free KV slots, running
-     their prefill (join-on-prefill) into their arena rows;
+  1. refill — admit arrived requests (priority/aging order, FIFO when
+     priorities tie) onto free KV slots, running their prefill
+     (join-on-prefill) through the executor into their arena rows;
   2. advance — gather every active request's entry, run the fused verify,
      then expansion and (batched-commit) exit per slot;
   3. retire — requests that hit eos or their token budget release their
      slot (retire-on-eos) for the next refill.
+
+Streaming: ``run(on_token=...)`` emits ``(uid, token, timestep)`` the
+timestep each token is committed (the admission timestep for the prefill
+token) instead of only at retire; the streamed prefix always equals the
+final ``Result.tokens``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,8 +59,8 @@ import numpy as np
 from repro.core.dynbatch import TreeBatch
 from repro.core.pipedec import (DecodeState, EntryInputs, GenStats,
                                 PipeDecConfig, PipeDecEngine)
-from repro.core.speculative import ModelBundle, remap_tree_caches
-from repro.models import transformer as tf
+from repro.core.speculative import ModelBundle
+from repro.serving.executor import LocalFusedExecutor, PipelineExecutor
 from repro.serving.scheduler import DynamicBatchScheduler, KVArena
 
 
@@ -62,6 +69,7 @@ class _Active:
     req: object
     state: DecodeState
     t0: float
+    emitted: int = 0          # tokens already streamed via on_token
 
 
 @dataclasses.dataclass
@@ -74,7 +82,7 @@ class DBStats:
     aligns 1:1 with the ``occupancy`` trace.  ``verify_dispatches`` traces
     the number of fused tree-verify calls per model per timestep (0 when
     no slot had a pending entry, otherwise exactly 1 — the fusion the
-    equivalence test asserts via the ``ModelBundle.calls`` hook).
+    equivalence test asserts via the executor's ``calls`` hook).
     """
     timesteps: int = 0
     total_commits: int = 0
@@ -97,17 +105,27 @@ class SpecPipeDBEngine:
     def __init__(self, target: ModelBundle, draft: ModelBundle,
                  pcfg: Optional[PipeDecConfig] = None, *,
                  max_len: int = 512, max_slots: int = 4,
-                 eos_token: Optional[int] = None, fused: bool = True):
-        """``fused=False`` falls back to the looped per-slot dispatch (two
-        ``tree_verify`` calls per request per timestep) — kept as the
-        reference the fused-vs-looped equivalence test pins outputs
-        against."""
+                 eos_token: Optional[int] = None, fused: bool = True,
+                 executor: Optional[PipelineExecutor] = None):
+        """``executor`` selects the compute backend (default:
+        ``LocalFusedExecutor``); ``fused=False`` falls back to the looped
+        per-slot dispatch (two ``tree_verify`` calls per request per
+        timestep) — kept as the reference the fused-vs-looped equivalence
+        test pins outputs against (local backend only)."""
         self.fused = fused
         self.pcfg = pcfg or PipeDecConfig()
         self.inner = PipeDecEngine(target, draft, self.pcfg, max_len=max_len)
-        self.arena = KVArena(
-            target, draft, slots=max_slots, max_len=max_len,
-            tree_capacity=self.inner.tree_buffer_capacity)
+        if executor is None:
+            executor = LocalFusedExecutor(
+                target, draft, slots=max_slots, max_len=max_len,
+                tree_capacity=self.inner.tree_buffer_capacity,
+                capacity=self.pcfg.capacity)
+        assert executor.slots == max_slots, \
+            "executor slot count must match max_slots"
+        self.executor = executor
+        self.arena = executor.arena
+        assert fused or isinstance(self.arena, KVArena), \
+            "looped (fused=False) mode needs the local KVArena backend"
         self.sched = DynamicBatchScheduler(self.arena)
         self.trees = TreeBatch(max_slots, self.pcfg.capacity)
         self.max_slots = max_slots
@@ -116,7 +134,8 @@ class SpecPipeDBEngine:
 
     def submit(self, req) -> None:
         """Queue a request (``arrival_t`` is in global pipeline timesteps;
-        requests join once arrived AND a KV slot is free)."""
+        requests join once arrived AND a KV slot is free, highest
+        effective priority first)."""
         self.sched.submit(req)
 
     # ------------------------------------------------------------------
@@ -128,24 +147,15 @@ class SpecPipeDBEngine:
                         for r in self.sched.queue), default=0)
         return 64 + arrivals + per_req
 
-    def _bucket(self, rows: int) -> int:
-        """Slot-count bucketing policy: the fused dispatch covers the
-        smallest power-of-two prefix of slot rows spanning every row that
-        must participate (capped at ``max_slots``)."""
-        b = 1
-        while b < rows:
-            b *= 2
-        return min(b, self.max_slots)
-
     # -- fused phase 1: stacked entry + ONE verify dispatch per model ----
     def _fused_entry(self, active: Dict[int, _Active],
                      pending: List[int]) -> None:
         """Stack every pending slot's entry layer (via the TreeBatch's
-        vmapped deepest-layer view — no per-slot gather), run one bucketed
-        ``tree_verify_rows`` per model against the slot-stacked arena, and
-        scatter the logits back through ``apply_entry``."""
+        vmapped deepest-layer view — no per-slot gather), hand the
+        executor ONE bucketed verify per model, and scatter the logits
+        back through ``apply_entry``."""
         p, tcap = self.pcfg, self.inner.tree_buffer_capacity
-        nb = self._bucket(max(pending) + 1)
+        nb = self.max_slots
         w = p.width
 
         row_on = np.zeros((nb,), bool)
@@ -156,10 +166,9 @@ class SpecPipeDBEngine:
         # stacked entry views of ALL slot rows (stale/non-pending rows are
         # masked below and only ever write into their own slack region)
         toks_b, idx_b, valid_b, mask_b = self.trees.deepest_layers(w)
-        toks_b, mask_b = toks_b[:nb], mask_b[:nb]
-        valid_b = valid_b[:nb] & on[:, None]
-        depth_b = jnp.take_along_axis(self.trees.stacked.depth[:nb],
-                                      idx_b[:nb], axis=1)
+        valid_b = valid_b & on[:, None]
+        depth_b = jnp.take_along_axis(self.trees.stacked.depth, idx_b,
+                                      axis=1)
 
         mlen_rows = np.zeros((nb,), np.int32)
         for slot in pending:
@@ -177,21 +186,16 @@ class SpecPipeDBEngine:
         tokens = jnp.where(valid_b, toks_b, 0)
         # masked rows park their (never-attended) writes in the slack
         # region [capacity, capacity + w) of their OWN slot's tree buffer
-        wi = jnp.where(on, self.trees.stacked.layer_start[:nb],
+        wi = jnp.where(on, self.trees.stacked.layer_start,
                        p.capacity).astype(jnp.int32)
         mlen = jnp.where(on, mlen, 0)
 
-        tgt, drf = self.inner.target, self.inner.draft
-        t_cache, d_cache, t_tree, d_tree = self.arena.stacked
-        v_all, t_tree = tgt.tree_verify_rows(
-            tokens, positions, masks, t_cache, mlen, t_tree, wi, bucket=nb)
-        d_all, d_tree = drf.tree_verify_rows(
-            tokens, positions, masks, d_cache, mlen, d_tree, wi, bucket=nb)
-        self.arena.set_tree_caches(t_tree, d_tree)
+        v_all, d_all = self.executor.verify_rows(tokens, positions, masks,
+                                                 mlen, wi, row_on)
 
         # one host sync for every slot's node indices (the only entry
         # metadata the bookkeeping needs)
-        node_idx_b = np.where(np.asarray(valid_b), np.asarray(idx_b[:nb]),
+        node_idx_b = np.where(np.asarray(valid_b), np.asarray(idx_b),
                               -1).astype(np.int32)
         for slot in pending:
             entry = EntryInputs(tokens=tokens[slot],
@@ -200,41 +204,6 @@ class SpecPipeDBEngine:
                                 node_idx=node_idx_b[slot])
             self.inner.apply_entry(active[slot].state, entry,
                                    v_all[slot], d_all[slot])
-
-    # -- fused phase 2: batched two-level cache sync ---------------------
-    def _fused_commit(self, active: Dict[int, _Active],
-                      picks: Dict[int, tuple]) -> None:
-        """One batched per-row commit per model: every slot with an exiting
-        flight migrates its tree-buffer row 0 into its model cache at its
-        own ``model_len``; masked rows stay bit-unchanged."""
-        nb = self.max_slots   # masked rows are untouched; no slicing needed
-        mask_rows = np.zeros((nb,), bool)
-        mlen_rows = np.zeros((nb,), np.int32)
-        for slot in picks:
-            mask_rows[slot] = True
-            mlen_rows[slot] = active[slot].state.model_len
-        commit_mask = jnp.asarray(mask_rows)
-        mlen = jnp.asarray(mlen_rows)
-        node0 = jnp.zeros((nb,), jnp.int32)   # row 0 is always the root
-
-        tgt, drf = self.inner.target, self.inner.draft
-        t_cache, d_cache, t_tree, d_tree = self.arena.stacked
-        t_cache = tgt.commit_rows(t_cache, t_tree, node0, mlen, commit_mask)
-        d_cache = drf.commit_rows(d_cache, d_tree, node0, mlen, commit_mask)
-        self.arena.set_model_caches(t_cache, d_cache)
-
-    def _remap_arena_rows(self, slot: int, st: DecodeState,
-                          index_map) -> None:
-        """Post-prune tree-cache compaction on this slot's arena rows."""
-        cap = self.pcfg.capacity
-        _, _, t_tree, d_tree = self.arena.stacked
-        t_row = remap_tree_caches(tf.slice_cache_rows(t_tree, slot, 1),
-                                  index_map, cap)
-        d_row = remap_tree_caches(tf.slice_cache_rows(d_tree, slot, 1),
-                                  index_map, cap)
-        self.arena.set_tree_caches(
-            tf.update_cache_rows(t_tree, t_row, slot),
-            tf.update_cache_rows(d_tree, d_row, slot))
 
     # ------------------------------------------------------------------
     def _advance_fused(self, active: Dict[int, _Active],
@@ -267,7 +236,13 @@ class SpecPipeDBEngine:
             if ev is not None:
                 picks[slot] = ev
         if picks:
-            self._fused_commit(active, picks)
+            mask_rows = np.zeros((self.max_slots,), bool)
+            mlen_rows = np.zeros((self.max_slots,), np.int32)
+            for slot in picks:
+                mask_rows[slot] = True
+                mlen_rows[slot] = active[slot].state.model_len
+            self.executor.commit_rows(jnp.asarray(mlen_rows),
+                                      jnp.asarray(mask_rows))
         for slot in stepping:
             st = active[slot].state
             commits = 0
@@ -277,15 +252,32 @@ class SpecPipeDBEngine:
                     st, fl, root_row,
                     commit_caches=lambda _st: None,  # batched above
                     remap_caches=lambda _st, imap, s=slot:
-                        self._remap_arena_rows(s, _st, imap))
+                        self.executor.remap_row(s, imap))
             st.stats.commits_per_step.append(commits)
             self.trees.set_row(slot, st.tree)
             st.tree = None
 
     # ------------------------------------------------------------------
-    def run(self, key: Optional[jax.Array] = None):
+    def _stream(self, active: Dict[int, _Active], now: int,
+                on_token: Optional[Callable]) -> None:
+        """Emit every not-yet-streamed committed token as
+        ``on_token(uid, token, timestep)`` (bounded by the request's
+        token budget, mirroring ``DecodeState.output``)."""
+        if on_token is None:
+            return
+        for a in active.values():
+            limit = 1 + a.state.max_new_tokens
+            fresh = a.state.committed[a.emitted:limit]
+            for tok in fresh:
+                on_token(a.req.uid, int(tok), now)
+            a.emitted += len(fresh)
+
+    # ------------------------------------------------------------------
+    def run(self, key: Optional[jax.Array] = None,
+            on_token: Optional[Callable] = None):
         """Drive the shared pipeline schedule until queue and slots drain.
-        Returns {uid: Result} (same shape as ``ServingEngine.run``)."""
+        Returns {uid: Result} (same shape as ``ServingEngine.run``).
+        ``on_token(uid, token, timestep)`` streams tokens at commit time."""
         from repro.serving.engine import Result
 
         base_key = key if key is not None else jax.random.PRNGKey(0)
@@ -303,20 +295,26 @@ class SpecPipeDBEngine:
                     now = nxt
 
             # 1. refill: join-on-prefill for arrived requests — prefill
-            # runs on the slot's arena rows and is written straight back
-            # (looped mode: the request keeps its row views instead)
+            # runs through the executor straight into the slot's arena
+            # rows (looped mode: the request keeps its row views instead)
             for req, slot in self.sched.admit(now):
                 rkey = jax.random.fold_in(base_key, req.uid)
-                st = self.inner.init_state(
-                    req.prompt, req.max_new_tokens, key=rkey,
-                    caches=self.arena.caches(slot), eos=self.eos_token)
+                sampling = getattr(req, "sampling", None)
                 if self.fused:
-                    self.arena.store(slot, st.caches())
-                    st.t_cache = st.d_cache = None
-                    st.t_tree = st.d_tree = None
+                    st = self.inner.init_state(
+                        req.prompt, req.max_new_tokens, key=rkey,
+                        eos=self.eos_token, sampling=sampling,
+                        prefill_fn=functools.partial(
+                            self.executor.prefill, slot))
+                else:
+                    st = self.inner.init_state(
+                        req.prompt, req.max_new_tokens, key=rkey,
+                        caches=self.arena.caches(slot), eos=self.eos_token,
+                        sampling=sampling)
                 self.trees.adopt_row(slot, st.tree)
                 st.tree = None  # canonical copy lives in the TreeBatch
                 active[slot] = _Active(req, st, time.perf_counter())
+            self._stream(active, now, on_token)   # prefill (first) tokens
 
             # 2. advance: every active request shares this timestep
             now += 1
@@ -332,9 +330,10 @@ class SpecPipeDBEngine:
                     self.inner.step(st)
                     self.trees.set_row(slot, st.tree)
                     st.tree = None
+            self._stream(active, now, on_token)   # this timestep's commits
 
             # 3. retire: free slots for the next refill (fused mode: the
-            # slot's caches already live in the stacked arena)
+            # slot's caches already live in the executor's arena)
             for slot in [s for s, a in active.items() if a.state.done]:
                 a = active.pop(slot)
                 st = a.state
@@ -356,3 +355,25 @@ class SpecPipeDBEngine:
                     f"SpecPipeDBEngine exceeded timestep guard ({guard}); "
                     f"{len(active)} active, {self.sched.pending} queued")
         return results
+
+
+def generate_with_executor(target: ModelBundle, draft: ModelBundle,
+                           pcfg: PipeDecConfig, prompt, max_new_tokens: int,
+                           *, executor: Optional[PipelineExecutor] = None,
+                           max_len: int = 512,
+                           eos: Optional[int] = None,
+                           key: Optional[jax.Array] = None,
+                           sampling=None):
+    """The B=1 PipeDec path on a pluggable compute backend: one request
+    through a single-slot ``SpecPipeDBEngine`` (the single-request engine
+    is literally the B=1 case of the DB schedule, so the output token
+    sequence bit-matches ``PipeDecEngine.generate`` under greedy
+    decoding).  Returns (tokens, GenStats)."""
+    from repro.serving.engine import Request
+
+    eng = SpecPipeDBEngine(target, draft, pcfg, max_len=max_len,
+                           max_slots=1, eos_token=eos, executor=executor)
+    eng.submit(Request(0, np.asarray(prompt), max_new_tokens,
+                       sampling=sampling))
+    res = eng.run(key=key)[0]
+    return res.tokens, res.stats

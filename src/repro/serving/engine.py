@@ -48,6 +48,12 @@ class Request:
     prompt: np.ndarray
     max_new_tokens: int = 32
     arrival_t: int = 0        # arrival time in pipeline timesteps (DB mode)
+    priority: int = 0         # admission priority (higher = sooner; ties
+                              # and all-default traffic are exact FIFO)
+    deadline_t: Optional[int] = None   # optional deadline (timesteps);
+                              # boosts admission as it approaches
+    sampling: Optional[SamplingParams] = None  # per-request override of
+                              # the engine's temperature/top-k/top-p
 
 
 @dataclasses.dataclass
@@ -64,15 +70,22 @@ class ServingEngine:
                  max_len: int = 512,
                  pipedec: Optional[PipeDecConfig] = None,
                  sampling: SamplingParams = SamplingParams(),
-                 eos_token: Optional[int] = None):
+                 eos_token: Optional[int] = None, executor=None):
+        """``executor`` (mode="pipedec-db" only) selects the SpecPipe-DB
+        compute backend — a ``serving.executor.PipelineExecutor``; None
+        uses the local fused path, ``ShardedPipelineExecutor`` the
+        pipelined multi-device deployment."""
         assert mode in ("pp", "pipedec", "pipedec-db")
         if mode in ("pipedec", "pipedec-db"):
             assert draft is not None, f"{mode} mode needs a draft model"
+        assert executor is None or mode == "pipedec-db", \
+            "executor backends apply to mode='pipedec-db'"
         self.target, self.draft, self.mode = target, draft, mode
         self.max_batch, self.max_len = max_batch, max_len
         self.pipedec_cfg = pipedec or PipeDecConfig()
         self.sampling = sampling
         self.eos_token = eos_token
+        self.executor = executor
         self.db_stats = None      # DBStats after a mode="pipedec-db" run
         self.queue: List[Request] = []
 
@@ -122,11 +135,14 @@ class ServingEngine:
         eng = PipeDecEngine(self.target, self.draft, self.pipedec_cfg,
                             max_len=self.max_len)
         out, stats = eng.generate(req.prompt, req.max_new_tokens,
-                                  eos=self.eos_token)
+                                  eos=self.eos_token,
+                                  sampling=req.sampling)
         return Result(req.uid, out, time.perf_counter() - t0, stats)
 
     # ------------------------------------------------------------------
-    def run(self) -> Dict[int, Result]:
+    def run(self, on_token=None) -> Dict[int, Result]:
+        """``on_token(uid, token, timestep)`` streams committed tokens in
+        mode="pipedec-db" (ignored by the batch modes)."""
         results: Dict[int, Result] = {}
         if self.mode == "pipedec":
             for req in self.queue:
@@ -138,11 +154,12 @@ class ServingEngine:
             eng = SpecPipeDBEngine(self.target, self.draft, self.pipedec_cfg,
                                    max_len=self.max_len,
                                    max_slots=self.max_batch,
-                                   eos_token=self.eos_token)
+                                   eos_token=self.eos_token,
+                                   executor=self.executor)
             for req in self.queue:
                 eng.submit(req)
             self.queue.clear()
-            results = eng.run()
+            results = eng.run(on_token=on_token)
             self.db_stats = eng.stats
             return results
         # pp: bucket by prompt length, then batch

@@ -1,0 +1,332 @@
+"""Pluggable compute backends for SpecPipe-DB — the executor seam.
+
+The logical scheduler (``serving.dynbatch.SpecPipeDBEngine`` multiplexing
+``core.pipedec.PipeDecEngine`` state machines) decides *what* every request
+computes; a ``PipelineExecutor`` decides *where and how* the per-timestep
+batched work runs.  The seam is exactly the three fused dispatches a global
+timestep needs, plus admission prefill:
+
+  * ``verify_rows``  — ONE batched tree-verify per model over every active
+    slot's deepest tree layer (per-row ``model_len`` / ``tree_write_index``
+    / ``tree_mask [B, n, Tcap]``);
+  * ``commit_rows``  — the batched two-level cache sync at exit (tree-row 0
+    of every exiting slot migrates into its model cache at ``model_len``);
+  * ``remap_row``    — post-prune tree-cache compaction of one slot;
+  * ``prefill``      — join-on-prefill of an admitted request into its slot.
+
+The executor owns the cache storage (the engine's states carry no cache
+pytrees) and the power-of-two slot-count bucketing policy, so every
+backend stays recompile-free: a dispatch covers the smallest power-of-two
+prefix of slot rows spanning every active slot — at most log2(slots)+1
+shapes per model.
+
+Backends:
+
+  * ``LocalFusedExecutor`` — PR-2's fused single-device path unchanged:
+    slot-stacked ``KVArena`` pytrees, ``ModelBundle.tree_verify_rows`` /
+    ``commit_rows`` dispatches.
+  * ``ShardedPipelineExecutor`` — the paper's pipelined deployment: the
+    target's layer stack is partitioned over an ``n_stages``-device mesh
+    (``launch.pipeline``), stage caches carry a leading slot axis
+    mirroring the KV arena, and each timestep's verify is ONE compiled
+    dispatch that flushes the batched entry layer around the ``ppermute``
+    activation ring (``launch.pipeline.make_pipeline_verify``).  The
+    draft runs replicated next to stage 0 (it proposes the next layer the
+    same timestep, so it cannot ride the ring).  Because the flush keeps
+    verify logits available at the entry timestep, the logical schedule —
+    and therefore every request's token output — is bit-identical to the
+    local backend; steady-state overlap is the wall-clock model
+    (``core.sim.specpipe_db_sharded_*``).
+
+Both backends expose ``calls`` (a Counter) as the dispatch-count hook: the
+equivalence tests assert ``calls["verify_rows"]`` == one batched dispatch
+per global timestep with pending entries.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.speculative import ModelBundle, remap_tree_caches
+from repro.launch import pipeline as pl
+from repro.models import transformer as tf
+from repro.models.layers import embed
+from repro.serving.scheduler import KVArena, SlotPool
+
+
+class PipelineExecutor:
+    """Backend interface + the shared slot-count bucketing policy.
+
+    Subclasses implement ``prefill`` / ``verify_rows`` / ``commit_rows`` /
+    ``remap_row`` against their own cache storage and expose ``arena``
+    (a ``SlotPool``) for the scheduler's slot accounting."""
+
+    slots: int
+    arena: SlotPool
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.calls = collections.Counter()
+
+    def _bucket(self, rows: int) -> int:
+        """Smallest power-of-two prefix of slot rows spanning every row
+        that must participate (capped at ``slots``)."""
+        b = 1
+        while b < rows:
+            b *= 2
+        return min(b, self.slots)
+
+    # -- interface -----------------------------------------------------
+    def prefill(self, slot: int, prompt):
+        """Fill both models' caches for ``slot`` from a [1, len] prompt;
+        returns the target's last-position logits [1, V]."""
+        raise NotImplementedError
+
+    def verify_rows(self, tokens, positions, masks, model_len, write_idx,
+                    row_on):
+        """ONE fused tree-verify per model over the bucketed prefix of
+        slot rows.  All inputs span the full slot axis ([slots, ...]);
+        returns (target logits [nb, w, V], draft logits [nb, w, V])."""
+        raise NotImplementedError
+
+    def commit_rows(self, model_len, commit_mask) -> None:
+        """Batched two-level cache sync: every row with ``commit_mask``
+        True migrates its tree-buffer row 0 into its model cache at its
+        own ``model_len``; masked rows stay bit-unchanged."""
+        raise NotImplementedError
+
+    def remap_row(self, slot: int, index_map) -> None:
+        """Post-prune tree-cache compaction on one slot's rows."""
+        raise NotImplementedError
+
+
+class LocalFusedExecutor(PipelineExecutor):
+    """PR-2's fused single-device path behind the executor seam: the
+    slot-stacked ``KVArena`` is the storage, ``ModelBundle``'s jitted
+    ``tree_verify_rows`` / ``commit_rows`` closures are the dispatches."""
+
+    def __init__(self, target: ModelBundle, draft: ModelBundle, *,
+                 slots: int, max_len: int, tree_capacity: int,
+                 capacity: int):
+        super().__init__(slots)
+        self.target, self.draft = target, draft
+        self.capacity = capacity
+        self.arena = KVArena(target, draft, slots=slots, max_len=max_len,
+                             tree_capacity=tree_capacity)
+
+    def prefill(self, slot: int, prompt):
+        t_cache, d_cache, t_tree, d_tree = self.arena.caches(slot)
+        t_logits, t_cache = self.target.prefill(prompt, t_cache)
+        _, d_cache = self.draft.prefill(prompt, d_cache)
+        self.arena.store(slot, (t_cache, d_cache, t_tree, d_tree))
+        return t_logits
+
+    def verify_rows(self, tokens, positions, masks, model_len, write_idx,
+                    row_on):
+        nb = self._bucket(int(np.max(np.nonzero(np.asarray(row_on))[0])) + 1)
+        sl = lambda a: a[:nb]
+        t_cache, d_cache, t_tree, d_tree = self.arena.stacked
+        v_all, t_tree = self.target.tree_verify_rows(
+            sl(tokens), sl(positions), sl(masks), t_cache, sl(model_len),
+            t_tree, sl(write_idx), bucket=nb)
+        d_all, d_tree = self.draft.tree_verify_rows(
+            sl(tokens), sl(positions), sl(masks), d_cache, sl(model_len),
+            d_tree, sl(write_idx), bucket=nb)
+        self.arena.set_tree_caches(t_tree, d_tree)
+        self.calls["verify_rows"] += 1
+        return v_all, d_all
+
+    def commit_rows(self, model_len, commit_mask) -> None:
+        node0 = jnp.zeros((self.slots,), jnp.int32)  # row 0 is the root
+        t_cache, d_cache, t_tree, d_tree = self.arena.stacked
+        t_cache = self.target.commit_rows(t_cache, t_tree, node0, model_len,
+                                          commit_mask)
+        d_cache = self.draft.commit_rows(d_cache, d_tree, node0, model_len,
+                                         commit_mask)
+        self.arena.set_model_caches(t_cache, d_cache)
+        self.calls["commit_rows"] += 1
+
+    def remap_row(self, slot: int, index_map) -> None:
+        _, _, t_tree, d_tree = self.arena.stacked
+        t_row = remap_tree_caches(tf.slice_cache_rows(t_tree, slot, 1),
+                                  index_map, self.capacity)
+        d_row = remap_tree_caches(tf.slice_cache_rows(d_tree, slot, 1),
+                                  index_map, self.capacity)
+        self.arena.set_tree_caches(
+            tf.update_cache_rows(t_tree, t_row, slot),
+            tf.update_cache_rows(d_tree, d_row, slot))
+
+
+def _sharded_verify_impl(params, stage_p, stage_valid, model_kv, tree_kv,
+                         node_tokens, node_positions, tree_mask, write_idx,
+                         model_len, row_on, *, bucket, cfg, verify_pass):
+    """ONE compiled dispatch: embed the bucketed entry rows, flush them
+    through every pipeline stage (``make_pipeline_verify``), unembed the
+    exiting activations, scatter the updated tree-cache rows back.
+    ``params`` carries only the embed/final-norm/unembed leaves (the layer
+    stack already rides in ``stage_p``)."""
+    sl = lambda a: a[:bucket]
+    rows = lambda c: jax.tree.map(lambda t: t[:, :bucket], c)
+    mkv_b = [rows(c) for c in model_kv]
+    tkv_b = [rows(c) for c in tree_kv]
+    entry = {
+        "act": embed(params["embed"], sl(node_tokens)),
+        "positions": sl(node_positions),
+        "mask": sl(tree_mask),
+        "write_idx": sl(write_idx),
+        "model_len": sl(model_len),
+        "valid": sl(row_on),
+    }
+    exit_act, _, tkv_b = verify_pass(stage_p, stage_valid, mkv_b, tkv_b,
+                                     entry)
+    logits = tf._logits(params, cfg, exit_act)
+    new_tree_kv = [
+        jax.tree.map(
+            lambda full, upd: jax.lax.dynamic_update_slice_in_dim(
+                full, upd.astype(full.dtype), 0, axis=1), full_c, upd_c)
+        for full_c, upd_c in zip(tree_kv, tkv_b)]
+    return logits, new_tree_kv
+
+
+class ShardedPipelineExecutor(PipelineExecutor):
+    """SpecPipe-DB on the sharded ``launch.pipeline`` deployment.
+
+    The target's uniform layer stack is partitioned over the mesh's
+    "model" axis (``n_stages`` devices, ``stage_params`` layout); its
+    model + tree KV live in stage-layout arenas — lists (per in-stage
+    layer) of [S, slots, rows, ...] buffers, the leading slot dim
+    mirroring the slot-stacked ``KVArena``.  Each global timestep issues
+    exactly ONE sharded dispatch (``calls["pipeline_verify"]``): the
+    batched entry layer rides the ``ppermute`` activation ring through
+    all stages with its per-row metadata frozen at entry, and the exiting
+    hidden states are unembedded into the verify logits.  The draft model
+    (small, replicated) verifies/proposes through the same local fused
+    dispatch the ``LocalFusedExecutor`` uses.
+    """
+
+    def __init__(self, target: ModelBundle, draft: ModelBundle, *,
+                 slots: int, max_len: int, tree_capacity: int,
+                 capacity: int, n_stages: Optional[int] = None, mesh=None,
+                 dtype=jnp.float32):
+        super().__init__(slots)
+        self.target, self.draft = target, draft
+        self.capacity, self.max_len = capacity, max_len
+        width = tree_capacity - capacity
+        assert width >= 1, "tree_capacity must include the width-w slack"
+        if mesh is None:
+            n = n_stages or len(jax.devices())
+            mesh = jax.make_mesh((1, n), ("data", "model"))
+        self.mesh = mesh
+        self.n_stages = mesh.shape["model"]
+        assert n_stages is None or n_stages == self.n_stages, \
+            "n_stages must equal the mesh's 'model' axis size"
+        self.plcfg = pl.PipelineConfig(
+            n_stages=self.n_stages, width=width, tree_capacity=capacity,
+            max_len=max_len)
+        self.lps, self._padded = pl.stage_layout(target.cfg, self.n_stages)
+        self.stage_p, self.stage_valid = pl.stage_params(
+            target.cfg, target.params, self.n_stages)
+        self.model_kv, self.tree_kv = pl.init_stage_caches(
+            target.cfg, self.plcfg, dtype, batch=slots)
+        self._d_cache = draft.init_cache(slots, max_len)
+        self._d_tree = draft.init_tree_caches(slots, tree_capacity)
+        self.arena = SlotPool(slots)
+
+        # only the embed table + final norm + unembed head ride the
+        # per-timestep dispatch — the layer stack is already duplicated
+        # into the stage-sharded ``stage_p`` layout
+        self._head_params = {
+            k: target.params[k] for k in ("embed", "final_norm", "lm_head")
+            if k in target.params}
+        verify_pass = pl.make_pipeline_verify(target.cfg, self.plcfg, mesh,
+                                              dtype)
+        self._verify = jax.jit(functools.partial(
+            _sharded_verify_impl, cfg=target.cfg, verify_pass=verify_pass),
+            static_argnames=("bucket",))
+        self._commit = jax.jit(functools.partial(self._commit_impl,
+                                                 cfg=target.cfg))
+
+    # -- target stage-arena plumbing ------------------------------------
+    @staticmethod
+    def _commit_impl(model_kv, tree_kv, node_idx, model_len, commit_mask,
+                     *, cfg):
+        return [tf.commit_tree_nodes(cfg, mkv, tkv, node_idx, model_len,
+                                     commit_mask)
+                for mkv, tkv in zip(model_kv, tree_kv)]
+
+    def _scatter_prefill(self, stacked_cache, slot: int) -> None:
+        """Scatter a freshly prefilled stacked-layout model cache
+        ([reps, 1, rows, ...] per unit sub-layer) into the stage arena at
+        ``slot`` — layer ``s*lps + l`` lands in stage ``s``, in-stage
+        index ``l`` (the ``stage_params`` layout)."""
+        reps = tf.layout(self.target.cfg)[1]
+        pad = self._padded - reps
+
+        def scatter(l):
+            def f(dst, src):
+                src = src[:, 0]                       # [reps, rows, ...]
+                if pad:
+                    src = jnp.concatenate(
+                        [src, jnp.zeros((pad, *src.shape[1:]), src.dtype)],
+                        0)
+                src = src.reshape(self.n_stages, self.lps,
+                                  *src.shape[1:])[:, l]  # [S, rows, ...]
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src[:, None].astype(dst.dtype), slot, axis=1)
+            return jax.tree.map(f, self.model_kv[l], stacked_cache)
+
+        self.model_kv = [scatter(l) for l in range(self.lps)]
+
+    # -- interface ------------------------------------------------------
+    def prefill(self, slot: int, prompt):
+        t_cache = self.target.init_cache(1, self.max_len)
+        t_logits, t_cache = self.target.prefill(prompt, t_cache)
+        # the pure-stack arch has exactly one attention sub-layer per unit
+        self._scatter_prefill(t_cache["stack"][0], slot)
+        d_row = tf.slice_cache_rows(self._d_cache, slot, 1)
+        _, d_row = self.draft.prefill(prompt, d_row)
+        self._d_cache = tf.update_cache_rows(self._d_cache, d_row, slot)
+        return t_logits
+
+    def verify_rows(self, tokens, positions, masks, model_len, write_idx,
+                    row_on):
+        nb = self._bucket(int(np.max(np.nonzero(np.asarray(row_on))[0])) + 1)
+        v_all, self.tree_kv = self._verify(
+            self._head_params, self.stage_p, self.stage_valid,
+            self.model_kv, self.tree_kv, tokens, positions, masks,
+            write_idx, model_len, jnp.asarray(np.asarray(row_on)),
+            bucket=nb)
+        sl = lambda a: a[:nb]
+        d_all, self._d_tree = self.draft.tree_verify_rows(
+            sl(tokens), sl(positions), sl(masks), self._d_cache,
+            sl(model_len), self._d_tree, sl(write_idx), bucket=nb)
+        self.calls["verify_rows"] += 1
+        self.calls["pipeline_verify"] += 1
+        return v_all, d_all
+
+    def commit_rows(self, model_len, commit_mask) -> None:
+        node0 = jnp.zeros((self.slots,), jnp.int32)
+        self.model_kv = self._commit(self.model_kv, self.tree_kv, node0,
+                                     model_len, commit_mask)
+        self._d_cache = self.draft.commit_rows(
+            self._d_cache, self._d_tree, node0, model_len, commit_mask)
+        self.calls["commit_rows"] += 1
+
+    def remap_row(self, slot: int, index_map) -> None:
+        def one(c):
+            row = jax.tree.map(lambda t: t[:, slot:slot + 1], c)
+            row = remap_tree_caches(row, index_map, self.capacity)
+            return jax.tree.map(
+                lambda full, r: full.at[:, slot:slot + 1].set(
+                    r.astype(full.dtype)), c, row)
+
+        self.tree_kv = [one(c) for c in self.tree_kv]
+        d_row = remap_tree_caches(
+            tf.slice_cache_rows(self._d_tree, slot, 1), index_map,
+            self.capacity)
+        self._d_tree = tf.update_cache_rows(self._d_tree, d_row, slot)

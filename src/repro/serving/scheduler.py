@@ -2,8 +2,13 @@
 
 The paper's dynamic batching keeps the pipeline full of *different*
 requests: whenever one finishes, the next queued request joins at its
-prefill and decodes alongside the rest.  Two pieces implement that here:
+prefill and decodes alongside the rest.  Three pieces implement that here:
 
+  * ``SlotPool`` — bare slot accounting (free list + in-use set).  The
+    compute backend owns the actual cache storage (see
+    ``serving.executor``): the local backend's ``KVArena`` extends the
+    pool with slot-stacked cache pytrees, while the sharded backend keeps
+    stage-layout arenas of its own and uses the pool unadorned.
   * ``KVArena`` — slot-stacked cache arenas (target + draft model caches
     and the two tree caches, each ONE pytree with a leading slot axis) so
     the fused per-timestep tree-verify dispatch reads every in-flight
@@ -13,16 +18,35 @@ prefill and decodes alongside the rest.  Two pieces implement that here:
     ancestor mask, and recurrent (ssm/rglru) state is re-seeded from zero
     at prefill, so a previous occupant's stale rows and state never leak
     (the equivalence tests pin this).
-  * ``DynamicBatchScheduler`` — FIFO arrival queue with per-request
-    ``arrival_t`` (in pipeline timesteps), admission onto free slots each
-    timestep (join-on-prefill), and retire-on-completion (eos or token
-    budget) which frees the slot for the next refill.
+  * ``DynamicBatchScheduler`` — priority/deadline-aware arrival queue
+    with per-request ``arrival_t`` (in pipeline timesteps), admission
+    onto free slots each timestep (join-on-prefill), and
+    retire-on-completion (eos or token budget) which frees the slot for
+    the next refill.
+
+Admission policy (priority + aging): each ``admit(now)`` considers every
+*arrived* request and admits the one with the highest effective priority
+
+    eff(req, now) = req.priority
+                    + (now - req.arrival_t) // aging        (anti-starvation)
+                    + 1 if req.deadline_t is within ``aging`` timesteps
+
+with ties broken by submission order.  All-default-priority traffic
+submitted in arrival order — the engine's case, and everything the PR-1/
+PR-2 equivalence tests exercise — degenerates to exact FIFO.  The aging
+term applies uniformly, so among equal priorities a request that has
+already waited ``aging`` timesteps longer than a peer is preferred
+(FIFO-by-wait rather than FIFO-by-submission when submissions arrive out
+of arrival order).  Aging bounds starvation: a request waiting
+``aging * Δpriority`` timesteps outranks any fresher request ``Δpriority``
+levels above it, so queue delay is bounded for any bounded priority range
+(tests/test_scheduler_priority.py asserts the reorder, the bound, and the
+equal-priority aging preference).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 
@@ -35,34 +59,19 @@ _store_rows = jax.jit(tf.update_cache_rows, static_argnames=("start",),
                       donate_argnums=(0,))
 
 
-class KVArena:
-    """Slot-stacked KV cache arenas, allocated lazily and recycled across
-    requests.
+class SlotPool:
+    """Free-list accounting for ``slots`` recyclable KV slots.
 
-    All four cache pytrees carry a leading *slot* axis (buffers of the
-    repeated-unit "stack" layout carry it right after their reps dim) —
-    the layout the fused SpecPipe-DB dispatch and the batched per-row
-    commit read/write in place.  ``caches(slot)`` / ``store(slot, ...)``
-    expose per-slot row views for admission prefill and retire.
-    """
+    Storage-agnostic on purpose: the scheduler admits/retires against this
+    interface, and each ``PipelineExecutor`` backend attaches whatever
+    cache layout it needs (slot-stacked pytrees locally, stage-sharded
+    arenas on the pipeline deployment)."""
 
-    def __init__(self, target, draft, *, slots: int, max_len: int,
-                 tree_capacity: int):
+    def __init__(self, slots: int):
         assert slots >= 1
-        self.target, self.draft = target, draft
-        self.slots, self.max_len, self.tree_capacity = \
-            slots, max_len, tree_capacity
+        self.slots = slots
         self._free: List[int] = list(range(slots - 1, -1, -1))  # pop -> 0..
         self._in_use: set = set()
-        self._stacked: Optional[list] = None
-
-    def _ensure(self) -> None:
-        if self._stacked is None:
-            self._stacked = [
-                self.target.init_cache(self.slots, self.max_len),
-                self.draft.init_cache(self.slots, self.max_len),
-                self.target.init_tree_caches(self.slots, self.tree_capacity),
-                self.draft.init_tree_caches(self.slots, self.tree_capacity)]
 
     @property
     def n_free(self) -> int:
@@ -79,6 +88,43 @@ class KVArena:
         if slot in self._in_use:
             raise RuntimeError(f"KV slot {slot} double-allocated")
         self._in_use.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._in_use:
+            raise RuntimeError(f"KV slot {slot} freed but not in use")
+        self._in_use.remove(slot)
+        self._free.append(slot)
+
+
+class KVArena(SlotPool):
+    """Slot-stacked KV cache arenas, allocated lazily and recycled across
+    requests.
+
+    All four cache pytrees carry a leading *slot* axis (buffers of the
+    repeated-unit "stack" layout carry it right after their reps dim) —
+    the layout the fused SpecPipe-DB dispatch and the batched per-row
+    commit read/write in place.  ``caches(slot)`` / ``store(slot, ...)``
+    expose per-slot row views for admission prefill and retire.
+    """
+
+    def __init__(self, target, draft, *, slots: int, max_len: int,
+                 tree_capacity: int):
+        super().__init__(slots)
+        self.target, self.draft = target, draft
+        self.max_len, self.tree_capacity = max_len, tree_capacity
+        self._stacked: Optional[list] = None
+
+    def _ensure(self) -> None:
+        if self._stacked is None:
+            self._stacked = [
+                self.target.init_cache(self.slots, self.max_len),
+                self.draft.init_cache(self.slots, self.max_len),
+                self.target.init_tree_caches(self.slots, self.tree_capacity),
+                self.draft.init_tree_caches(self.slots, self.tree_capacity)]
+
+    def alloc(self) -> int:
+        slot = super().alloc()
         self._ensure()
         return slot
 
@@ -109,12 +155,6 @@ class KVArena:
     def set_tree_caches(self, t_tree, d_tree) -> None:
         self._stacked[2], self._stacked[3] = t_tree, d_tree
 
-    def free(self, slot: int) -> None:
-        if slot not in self._in_use:
-            raise RuntimeError(f"KV slot {slot} freed but not in use")
-        self._in_use.remove(slot)
-        self._free.append(slot)
-
 
 @dataclasses.dataclass
 class SchedulerStats:
@@ -131,37 +171,78 @@ class SchedulerStats:
 
 
 class DynamicBatchScheduler:
-    """FIFO admission of arrived requests onto free KV slots."""
+    """Priority/deadline-aware admission of arrived requests onto free KV
+    slots (default priorities submitted in arrival order degenerate to
+    exact FIFO; see the module docstring for the equal-priority aging
+    preference).
 
-    def __init__(self, arena: KVArena):
+    ``aging`` is the anti-starvation bound: every ``aging`` timesteps a
+    queued request waits, its effective priority rises one level, so a
+    bounded priority spread implies a bounded queue delay no matter how
+    much higher-priority traffic keeps arriving."""
+
+    def __init__(self, arena: SlotPool, *, aging: int = 8):
+        assert aging >= 1
         self.arena = arena
-        self.queue: Deque = collections.deque()
+        self.aging = aging
+        # (submission seq, request) — the seq is the FIFO tie-break and is
+        # carried alongside the request (not keyed on object identity, so
+        # re-submitting the same Request object is well-defined)
+        self._entries: List[Tuple[int, object]] = []
+        self._seq = 0
         self.stats = SchedulerStats()
 
     def submit(self, req) -> None:
-        self.queue.append(req)
+        self._entries.append((self._seq, req))
+        self._seq += 1
         self.stats.submitted_t[req.uid] = getattr(req, "arrival_t", 0)
 
     @property
+    def queue(self) -> List:
+        """Queued requests in submission order (read-only view)."""
+        return [r for _, r in self._entries]
+
+    @property
     def pending(self) -> int:
-        return len(self.queue)
+        return len(self._entries)
 
     def next_arrival(self) -> Optional[int]:
         """Earliest arrival_t among queued requests (None if queue empty)."""
-        if not self.queue:
+        if not self._entries:
             return None
-        return min(getattr(r, "arrival_t", 0) for r in self.queue)
+        return min(getattr(r, "arrival_t", 0) for _, r in self._entries)
+
+    def effective_priority(self, req, now: int) -> int:
+        """priority + waited // aging (+1 inside the deadline window)."""
+        eff = getattr(req, "priority", 0)
+        eff += max(0, now - getattr(req, "arrival_t", 0)) // self.aging
+        deadline = getattr(req, "deadline_t", None)
+        if deadline is not None and deadline - now <= self.aging:
+            eff += 1
+        return eff
+
+    def _pop_best(self, now: int):
+        """Highest effective priority among arrived requests; ties go to
+        the earliest submission (exact FIFO when priorities are equal)."""
+        arrived = [(seq, r) for seq, r in self._entries
+                   if getattr(r, "arrival_t", 0) <= now]
+        if not arrived:
+            return None
+        seq, best = max(arrived,
+                        key=lambda e: (self.effective_priority(e[1], now),
+                                       -e[0]))
+        self._entries.remove((seq, best))
+        return best
 
     def admit(self, now: int) -> List[Tuple[object, int]]:
-        """Admit arrived requests (FIFO) while slots are free.  Returns
-        [(request, slot)] for this timestep's joins."""
+        """Admit arrived requests (best-effective-priority first) while
+        slots are free.  Returns [(request, slot)] for this timestep's
+        joins."""
         admitted: List[Tuple[object, int]] = []
         while self.arena.n_free:
-            req = next((r for r in self.queue
-                        if getattr(r, "arrival_t", 0) <= now), None)
+            req = self._pop_best(now)
             if req is None:
                 break
-            self.queue.remove(req)
             slot = self.arena.alloc()
             self.stats.admitted_t[req.uid] = now
             admitted.append((req, slot))

@@ -1,0 +1,160 @@
+"""Executor-layer tests: SpecPipe-DB on pluggable compute backends.
+
+The logical scheduler must produce bit-identical per-request outputs on
+every backend — ``LocalFusedExecutor`` (PR-2's fused single-device path),
+``ShardedPipelineExecutor`` (the paper's pipelined deployment on an
+n-stage mesh), and the single-request ``PipeDecEngine`` — because the
+executor seam changes *where* the batched verify runs, never *what* is
+computed.  The 8-stage acceptance pin runs in a subprocess
+(``repro.launch.sharded_check``) so the forced host-device count never
+leaks into this process; the in-process tests use a 1-stage mesh, which
+exercises the same ring/psum/stage-masking code paths.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pipedec import PipeDecConfig, PipeDecEngine
+from repro.core.speculative import ModelBundle
+from repro.models import transformer as tf
+from repro.serving import (Request, ShardedPipelineExecutor,
+                           SpecPipeDBEngine, generate_with_executor)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PCFG = PipeDecConfig(n_stages=3, width=4, branch=2)
+MAX_LEN = 128
+
+
+@pytest.fixture(scope="module")
+def bundles(tiny_dense, tiny_draft):
+    tp = tf.init_model(jax.random.PRNGKey(0), tiny_dense)
+    dp = tf.init_model(jax.random.PRNGKey(9), tiny_draft)
+    return ModelBundle(tp, tiny_dense), ModelBundle(dp, tiny_draft)
+
+
+def _mk_reqs(seed, n, arrivals=None, max_new=None):
+    rng = np.random.default_rng(seed)
+    return [Request(i,
+                    rng.integers(0, 100, size=int(rng.integers(3, 8)))
+                    .astype(np.int32),
+                    int(max_new[i]) if max_new else int(rng.integers(3, 7)),
+                    arrival_t=int(arrivals[i]) if arrivals else 0)
+            for i in range(n)]
+
+
+def _sharded(bundles, slots, n_stages=1):
+    target, draft = bundles
+    return ShardedPipelineExecutor(
+        target, draft, slots=slots, max_len=MAX_LEN,
+        tree_capacity=PCFG.tree_buffer_capacity, capacity=PCFG.capacity,
+        n_stages=n_stages)
+
+
+def test_sharded_executor_bitmatches_local_and_single(bundles):
+    """Staggered arrivals + slot churn on the sharded backend (1-stage
+    mesh): per-uid outputs bit-match the local fused backend and the
+    single-request engine."""
+    target, draft = bundles
+    reqs = _mk_reqs(3, 4, arrivals=[0, 1, 4, 6], max_new=[4, 5, 3, 4])
+    single = PipeDecEngine(target, draft, PCFG, max_len=MAX_LEN)
+    want = {r.uid: single.generate(r.prompt, r.max_new_tokens)[0]
+            for r in reqs}
+
+    outs = {}
+    for name, ex in (("local", None), ("sharded", _sharded(bundles, 2))):
+        eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                               max_slots=2, executor=ex)
+        for r in reqs:
+            eng.submit(r)
+        outs[name] = eng.run()
+    for uid, tokens in want.items():
+        np.testing.assert_array_equal(outs["local"][uid].tokens, tokens,
+                                      err_msg=f"local vs single uid={uid}")
+        np.testing.assert_array_equal(outs["sharded"][uid].tokens, tokens,
+                                      err_msg=f"sharded vs single uid={uid}")
+
+
+def test_sharded_one_batched_tick_per_timestep(bundles):
+    """The dispatch-count hook: every global timestep with pending entries
+    issues exactly ONE sharded pipeline dispatch (and one local draft
+    dispatch) — never one per slot."""
+    target, draft = bundles
+    reqs = _mk_reqs(4, 3, arrivals=[0, 0, 2], max_new=[4, 3, 4])
+    ex = _sharded(bundles, 2)
+    eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                           max_slots=2, executor=ex)
+    before = {b: dict(b.calls) for b in (target, draft)}
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+
+    disp = eng.stats.verify_dispatches
+    assert len(disp) == eng.stats.timesteps
+    assert max(disp) == 1
+    assert ex.calls["pipeline_verify"] == sum(disp)
+    assert ex.calls["verify_rows"] == sum(disp)
+    # draft rides the same fused dispatch cadence, replicated locally
+    assert draft.calls["tree_verify_rows"] - \
+        before[draft].get("tree_verify_rows", 0) == sum(disp)
+    # neither model ever falls back to the per-slot looped dispatch
+    for b in (target, draft):
+        assert b.calls["tree_verify"] == before[b].get("tree_verify", 0)
+    # the target's verify runs through the sharded ring, not its bundle
+    assert target.calls["tree_verify_rows"] == \
+        before[target].get("tree_verify_rows", 0)
+    assert eng.stats.peak_occupancy == 2, "slots actually shared"
+
+
+def test_generate_with_executor_b1_path(bundles):
+    """The B=1 PipeDecEngine path runs against either executor and
+    bit-matches the direct single-request engine."""
+    target, draft = bundles
+    prompt = np.asarray([5, 3, 2, 7, 11], np.int32)
+    single = PipeDecEngine(target, draft, PCFG, max_len=MAX_LEN)
+    want, want_stats = single.generate(prompt, 6)
+
+    for ex in (None, _sharded(bundles, 1)):
+        got, stats = generate_with_executor(target, draft, PCFG, prompt, 6,
+                                            executor=ex, max_len=MAX_LEN)
+        np.testing.assert_array_equal(got, want)
+        assert stats.commits == want_stats.commits
+        assert stats.acceptance == want_stats.acceptance
+
+
+def test_executor_slot_count_must_match(bundles):
+    target, draft = bundles
+    with pytest.raises(AssertionError, match="slot count"):
+        SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN, max_slots=3,
+                         executor=_sharded(bundles, 2))
+
+
+def test_sharded_8stage_acceptance_pin_subprocess():
+    """The PR's acceptance pin on a REAL 8-device simulated mesh: sharded
+    == local == single per uid, one batched tick per timestep.  Runs
+    ``repro.launch.sharded_check`` in a subprocess so the forced
+    host-device count cannot leak into this test process (same pattern as
+    test_dryrun)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.sharded_check", "--stages",
+         "8", "--requests", "4"],
+        capture_output=True, text=True, timeout=1200, env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    summary = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert summary["bit_identical"]
+    assert summary["stages"] == 8
+    assert summary["sharded"]["dispatches"]["pipeline_verify"] > 0
+    assert (summary["sharded"]["tokens_per_timestep"]
+            == summary["local"]["tokens_per_timestep"])
+
+
+def test_devices_not_polluted_by_sharded_check():
+    assert len(jax.devices()) == 1, \
+        "test process must never see the sharded check's fake devices"

@@ -1,5 +1,7 @@
 """shard_map pipeline tick: lowering + numerical equivalence vs the
-single-device tree-verify step (1-stage CPU mesh)."""
+single-device tree-verify step (1-stage CPU mesh).  The ring and stage
+caches are slot-batched (leading B axis) since the executor-layer PR —
+B=1 here is the single-request deployment."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,24 +12,22 @@ from repro.models import transformer as tf
 from repro.models.layers import embed
 
 
-def test_tick_matches_tree_verify(tiny_dense):
-    cfg = tiny_dense
+def _setup(cfg, n_stages=1):
     params = tf.init_model(jax.random.PRNGKey(0), cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
-    pcfg = pl.PipelineConfig(n_stages=1, width=4, tree_capacity=16,
+    mesh = jax.make_mesh((1, n_stages), ("data", "model"))
+    pcfg = pl.PipelineConfig(n_stages=n_stages, width=4, tree_capacity=16,
                              max_len=32)
-    sp, valid = pl.stage_params(cfg, params, 1)
-    model_kv, tree_kv = pl.init_stage_caches(cfg, pcfg)
-    ring = pl.init_ring(cfg, pcfg)
-    tick = pl.make_pipedec_tick(cfg, pcfg, mesh)
+    sp, valid = pl.stage_params(cfg, params, n_stages)
+    return params, mesh, pcfg, sp, valid
 
-    # prefill on the reference path, then present one tree layer
+
+def _reference(cfg, params, pcfg):
+    """Prefill, then one reference tree-verify of a root layer."""
     cache = tf.init_cache(cfg, 1, 32)
     prompt = jnp.asarray([[5, 3, 2, 7]], jnp.int32)
     logits0, cache = tf.prefill(params, cfg, prompt, cache)
     root = jnp.argmax(logits0, -1)  # [1]
 
-    # reference verify
     tcaps = tf.init_tree_caches(cfg, 1, pcfg.tree_capacity + pcfg.width)
     mask = np.zeros((4, pcfg.tree_capacity + pcfg.width), bool)
     mask[0, 0] = True
@@ -35,34 +35,95 @@ def test_tick_matches_tree_verify(tiny_dense):
     positions = jnp.asarray([[4, 0, 0, 0]], jnp.int32)
     ref_logits, _ = tf.tree_verify_step(params, cfg, tokens, positions,
                                         jnp.asarray(mask), cache, 4, tcaps, 0)
+    return cache, tokens, positions, mask, ref_logits
 
-    # pipeline tick: copy the prefilled model cache into stage layout
-    # (list over in-stage layers of [S=1, B, rows, ...])
+
+def _stage_model_kv(cache):
+    """Copy a prefilled (stacked) model cache into 1-stage layout
+    ([S=1, B=1, rows, ...] per in-stage layer)."""
     stacked = cache["stack"][0]  # unit has one sublayer: {k,v} [reps,1,...]
     reps = len(jax.tree.leaves(stacked)[0])
-    model_kv = [jax.tree.map(lambda t: t[l][None], stacked)
-                for l in range(reps)]
-    x_in = embed(params["embed"], tokens)[0]  # [w, d]
+    return [jax.tree.map(lambda t: t[l][None], stacked)
+            for l in range(reps)]
+
+
+def test_tick_matches_tree_verify(tiny_dense):
+    cfg = tiny_dense
+    params, mesh, pcfg, sp, valid = _setup(cfg)
+    _, tree_kv = pl.init_stage_caches(cfg, pcfg)
+    ring = pl.init_ring(cfg, pcfg)
+    tick = pl.make_pipedec_tick(cfg, pcfg, mesh)
+
+    cache, tokens, positions, mask, ref_logits = _reference(cfg, params,
+                                                            pcfg)
+    model_kv = _stage_model_kv(cache)
+    x_in = embed(params["embed"], tokens)  # [1, w, d]
     entry = {
-        "act": x_in, "positions": positions[0],
-        "mask": jnp.asarray(mask), "write_idx": jnp.asarray(0, jnp.int32),
-        "model_len": jnp.asarray(4, jnp.int32),
-        "valid": jnp.asarray(True),
+        "act": x_in, "positions": positions,
+        "mask": jnp.asarray(mask)[None],
+        "write_idx": jnp.zeros((1,), jnp.int32),
+        "model_len": jnp.full((1,), 4, jnp.int32),
+        "valid": jnp.ones((1,), bool),
     }
     with mesh:
         # tick 1: ring empty, entry ingested into stage 0
         tkv1, ring1, exit1 = jax.jit(tick)(sp, valid, model_kv, tree_kv,
                                            ring, entry)
-        assert not bool(exit1["valid"])
+        assert not bool(exit1["valid"][0])
         # tick 2: stage 0 processes the ingested layer; it exits
         entry2 = dict(entry)
-        entry2["valid"] = jnp.asarray(False)
+        entry2["valid"] = jnp.zeros((1,), bool)
         _, _, exit_out = jax.jit(tick)(sp, valid, model_kv, tkv1, ring1,
                                        entry2)
 
-    got = exit_out["act"]  # [w, d] final hidden of the exiting layer
-    got_logits = tf._logits(params, cfg, got[None])[0]
+    got = exit_out["act"]  # [1, w, d] final hidden of the exiting layer
+    got_logits = tf._logits(params, cfg, got)[0]
     np.testing.assert_allclose(np.asarray(got_logits[0]),
                                np.asarray(ref_logits[0, 0]),
                                rtol=2e-4, atol=2e-4)
-    assert bool(exit_out["valid"])
+    assert bool(exit_out["valid"][0])
+
+
+def test_pipeline_verify_flush_matches_tree_verify(tiny_dense):
+    """``make_pipeline_verify`` (the sharded executor's one-dispatch
+    flush) reproduces the reference tree-verify logits, and invalid rows
+    leave the tree caches bit-untouched."""
+    cfg = tiny_dense
+    params, mesh, pcfg, sp, valid = _setup(cfg)
+    _, tree_kv = pl.init_stage_caches(cfg, pcfg, batch=2)
+    verify = pl.make_pipeline_verify(cfg, pcfg, mesh)
+
+    cache, tokens, positions, mask, ref_logits = _reference(cfg, params,
+                                                            pcfg)
+    model_kv1 = _stage_model_kv(cache)
+    # batch 2: row 0 live, row 1 invalid (rides along fully masked)
+    model_kv = [jax.tree.map(
+        lambda t: jnp.concatenate([t, jnp.zeros_like(t)], axis=1), c)
+        for c in model_kv1]
+    entry = {
+        "act": jnp.concatenate([embed(params["embed"], tokens)] * 2, 0),
+        "positions": jnp.concatenate([positions] * 2, 0),
+        "mask": jnp.concatenate([jnp.asarray(mask)[None]] * 2, 0),
+        "write_idx": jnp.zeros((2,), jnp.int32),
+        "model_len": jnp.full((2,), 4, jnp.int32),
+        "valid": jnp.asarray([True, False]),
+    }
+    with mesh:
+        exit_act, exit_valid, new_tkv = jax.jit(verify)(
+            sp, valid, model_kv, tree_kv, entry)
+
+    got_logits = tf._logits(params, cfg, exit_act)
+    np.testing.assert_allclose(np.asarray(got_logits[0, 0]),
+                               np.asarray(ref_logits[0, 0]),
+                               rtol=2e-4, atol=2e-4)
+    assert bool(exit_valid[0]) and not bool(exit_valid[1])
+    # the invalid row's tree-cache rows are bit-unchanged (zeros)
+    for c_new, c_old in zip(new_tkv, tree_kv):
+        jax.tree.map(lambda n, o: np.testing.assert_array_equal(
+            np.asarray(n[:, 1]), np.asarray(o[:, 1])), c_new, c_old)
+    # the live row DID write its layer into the tree cache
+    wrote = any(
+        bool(jnp.any(n[:, 0] != o[:, 0]))
+        for c_new, c_old in zip(new_tkv, tree_kv)
+        for n, o in zip(jax.tree.leaves(c_new), jax.tree.leaves(c_old)))
+    assert wrote

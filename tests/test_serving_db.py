@@ -17,7 +17,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core import tree as tree_lib
 from repro.core.dynbatch import TreeBatch
 from repro.core.pipedec import PipeDecConfig, PipeDecEngine
-from repro.core.speculative import ModelBundle, draft_candidates
+from repro.core.speculative import (ModelBundle, SamplingParams,
+                                    draft_candidates)
 from repro.models import transformer as tf
 from repro.serving import KVArena, Request, ServingEngine, SpecPipeDBEngine
 
@@ -239,6 +240,74 @@ def test_db_fused_bitmatches_looped_and_single(bundles):
                                       err_msg=f"fused vs single uid={uid}")
         np.testing.assert_array_equal(outs[False][uid].tokens, tokens,
                                       err_msg=f"looped vs single uid={uid}")
+
+
+# --------------------------------------------------------------------------
+# (c2) per-request sampling: mixed greedy/stochastic batches
+# --------------------------------------------------------------------------
+def test_mixed_sampling_batch_greedy_bitmatches_single(bundles):
+    """A greedy request sharing the batch with stochastic requests still
+    bit-matches the single-request engine: SamplingParams live on the
+    Request and only shape that request's own token selection."""
+    target, draft = bundles
+    rng = np.random.default_rng(11)
+    greedy = Request(0, rng.integers(0, 100, size=5).astype(np.int32), 5)
+    hot = Request(1, rng.integers(0, 100, size=6).astype(np.int32), 5,
+                  sampling=SamplingParams(temperature=1.0, top_k=8))
+    hot2 = Request(2, rng.integers(0, 100, size=4).astype(np.int32), 4,
+                   sampling=SamplingParams(temperature=0.7, top_p=0.9))
+    want = _single_outputs(bundles, [greedy])
+
+    eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                           max_slots=3)
+    for r in (greedy, hot, hot2):
+        eng.submit(r)
+    res = eng.run()
+    np.testing.assert_array_equal(res[0].tokens, want[0])
+    assert len(res[1].tokens) == hot.max_new_tokens + 1
+    assert len(res[2].tokens) == hot2.max_new_tokens + 1
+
+    # a stochastic request's trace is reproducible under the same run key
+    eng2 = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                            max_slots=3)
+    for r in (greedy, hot, hot2):
+        eng2.submit(r)
+    res2 = eng2.run()
+    for uid in res:
+        np.testing.assert_array_equal(res2[uid].tokens, res[uid].tokens)
+
+
+# --------------------------------------------------------------------------
+# (c3) streaming: tokens emitted at commit time
+# --------------------------------------------------------------------------
+def test_streaming_prefix_equals_final_result(bundles):
+    """``run(on_token=...)`` emits every (uid, token, timestep) at commit
+    time; the streamed per-uid sequence equals the final Result.tokens,
+    the first token lands at the admission timestep, and emission
+    timesteps are non-decreasing."""
+    target, draft = bundles
+    reqs = _mk_reqs(6, 4, arrivals=[0, 1, 3, 7], max_new=[4, 5, 3, 4])
+    eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                           max_slots=2)
+    for r in reqs:
+        eng.submit(r)
+    events = []
+    res = eng.run(on_token=lambda uid, tok, t: events.append((uid, tok, t)))
+
+    streamed = {r.uid: [] for r in reqs}
+    times = {r.uid: [] for r in reqs}
+    for uid, tok, t in events:
+        streamed[uid].append(tok)
+        times[uid].append(t)
+    for r in reqs:
+        np.testing.assert_array_equal(np.asarray(streamed[r.uid]),
+                                      res[r.uid].tokens,
+                                      err_msg=f"uid={r.uid}")
+        assert times[r.uid] == sorted(times[r.uid])
+        assert times[r.uid][0] == eng.sched.stats.admitted_t[r.uid], \
+            "prefill token streams at the admission timestep"
+        # commits stream strictly before the request's retire bookkeeping
+        assert times[r.uid][-1] <= eng.sched.stats.finished_t[r.uid]
 
 
 # --------------------------------------------------------------------------
