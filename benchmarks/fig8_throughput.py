@@ -9,15 +9,18 @@ dispatch landed (``ModelBundle.tree_verify_rows``: ONE batched tree-verify
 per model per timestep over the slot-stacked KV arena) this is the pass
 ``serving.dynbatch.SpecPipeDBEngine`` actually executes, not just the
 priced regime.  The ``specpipe_db_sharded`` curve prices the same schedule
-on the pipelined deployment (``serving.executor.ShardedPipelineExecutor``:
-per-hop ppermute transfer explicit; steady-state overlap), and
-``_flush`` its synchronous-flush variant (what the executor dispatches
-today — bit-exactness first, overlap is the async-stage roadmap item).
+on the pipelined deployment (``serving.executor``: per-hop ppermute
+transfer explicit) in its steady-state overlapped regime —
+``flush=False``, ONE ring tick / stage-hop per timestep, which
+``OverlappedShardedExecutor`` now executes — and ``_flush`` the
+synchronous-flush variant (``ShardedPipelineExecutor``: ``n_stages`` hops
+per timestep inside one dispatch; the bit-exact reference schedule).
 
 Besides printing, ``run()`` writes a machine-readable ``BENCH_fig8.json``
-(modelled curves + a small *measured* SpecPipe-DB engine run with
-tokens/timestep, a TBT proxy, and the executor dispatch counts) so the
-perf trajectory is tracked across PRs.
+(modelled curves + small *measured* SpecPipe-DB engine runs — local
+fused, sharded flush, and sharded overlapped with per-timestep
+dispatch/hop counts showing 1 tick per timestep) so the perf trajectory
+is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -74,6 +77,62 @@ def measure_db_engine(n_stages: int, w: int, c: int = 4, *,
     }
 
 
+def measure_sharded_engines(w: int, c: int = 4, *, slots: int = 3,
+                            new_tokens: int = 16):
+    """Small REAL runs of BOTH sharded executor schedules on the host
+    mesh (one pipeline stage per device; CI's sharded-mesh job runs this
+    under a forced 8-device count).  The per-timestep dispatch counts are
+    what separates the two pricing regimes: the flush schedule spans
+    ``n_stages`` ring hops per timestep inside its one dispatch
+    (``flush=True``), the overlapped schedule exactly ONE
+    (``flush=False`` — the paper's steady-state wall-clock)."""
+    import jax
+
+    from repro.core.pipedec import PipeDecConfig
+    from repro.serving import (OverlappedShardedExecutor, Request,
+                               ShardedPipelineExecutor, SpecPipeDBEngine)
+
+    n_stages = len(jax.devices())
+    target, draft = common.trained_pair()
+    prompts = common.eval_prompts(n=4, length=32)
+    # the overlapped ring length is pcfg.n_stages, so the measured pair
+    # shares one pcfg sized to the mesh (outputs must also bit-match)
+    pcfg = PipeDecConfig(n_stages=n_stages, width=w, branch=c)
+    out = {"mesh_stages": n_stages, "slots": slots,
+           "requests": len(prompts), "new_tokens": new_tokens}
+    results = {}
+    for name, cls in (("flush", ShardedPipelineExecutor),
+                      ("overlapped", OverlappedShardedExecutor)):
+        ex = cls(target, draft, slots=slots, max_len=256,
+                 tree_capacity=pcfg.tree_buffer_capacity,
+                 capacity=pcfg.capacity, n_stages=n_stages)
+        eng = SpecPipeDBEngine(target, draft, pcfg, max_len=256,
+                               max_slots=slots, executor=ex)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid, p, new_tokens, arrival_t=2 * uid))
+        results[name] = eng.run()
+        steps = max(eng.stats.timesteps, 1)
+        if name == "overlapped":
+            ticks = ex.calls["pipeline_tick"]
+            hops = ticks                       # one stage-hop per tick
+        else:
+            ticks = ex.calls["pipeline_verify"]
+            hops = ticks * n_stages            # each flush spans all stages
+        out[name] = {
+            "timesteps": eng.stats.timesteps,
+            "tokens_per_timestep": round(eng.stats.tokens_per_timestep, 4),
+            "dispatch_counts": dict(ex.calls),
+            "ticks_per_timestep": round(ticks / steps, 4),
+            "hops_per_timestep": round(hops / steps, 4),
+        }
+    assert all(
+        np.array_equal(results["flush"][u].tokens,
+                       results["overlapped"][u].tokens)
+        for u in results["flush"]), "schedules must agree token-for-token"
+    out["bit_identical"] = True
+    return out
+
+
 def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
         out_json: str = "BENCH_fig8.json"):
     t0 = time.perf_counter()
@@ -124,6 +183,14 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
               f"{measured['tokens_per_timestep']:.2f} tokens/timestep, "
               f"{measured['verify_dispatches_total']} fused dispatches in "
               f"{measured['timesteps']} timesteps")
+    sharded = measure_sharded_engines(w)
+    if verbose:
+        print(f"  measured sharded ({sharded['mesh_stages']} stage(s)): "
+              f"flush {sharded['flush']['hops_per_timestep']:.2f} vs "
+              f"overlapped {sharded['overlapped']['hops_per_timestep']:.2f} "
+              f"ring hops/timestep "
+              f"({sharded['overlapped']['ticks_per_timestep']:.2f} "
+              f"ticks/timestep); outputs bit-identical")
     payload = {
         "n_stages": n_stages, "width": w,
         "acceptance": {"pipedec_tokens_per_timestep": tps,
@@ -131,6 +198,7 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
                        "stpp_mean_accepted": stpp_acc},
         "modelled_tokens_per_s": curves,
         "measured_engine": measured,
+        "measured_engine_sharded": sharded,
     }
     if out_json:
         with open(out_json, "w") as f:

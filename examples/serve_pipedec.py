@@ -13,7 +13,8 @@ from repro.core.speculative import ModelBundle
 from repro.data import ByteCorpus, DataConfig, synthetic_corpus
 from repro.launch.train import train
 from repro.models.config import ModelConfig
-from repro.serving import (Request, ServingEngine, ShardedPipelineExecutor,
+from repro.serving import (OverlappedShardedExecutor, Request,
+                           ServingEngine, ShardedPipelineExecutor,
                            SpecPipeDBEngine)
 
 TARGET = ModelConfig(name="srv-target", family="dense", num_layers=4,
@@ -122,6 +123,36 @@ def main():
           f"{dbx.stats.tokens_per_timestep:.2f} tokens/timestep, "
           f"{sharded.calls['pipeline_verify']} batched pipeline dispatches "
           f"in {dbx.stats.timesteps} timesteps; outputs identical ✓")
+
+    print("\n== overlapped executor: one ring tick per timestep ==")
+    # the steady-state schedule (launch.serve --overlap): the ring stays
+    # full across timesteps, each timestep is ONE stage-hop instead of an
+    # n_stages-hop flush, verify logits resolve at each layer's exit, and
+    # prunes propagate in-ring — same committed tokens, paper wall-clock
+    # (the flush dispatches n_stages hops per timestep, this one hop).
+    # PipeDecConfig.n_stages must equal the mesh stage count: the ring IS
+    # the flight bookkeeping.
+    pcfg_ov = PipeDecConfig(n_stages=len(jax.devices()), width=pcfg.width,
+                            branch=pcfg.branch)
+    overlapped = OverlappedShardedExecutor(
+        target, draft, slots=3, max_len=512,
+        tree_capacity=pcfg_ov.tree_buffer_capacity,
+        capacity=pcfg_ov.capacity, n_stages=len(jax.devices()))
+    dbo = SpecPipeDBEngine(target, draft, pcfg_ov, max_slots=3,
+                           executor=overlapped)
+    for r in reqs:
+        dbo.submit(Request(r.uid, r.prompt, r.max_new_tokens,
+                           arrival_t=4 * r.uid))
+    over_results = dbo.run()
+    for uid, res in sorted(over_results.items()):
+        assert np.array_equal(res.tokens, pp_results[uid].tokens), \
+            "overlapped executor output must be bit-identical too"
+    assert overlapped.calls["pipeline_tick"] == dbo.stats.timesteps
+    print(f"  {overlapped.n_stages}-stage mesh: "
+          f"{dbo.stats.tokens_per_timestep:.2f} tokens/timestep, "
+          f"{overlapped.calls['pipeline_tick']} ring ticks in "
+          f"{dbo.stats.timesteps} timesteps (1 tick/timestep), "
+          f"{overlapped.calls['kill']} in-ring kills; outputs identical ✓")
 
 
 if __name__ == "__main__":

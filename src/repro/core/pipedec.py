@@ -74,9 +74,18 @@ class PipeDecConfig:
 
 @dataclasses.dataclass
 class Flight:
+    """One in-flight tree layer between entry and exit.
+
+    ``logits`` is either the concrete [w, V] verify logits (the flush /
+    local schedules compute them at entry and buffer them here) or a
+    *deferred* handle exposing ``resolve() -> [w, V]`` (the overlapped
+    sharded schedule — the layer is still riding the stage ring and its
+    logits only exist at ``exit_t``, when the backend resolves the
+    future).  ``exit_apply`` resolves at consumption time, so the engine
+    schedule is identical either way."""
     exit_t: int
     node_idx: np.ndarray      # [w] int32 global tree indices (-1 invalid)
-    logits: jnp.ndarray       # [w, V]
+    logits: Any               # [w, V] array, or a deferred-logits handle
 
 
 @dataclasses.dataclass
@@ -258,9 +267,15 @@ class PipeDecEngine:
 
     # ---- phase 1b: apply-fused (bookkeeping from the verify logits) --
     def apply_entry(self, st: DecodeState, entry: "EntryInputs",
-                    v_logits: jnp.ndarray, d_logits: jnp.ndarray) -> None:
+                    v_logits, d_logits: jnp.ndarray) -> None:
         """Record the entry's in-flight state from this request's rows of
-        the (possibly fused) tree-verify logits ([w, V] each)."""
+        the (possibly fused) tree-verify logits ([w, V] each).
+
+        ``v_logits`` may be a deferred handle instead of an array (the
+        overlapped sharded backend delivers the target's verify logits at
+        exit time; see ``Flight``).  ``d_logits`` is always concrete —
+        the draft proposes the next layer the same timestep, so it runs
+        beside stage 0 with no pipeline delay on every backend."""
         st.flights.append(Flight(exit_t=st.t + self.pcfg.n_stages - 1,
                                  node_idx=entry.node_idx,
                                  logits=v_logits))
@@ -329,7 +344,10 @@ class PipeDecEngine:
         p = self.pcfg
         sp = st.sampling if st.sampling is not None else p.sampling
         st.key, sk = jax.random.split(st.key)
-        x = int(select_token(fl.logits[root_row], sp, sk))
+        logits = fl.logits
+        if hasattr(logits, "resolve"):   # deferred future: resolved by the
+            logits = logits.resolve()    # backend the tick the layer exits
+        x = int(select_token(logits[root_row], sp, sk))
         st.committed.append(x)
         st.stats.commits += 1
         commit_caches(st)

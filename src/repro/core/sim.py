@@ -148,15 +148,17 @@ def specpipe_db_tbt(hw: StageHardware, batch: int,
 
 
 # --------------------------------------------------------------------------
-# SpecPipe-DB on the sharded deployment (serving.executor
-# .ShardedPipelineExecutor over launch.pipeline): the batched tree layers
-# ride the ppermute activation ring, so the per-hop transfer cost is
-# explicit.  ``flush=True`` prices the synchronous-flush executor (each
+# SpecPipe-DB on the sharded deployment (serving.executor over
+# launch.pipeline): the batched tree layers ride the ppermute activation
+# ring, so the per-hop transfer cost is explicit.  ``flush=True`` prices
+# the synchronous-flush executor (``ShardedPipelineExecutor``: each
 # timestep pushes the batched entry through all n_stages hops inside one
-# dispatch — the bit-exactness-preserving schedule this repo ships);
-# ``flush=False`` prices the steady-state overlapped deployment (ring
-# full, one hop per timestep — the paper's wall-clock regime every later
-# async-stage PR moves toward).
+# dispatch — the bit-exact reference schedule); ``flush=False`` prices the
+# steady-state overlapped deployment (``OverlappedShardedExecutor``: ring
+# always full, ONE tick per timestep with deferred exit logits and
+# in-ring pruning propagation — the paper's wall-clock regime, now
+# executed and measured: benchmarks/fig8_throughput.py records 1
+# tick/timestep vs the flush's n_stages hops, with bit-identical tokens).
 # --------------------------------------------------------------------------
 def specpipe_db_sharded_timestep(hw: StageHardware, batch: int,
                                  batch_scale: Callable[[int], float] = None,

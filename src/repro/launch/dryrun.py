@@ -212,6 +212,7 @@ def lower_pipeline_tick(arch: str, *, n_stages: int = 16, width: int = 32,
         "write_idx": jax.ShapeDtypeStruct((1,), jnp.int32),
         "model_len": jax.ShapeDtypeStruct((1,), jnp.int32),
         "valid": jax.ShapeDtypeStruct((1,), jnp.bool_),
+        "version": jax.ShapeDtypeStruct((1,), jnp.int32),
     }
     from jax.sharding import NamedSharding, PartitionSpec as P
     stage_sh = lambda tree_: jax.tree.map(

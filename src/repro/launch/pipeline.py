@@ -4,30 +4,62 @@ The paper's cluster runs MPMD stages coordinated by Redis; on TPU the same
 schedule is SPMD: every device executes one *tick* per timestep.
 
 One PipeDec tick (= paper timestep, Fig. 2):
-  * each stage applies its layer block to the tree layer it currently
+  * stage 0 ingests the newest tree layer (from the draft model); every
+    other stage keeps the in-flight layer its ring slot holds;
+  * each stage first applies the *control* message that reached it this
+    tick (exit-commit + prune compaction — the paper's pruning-propagation
+    stage, see below), then applies its layer block to the tree layer it
     holds, reading/writing its local slice of the two-level KV cache;
-  * activations rotate one stage forward via ``jax.lax.ppermute`` —
-    this collective IS the paper's transmission scheduler (Appendix A),
-    compiled instead of orchestrated;
-  * stage 0 ingests the newest tree layer (from the draft model);
-    the activation leaving the last stage is gathered and unembedded into
-    the verification logits of the layer that completed the pipeline.
+  * the activation leaving the last stage is gathered and unembedded into
+    the verification logits of the layer that completed the pipeline;
+  * activations + metadata rotate one stage forward via
+    ``jax.lax.ppermute`` — this collective IS the paper's transmission
+    scheduler (Appendix A), compiled instead of orchestrated.
+
+A layer entering at timestep t therefore exits at ``t + n_stages - 1`` —
+the same pipeline-fill latency the logical engine's ``Flight.exit_t``
+books, so one tick per timestep IS the engine schedule, compiled.
 
 Each in-flight layer carries its metadata (absolute positions, ancestor
-mask rows, tree-buffer write index, committed length) in the same ring so
-every stage uses the values frozen at that layer's entry — exactly the
-paper's data-flow semantics.
+mask rows, tree-buffer write index, committed length, and a per-slot tree
+**version** counter) in the same ring so every stage uses the values
+frozen at that layer's entry — exactly the paper's data-flow semantics.
 
 SpecPipe-DB rides the same ring *batched*: every ring/entry leaf and every
 stage cache carries a leading slot axis (``batch`` = KV slots), so one tick
-moves EVERY in-flight request's tree layer one stage forward — the
-per-row ``model_len`` / ``tree_write_index`` / ``tree_mask [B, n, Tcap]``
-Ctx from the fused single-device path is exactly what each stage applies
-to its local slice.  ``make_pipeline_verify`` flushes one batched layer
-through all stages inside ONE compiled dispatch (ingest + ``n_stages``
-ticks, ``ppermute`` rotation untouched) — the compute backend
-``serving.executor.ShardedPipelineExecutor`` issues it once per global
-timestep.
+moves EVERY in-flight request's tree layer one stage forward.
+
+Two executor schedules drive this tick (``serving.executor``):
+
+  * **flush** (``ShardedPipelineExecutor`` via ``make_pipeline_verify``):
+    each global timestep pushes the batched entry layer through all
+    ``n_stages`` hops inside ONE compiled dispatch, so verify logits are
+    available at the *entry* timestep and buffered by the engine until
+    exit.  Bit-exact by construction; prices at ``n_stages`` hops per
+    timestep (``core.sim.specpipe_db_sharded_* flush=True``).
+  * **overlapped** (``OverlappedShardedExecutor``): the ring persists
+    across timesteps and stays *full* — ONE tick per global timestep, the
+    paper's steady-state wall-clock regime (``flush=False`` pricing).
+    Verify logits only exist at the layer's *exit* timestep, so the
+    engine's ``Flight``s resolve deferred-logit futures, and correctness
+    under pruning needs the two in-ring mechanisms this module compiles:
+
+      - **ctrl channel** (pruning propagation): the exit decision at
+        timestep t (commit length + old→new prune ``index_map``) enters
+        the ring at t+1 and reaches stage k at tick t+1+k — exactly after
+        stage k processed every pre-prune in-flight layer (stage k runs
+        layer j at tick j+k) and exactly before it processes the first
+        post-prune layer.  Each stage applies commit-then-compact to its
+        local cache slice on arrival, so pre-prune layers always read
+        pre-prune rows and post-prune layers always read compacted rows —
+        the in-flight schedule computes bit-identical logits to the flush.
+      - **kill + version** (miss / retire invalidation): a ``kill [B]``
+        input invalidates every in-flight layer of a pruned-to-miss or
+        retired slot wherever it is in the ring (stale layers stop
+        writing their stage tree-cache rows and exit with
+        ``valid=False``); the per-slot ``version`` counter rides with
+        each layer and is returned at exit so the executor can prove a
+        resolved future belongs to the slot's *current* tree.
 
 Supports attention-family architectures (dense / VLM / MoE-with-attention);
 recurrent families use chain-mode speculative decoding instead (DESIGN.md
@@ -38,7 +70,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import inspect
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,12 +153,18 @@ def init_stage_caches(cfg: ModelConfig, pcfg: PipelineConfig,
 
 
 def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32,
-              batch: int = 1):
+              batch: int = 1, ctrl: bool = False):
     """In-flight activation + metadata ring, one slot per stage.  Every
     leaf carries the KV-slot axis ``batch`` right after the stage dim —
-    a batched tick moves every slot's layer one stage forward together."""
+    a batched tick moves every slot's layer one stage forward together.
+
+    ``ctrl=True`` (the overlapped executor) adds the pruning-propagation
+    channel: per stage-slot exit-commit mask/length and an old→new prune
+    ``index_map`` that each stage applies to its local cache slice the
+    tick the message reaches it (identity maps are the no-op, so the
+    channel is always well-formed)."""
     s, w = pcfg.n_stages, pcfg.width
-    return {
+    ring = {
         "act": jnp.zeros((s, batch, w, cfg.d_model), dtype),
         "positions": jnp.zeros((s, batch, w), jnp.int32),
         "mask": jnp.zeros((s, batch, w, pcfg.tree_capacity + pcfg.width),
@@ -134,7 +172,15 @@ def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32,
         "write_idx": jnp.zeros((s, batch), jnp.int32),
         "model_len": jnp.zeros((s, batch), jnp.int32),
         "valid": jnp.zeros((s, batch), bool),
+        "version": jnp.zeros((s, batch), jnp.int32),
     }
+    if ctrl:
+        ring["c_commit"] = jnp.zeros((s, batch), bool)
+        ring["c_len"] = jnp.zeros((s, batch), jnp.int32)
+        ring["c_imap"] = jnp.broadcast_to(
+            jnp.arange(pcfg.tree_capacity, dtype=jnp.int32),
+            (s, batch, pcfg.tree_capacity))
+    return ring
 
 
 def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
@@ -148,9 +194,28 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
       entry:      dict with the NEW layer for stage 0:
                   tokens->embedded x [B, w, d], positions [B, w],
                   mask [B, w, tcap+w], write_idx [B], model_len [B],
-                  valid [B]
-    Returns (new tree caches, new ring,
-             exit: {act [B, w, d], valid [B]}).
+                  valid [B], version [B]
+      kill:       [B] bool or None — invalidate every in-flight layer of
+                  these slots (miss / retire: the pruning-propagation
+                  kill; the entry ingested THIS tick is never killed)
+      ctrl:       None, or {"commit" [B] bool, "commit_len" [B] i32,
+                  "index_map" [B, cap] i32, "clear" [B] bool} — the exit
+                  decision of the previous timestep, entering at stage 0
+                  and applied by each stage (commit row 0 → model cache,
+                  then compact the tree rows) the tick it arrives, BEFORE
+                  that stage's layer compute.  Identity index_map +
+                  commit False is the per-slot no-op.  ``clear``
+                  neutralises the slot's ctrl messages still RIDING the
+                  ring (retire: the slot is being recycled, and a
+                  retired occupant's in-flight commits/prunes must never
+                  reach the next occupant's freshly prefilled caches);
+                  a miss must NOT clear — the missed request's earlier
+                  commits stay valid and must finish propagating.
+
+    Stage 0 ingests the entry THIS tick (and processes it this tick), so
+    an entry at tick t exits at tick ``t + n_stages - 1`` — the engine's
+    ``Flight.exit_t``.  Returns (new model_kv, new tree_kv, new ring,
+    exit: {act [B, w, d], valid [B], version [B]}).
     """
     s_axis = "model"
     n_stages = pcfg.n_stages
@@ -182,69 +247,117 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
                 tc[0], ntc[0]))
         return xs, new_tkv
 
-    def tick(stage_p, stage_valid, model_kv, tree_kv, ring, entry):
-        def body(stage_p, stage_valid, model_kv, tree_kv, ring, entry):
-            # local slices carry a leading stage dim of 1 (dropped here)
+    def tick(stage_p, stage_valid, model_kv, tree_kv, ring, entry,
+             kill=None, ctrl=None):
+        def body(stage_p, stage_valid, model_kv, tree_kv, ring, entry,
+                 kill, ctrl):
+            # local slices carry a leading stage dim of 1 (dropped below)
             sp = [jax.tree.map(lambda t: t[0], lp) for lp in stage_p]
             sv = stage_valid[0]
             kv = [jax.tree.map(lambda t: t[0], lc) for lc in model_kv]
             tkv = [jax.tree.map(lambda t: t[0], lc) for lc in tree_kv]
 
-            x, new_tkv = local_stage(
-                sp, sv, kv, tkv, ring["act"][0], ring["positions"][0],
-                ring["mask"][0], ring["write_idx"][0], ring["model_len"][0],
-                ring["valid"][0])
-
-            # rotate the ring one stage forward (paper's transmission step)
-            perm = [(i, i + 1) for i in range(n_stages - 1)]
-            shift = lambda v: jax.lax.ppermute(v, s_axis, perm)
-            rotated = {
-                "act": shift(x[None]),
-                "positions": shift(ring["positions"]),
-                "mask": shift(ring["mask"]),
-                "write_idx": shift(ring["write_idx"]),
-                "model_len": shift(ring["model_len"]),
-                "valid": shift(ring["valid"]),
-            }
-            # stage 0 ingests the new layer from the draft model
             idx = jax.lax.axis_index(s_axis)
             is0 = (idx == 0)
-            new_ring = {
-                "act": jnp.where(is0, entry["act"][None], rotated["act"]),
-                "positions": jnp.where(is0, entry["positions"][None],
-                                       rotated["positions"]),
-                "mask": jnp.where(is0, entry["mask"][None],
-                                  rotated["mask"]),
-                "write_idx": jnp.where(is0, entry["write_idx"][None],
-                                       rotated["write_idx"]),
-                "model_len": jnp.where(is0, entry["model_len"][None],
-                                       rotated["model_len"]),
-                "valid": jnp.where(is0, entry["valid"][None],
-                                   rotated["valid"]),
-            }
-            # the activation leaving the last stage = exiting layer
-            is_last = (idx == n_stages - 1).astype(x.dtype)
-            exit_act = jax.lax.psum(x * is_last, s_axis)
-            exit_valid = jax.lax.psum(
-                (ring["valid"][0] & (idx == n_stages - 1))
-                .astype(jnp.int32), s_axis) > 0
-            new_tkv = [jax.tree.map(lambda t: t[None], lc) for lc in new_tkv]
-            return (new_tkv, new_ring,
-                    {"act": exit_act, "valid": exit_valid})
 
+            # 1. kill: invalidate the in-flight layers of pruned/retired
+            # slots wherever they are in the ring — they stop writing and
+            # exit dead (their tree version is stale)
+            valid_r = ring["valid"]
+            if kill is not None:
+                valid_r = valid_r & ~kill[None]
+
+            # 2. ingest: stage 0 adopts the new layer (+ the ctrl message
+            # entering behind the in-flight layers); every other stage
+            # works on the layer its ring slot holds
+            pick = lambda e, r: jnp.where(is0, e[None], r)
+            cur = {
+                "act": pick(entry["act"], ring["act"]),
+                "positions": pick(entry["positions"], ring["positions"]),
+                "mask": pick(entry["mask"], ring["mask"]),
+                "write_idx": pick(entry["write_idx"], ring["write_idx"]),
+                "model_len": pick(entry["model_len"], ring["model_len"]),
+                "valid": pick(entry["valid"], valid_r),
+                "version": pick(entry["version"], ring["version"]),
+            }
+            if ctrl is not None:
+                # retire-clear: neutralise the slot's ctrl wherever it is
+                # in the ring (a recycled slot's old occupant may still
+                # have commit/remap messages trailing its killed layers)
+                clr = ctrl["clear"]
+                cap_i = ctrl["index_map"].shape[-1]
+                ring_commit = ring["c_commit"] & ~clr[None]
+                ring_len = jnp.where(clr[None], 0, ring["c_len"])
+                ring_imap = jnp.where(
+                    clr[None, :, None],
+                    jnp.arange(cap_i, dtype=jnp.int32)[None, None],
+                    ring["c_imap"])
+                cur["c_commit"] = pick(ctrl["commit"], ring_commit)
+                cur["c_len"] = pick(ctrl["commit_len"], ring_len)
+                cur["c_imap"] = pick(ctrl["index_map"], ring_imap)
+
+                # 3. pruning propagation: apply the ctrl that reached this
+                # stage — commit first (tree row 0 is still the exiting
+                # root), then compact this stage's tree rows.  The message
+                # trails every pre-prune in-flight layer and leads every
+                # post-prune one, so each stage flips its local caches at
+                # exactly the schedule point the flush executor does
+                # centrally.
+                commit_on, commit_len = cur["c_commit"][0], cur["c_len"][0]
+                node0 = jnp.zeros_like(commit_len)
+                kv = [tf.commit_tree_nodes(cfg, kv[l], tkv[l], node0,
+                                           commit_len, commit_on)
+                      for l in range(lps)]
+                imap = cur["c_imap"][0]
+                tkv = [tf.remap_tree_cache_rows(tkv[l], imap)
+                       for l in range(lps)]
+
+            # 4. compute: this stage's layers over the layer it holds
+            x, new_tkv = local_stage(
+                sp, sv, kv, tkv, cur["act"][0], cur["positions"][0],
+                cur["mask"][0], cur["write_idx"][0], cur["model_len"][0],
+                cur["valid"][0])
+
+            # 5. exit: the layer the last stage just finished
+            is_last = (idx == n_stages - 1)
+            fl = is_last.astype(x.dtype)
+            exit_act = jax.lax.psum(x * fl, s_axis)
+            exit_valid = jax.lax.psum(
+                (cur["valid"][0] & is_last).astype(jnp.int32), s_axis) > 0
+            exit_version = jax.lax.psum(
+                cur["version"][0] * is_last.astype(jnp.int32), s_axis)
+
+            # 6. rotate one stage forward (paper's transmission step);
+            # stage 0's slot empties (refilled by the next ingest)
+            perm = [(i, i + 1) for i in range(n_stages - 1)]
+            shift = lambda v: jax.lax.ppermute(v, s_axis, perm)
+            # rotate the POST-compute activation; the stale pre-compute
+            # act must not ride (nor cost a dead collective)
+            new_ring = {k: shift(v) for k, v in cur.items() if k != "act"}
+            new_ring["act"] = shift(x[None])
+
+            new_kv = [jax.tree.map(lambda t: t[None], lc) for lc in kv]
+            new_tkv = [jax.tree.map(lambda t: t[None], lc) for lc in new_tkv]
+            return (new_kv, new_tkv, new_ring,
+                    {"act": exit_act, "valid": exit_valid,
+                     "version": exit_version})
+
+        kv_spec = jax.tree.map(lambda _: P(s_axis), model_kv)
         tkv_spec = jax.tree.map(lambda _: P(s_axis), tree_kv)
         ring_spec = jax.tree.map(lambda _: P(s_axis), ring)
         entry_spec = jax.tree.map(lambda _: P(), entry)
+        kill_spec = None if kill is None else P()
+        ctrl_spec = None if ctrl is None else jax.tree.map(
+            lambda _: P(), ctrl)
         out = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(s_axis), stage_p),
-                      P(s_axis),
-                      jax.tree.map(lambda _: P(s_axis), model_kv),
-                      tkv_spec, ring_spec, entry_spec),
-            out_specs=(tkv_spec, ring_spec,
-                       {"act": P(), "valid": P()}),
+                      P(s_axis), kv_spec, tkv_spec, ring_spec, entry_spec,
+                      kill_spec, ctrl_spec),
+            out_specs=(kv_spec, tkv_spec, ring_spec,
+                       {"act": P(), "valid": P(), "version": P()}),
             check_vma=False,
-        )(stage_p, stage_valid, model_kv, tree_kv, ring, entry)
+        )(stage_p, stage_valid, model_kv, tree_kv, ring, entry, kill, ctrl)
         return out
 
     return tick
@@ -252,22 +365,25 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
 
 def make_pipeline_verify(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                          dtype=jnp.float32):
-    """One-dispatch batched tree-verify through the sharded pipeline.
+    """One-dispatch batched tree-verify through the sharded pipeline (the
+    FLUSH executor schedule).
 
     Ingests a batched entry layer into stage 0 of a fresh ring, then runs
-    ``n_stages`` ticks so the layer traverses every stage and exits —
-    yielding the same verification hidden states the single-device
-    ``tree_verify_step`` computes, but partitioned stage-by-stage over the
-    mesh with the metadata riding the ``ppermute`` ring.  The whole flush
-    is ONE compiled computation, so the serving executor issues exactly
-    one sharded dispatch per global timestep.
+    exactly ``n_stages`` ticks so the layer traverses every stage and
+    exits — yielding the same verification hidden states the
+    single-device ``tree_verify_step`` computes, but partitioned
+    stage-by-stage over the mesh with the metadata riding the ``ppermute``
+    ring.  The whole flush is ONE compiled computation, so the serving
+    executor issues exactly one sharded dispatch per global timestep
+    (``tests/test_pipeline.py`` pins the tick count: stage 0 ingests AND
+    processes on the same tick, so ``n_stages`` hops suffice — no
+    trailing dead-entry tick).
 
-    (The steady-state deployment overlaps consecutive layers — one tick
-    per timestep with the ring full; its wall-clock is priced in
-    ``core.sim.specpipe_db_sharded_*``.  The flush keeps verify logits
-    available at the layer's *entry* timestep, which is what keeps the
-    logical engine's schedule — and therefore its outputs — bit-identical
-    to the local backends.)
+    The flush keeps verify logits available at the layer's *entry*
+    timestep, which is what keeps the logical engine's schedule — and
+    therefore its outputs — bit-identical to the local backends without
+    any in-ring pruning machinery; the steady-state one-tick-per-timestep
+    deployment is ``serving.executor.OverlappedShardedExecutor``.
 
     Returns ``verify(stage_p, stage_valid, model_kv, tree_kv, entry) ->
     (exit_act [B, w, d], exit_valid [B], new_tree_kv)``.
@@ -277,12 +393,13 @@ def make_pipeline_verify(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
     def verify(stage_p, stage_valid, model_kv, tree_kv, entry):
         batch = entry["act"].shape[0]
         ring = init_ring(cfg, pcfg, dtype=dtype, batch=batch)
-        dead = dict(entry, valid=jnp.zeros_like(entry["valid"]))
-        ent = entry
+        ent = dict(entry)
+        ent.setdefault("version", jnp.zeros((batch,), jnp.int32))
+        dead = dict(ent, valid=jnp.zeros_like(ent["valid"]))
         exit_out = None
-        for _ in range(pcfg.n_stages + 1):
-            tree_kv, ring, exit_out = tick(stage_p, stage_valid, model_kv,
-                                           tree_kv, ring, ent)
+        for _ in range(pcfg.n_stages):
+            model_kv, tree_kv, ring, exit_out = tick(
+                stage_p, stage_valid, model_kv, tree_kv, ring, ent)
             ent = dead
         return exit_out["act"], exit_out["valid"], tree_kv
 

@@ -8,6 +8,15 @@ combine with XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU):
 
   PYTHONPATH=src python -m repro.launch.serve --mode pipedec-db \
       --executor sharded --requests 4
+
+``--overlap`` selects the steady-state overlapped schedule (persistent
+always-full ring, ONE tick per global timestep, deferred exit logits,
+in-ring pruning propagation) instead of the per-timestep flush; the
+PipeDec stage count is then the mesh's device count, since the ring IS
+the flight bookkeeping:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode pipedec-db \
+      --executor sharded --overlap --requests 4
 """
 from __future__ import annotations
 
@@ -45,6 +54,12 @@ def main(argv=None):
                     default="local",
                     help="pipedec-db compute backend (sharded = one "
                          "pipeline stage per mesh device)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="sharded executor only: steady-state overlapped "
+                         "schedule (one ring tick per timestep with "
+                         "deferred exit logits) instead of the "
+                         "per-timestep flush; forces --stages to the "
+                         "device count")
     ap.add_argument("--target-arch", default="pipedec-target")
     ap.add_argument("--draft-arch", default="pipedec-draft")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -58,12 +73,21 @@ def main(argv=None):
 
     target = build_bundle(args.target_arch, smoke=args.smoke, seed=0)
     draft = build_bundle(args.draft_arch, smoke=args.smoke, seed=1)
+    if args.overlap:
+        assert args.mode == "pipedec-db" and args.executor == "sharded", \
+            "--overlap needs --mode pipedec-db --executor sharded"
+        # the overlapped ring length is pcfg.n_stages — it must equal the
+        # mesh's stage count (one device per stage)
+        args.stages = len(jax.devices())
     pcfg = PipeDecConfig(n_stages=args.stages, width=args.width,
                          branch=args.branch)
     executor = None
     if args.mode == "pipedec-db" and args.executor == "sharded":
-        from repro.serving import ShardedPipelineExecutor
-        executor = ShardedPipelineExecutor(
+        from repro.serving import (OverlappedShardedExecutor,
+                                   ShardedPipelineExecutor)
+        cls = OverlappedShardedExecutor if args.overlap \
+            else ShardedPipelineExecutor
+        executor = cls(
             target, draft, slots=args.slots, max_len=512,
             tree_capacity=pcfg.tree_buffer_capacity,
             capacity=pcfg.capacity, n_stages=len(jax.devices()))

@@ -9,6 +9,22 @@ per timestep with pending entries.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.sharded_check --stages 8
 
+``--overlap`` additionally checks the steady-state overlapped executor
+(``OverlappedShardedExecutor``: persistent always-full ring, ONE tick per
+global timestep, deferred exit logits, in-ring pruning propagation):
+
+  * per-uid outputs bit-identical to flush / local / single-request on
+    TWO workloads — an independent draft (misses dominate: kills with
+    layers in flight) and a self-draft (perfect acceptance: every commit
+    is a hit, so prune index_maps ride the ring through a full pipeline);
+  * exactly ONE ring tick per executed timestep
+    (``calls["pipeline_tick"]`` == engine timesteps);
+  * a tick-level pruning-propagation scenario on the real S-stage mesh: a
+    slot killed with layers still in flight writes nothing further into
+    its stage tree caches (rows bit-untouched), its stale exits come out
+    dead, and the other slot's rows/exits are bit-identical to a run
+    without the kill.
+
 Prints one JSON summary line; exits non-zero on any mismatch.  Run in its
 own process: the forced host-device count must not leak into other jax
 users (tests spawn it via subprocess, CI runs it as a dedicated leg).
@@ -21,6 +37,106 @@ import os
 import sys
 
 
+def _pruning_propagation_scenario(stages: int):
+    """Tick-level pin of the in-ring kill on a real S-stage mesh."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.launch import pipeline as pl
+    from repro.models import transformer as tf
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="pp-chk", family="dense", num_layers=stages,
+                      d_model=32, num_heads=2, num_kv_heads=1, d_ff=64,
+                      vocab_size=64)
+    params = tf.init_model(jax.random.PRNGKey(3), cfg)
+    mesh = jax.make_mesh((1, stages), ("data", "model"))
+    w = 4
+    ticks = stages + 2
+    cap = 1 + w * (ticks + 1)
+    pcfg = pl.PipelineConfig(n_stages=stages, width=w, tree_capacity=cap,
+                             max_len=32)
+    sp, valid = pl.stage_params(cfg, params, stages)
+    kill_at = 2
+
+    def entry(t, slot0_on):
+        key = jax.random.PRNGKey(100 + t)
+        wi = 1 + t * w
+        mask = jax.nn.one_hot(wi + jnp.arange(w), cap + w, dtype=bool)
+        return {
+            "act": jax.random.normal(key, (2, w, cfg.d_model)),
+            "positions": jnp.broadcast_to(jnp.arange(w)[None], (2, w))
+            .astype(jnp.int32),
+            "mask": jnp.broadcast_to(mask[None], (2, w, cap + w)),
+            "write_idx": jnp.full((2,), wi, jnp.int32),
+            "model_len": jnp.zeros((2,), jnp.int32),
+            "valid": jnp.asarray([slot0_on, True]),
+            "version": jnp.zeros((2,), jnp.int32),
+        }
+
+    jtick = jax.jit(pl.make_pipedec_tick(cfg, pcfg, mesh))
+
+    def run(with_kill: bool):
+        model_kv, tree_kv = pl.init_stage_caches(cfg, pcfg, batch=2)
+        ring = pl.init_ring(cfg, pcfg, batch=2)
+        states, exits = [], []
+        with mesh:
+            for t in range(ticks):
+                killed = with_kill and t >= kill_at
+                kill = jnp.asarray([with_kill and t == kill_at, False])
+                model_kv, tree_kv, ring, ex = jtick(
+                    sp, valid, model_kv, tree_kv, ring,
+                    entry(t, not killed), kill)
+                states.append(jax.tree.map(np.asarray, tree_kv))
+                exits.append((np.asarray(ex["valid"]),
+                              np.asarray(ex["act"])))
+        return states, exits
+
+    states_a, exits_a = run(False)
+    states_b, exits_b = run(True)
+
+    def slot(tree, b):
+        return jax.tree.map(lambda x: x[:, b], tree)
+
+    eq = lambda x, y: jax.tree.map(np.testing.assert_array_equal, x, y)
+    # (1) killed slot: no write after the kill tick — stale in-flight
+    # layers stopped touching the stage tree caches
+    for t in range(kill_at, ticks):
+        eq(slot(states_b[t], 0), slot(states_b[kill_at - 1], 0))
+    # ...whereas without the kill the same layers DID keep writing
+    changed = any(
+        bool(np.any(x != y))
+        for x, y in zip(jax.tree.leaves(slot(states_a[ticks - 1], 0)),
+                        jax.tree.leaves(slot(states_b[ticks - 1], 0))))
+    assert changed, "control run must show the writes the kill suppressed"
+    # (2) the other slot is bit-unaffected by the kill, every tick
+    for t in range(ticks):
+        eq(slot(states_b[t], 1), slot(states_a[t], 1))
+    # (3) exits: stale slot-0 exits come out dead; slot 1 identical
+    saw_dead = saw_live = False
+    for t in range(ticks):
+        va, aa = exits_a[t]
+        vb, ab = exits_b[t]
+        assert bool(va[1]) == bool(vb[1])
+        if va[1]:
+            np.testing.assert_array_equal(ab[1], aa[1])
+            saw_live = True
+        if t >= stages - 1:
+            assert bool(va[0]), "control run: slot-0 layers must exit live"
+        if t >= max(stages - 1, kill_at):
+            # from here every slot-0 exit was either in flight at the
+            # kill tick or an invalidated entry (at stages <= kill_at a
+            # layer entered early enough exits live BEFORE the kill —
+            # that exit is legitimately identical in both runs)
+            assert not bool(vb[0]), "stale slot-0 exit must be dead"
+            saw_dead = True
+    assert saw_dead and saw_live
+    return {"killed_rows_untouched": True, "other_slot_unaffected": True,
+            "stale_exits_dropped": True, "live_exits_match": True,
+            "ticks": ticks, "kill_at": kill_at}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--stages", type=int, default=8)
@@ -28,6 +144,11 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=5)
     ap.add_argument("--layers", type=int, default=0,
                     help="target layers (default: one per stage)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="also check the overlapped executor (one ring "
+                         "tick per timestep; PipeDecConfig.n_stages is "
+                         "then --stages so the ring IS the flight "
+                         "bookkeeping)")
     args = ap.parse_args(argv)
 
     if "--xla_force_host_platform_device_count" not in \
@@ -43,7 +164,8 @@ def main(argv=None):
     from repro.core.speculative import ModelBundle
     from repro.models import transformer as tf
     from repro.models.config import ModelConfig
-    from repro.serving import (LocalFusedExecutor, Request,
+    from repro.serving import (LocalFusedExecutor,
+                               OverlappedShardedExecutor, Request,
                                ShardedPipelineExecutor, SpecPipeDBEngine)
 
     assert len(jax.devices()) >= args.stages, \
@@ -60,57 +182,128 @@ def main(argv=None):
                          target_cfg)
     draft = ModelBundle(tf.init_model(jax.random.PRNGKey(9), draft_cfg),
                         draft_cfg)
-    pcfg = PipeDecConfig(n_stages=4, width=4, branch=2)
-    max_len = 128
+    # the overlapped ring length is pcfg.n_stages, so it must equal the
+    # mesh's stage count; the flush/local backends accept any pcfg
+    n_stages = args.stages if args.overlap else 4
+    pcfg = PipeDecConfig(n_stages=n_stages, width=4, branch=2)
+    max_len = 160
 
     rng = np.random.default_rng(0)
-    reqs = [Request(i,
-                    rng.integers(0, 100, size=int(rng.integers(3, 8)))
-                    .astype(np.int32),
-                    int(rng.integers(3, 7)),
-                    arrival_t=int(rng.integers(0, 3 * args.requests)))
-            for i in range(args.requests)]
 
-    single = PipeDecEngine(target, draft, pcfg, max_len=max_len)
-    want = {r.uid: single.generate(r.prompt, r.max_new_tokens)[0]
-            for r in reqs}
+    def mk_reqs(lo_new, hi_new):
+        return [Request(i,
+                        rng.integers(0, 100, size=int(rng.integers(3, 8)))
+                        .astype(np.int32),
+                        int(rng.integers(lo_new, hi_new)),
+                        arrival_t=int(rng.integers(0, 3 * args.requests)))
+                for i in range(args.requests)]
 
     mk = {
-        "local": lambda: LocalFusedExecutor(
-            target, draft, slots=args.slots, max_len=max_len,
+        "local": lambda t, d: LocalFusedExecutor(
+            t, d, slots=args.slots, max_len=max_len,
             tree_capacity=pcfg.tree_buffer_capacity,
             capacity=pcfg.capacity),
-        "sharded": lambda: ShardedPipelineExecutor(
-            target, draft, slots=args.slots, max_len=max_len,
+        "sharded": lambda t, d: ShardedPipelineExecutor(
+            t, d, slots=args.slots, max_len=max_len,
             tree_capacity=pcfg.tree_buffer_capacity,
             capacity=pcfg.capacity, n_stages=args.stages),
     }
-    summary = {"stages": args.stages, "slots": args.slots,
-               "requests": args.requests, "layers": layers}
-    for name, make in mk.items():
-        ex = make()
-        eng = SpecPipeDBEngine(target, draft, pcfg, max_len=max_len,
-                               max_slots=args.slots, executor=ex)
+    if args.overlap:
+        mk["sharded_overlapped"] = lambda t, d: OverlappedShardedExecutor(
+            t, d, slots=args.slots, max_len=max_len,
+            tree_capacity=pcfg.tree_buffer_capacity,
+            capacity=pcfg.capacity, n_stages=args.stages)
+
+    def check_workload(tgt, drf, reqs):
+        single = PipeDecEngine(tgt, drf, pcfg, max_len=max_len)
+        want, acc = {}, {}
         for r in reqs:
-            eng.submit(r)
+            want[r.uid], st = single.generate(r.prompt, r.max_new_tokens)
+            acc[r.uid] = st.acceptance
+        part = {"acceptance_mean": round(float(np.mean(list(acc.values()))),
+                                         4)}
+        for name, make in mk.items():
+            ex = make(tgt, drf)
+            eng = SpecPipeDBEngine(tgt, drf, pcfg, max_len=max_len,
+                                   max_slots=args.slots, executor=ex)
+            for r in reqs:
+                eng.submit(r)
+            res = eng.run()
+            for uid, tokens in want.items():
+                np.testing.assert_array_equal(
+                    res[uid].tokens, tokens,
+                    err_msg=f"{name} executor vs single-request uid={uid}")
+            disp = eng.stats.verify_dispatches
+            assert max(disp) == 1, f"{name}: >1 dispatch in one timestep"
+            assert ex.calls["verify_rows"] == sum(disp), \
+                f"{name}: one batched dispatch per pending timestep"
+            if name == "sharded":
+                assert ex.calls["pipeline_verify"] == sum(disp), \
+                    "one batched sharded flush per pending timestep"
+            if name == "sharded_overlapped":
+                # the steady-state pin: ONE ring tick per executed global
+                # timestep, entries or not
+                assert ex.calls["pipeline_tick"] == eng.stats.timesteps, \
+                    "overlapped: one ring tick per executed timestep"
+                assert eng.stats.tick_dispatches == \
+                    [1] * eng.stats.timesteps
+                assert ex.calls["drain_tick"] == 0, \
+                    "per-timestep ticks must resolve every live flight"
+            part[name] = {
+                "timesteps": eng.stats.timesteps,
+                "tokens_per_timestep": round(eng.stats.tokens_per_timestep,
+                                             4),
+                "peak_occupancy": eng.stats.peak_occupancy,
+                "dispatches": dict(ex.calls),
+            }
+        return part
+
+    summary = {"stages": args.stages, "slots": args.slots,
+               "requests": args.requests, "layers": layers,
+               "overlap": args.overlap}
+    def check_recycle():
+        """Regression: a retired occupant's in-ring ctrl must not leak
+        into the recycled slot's next occupant.  Short request A (tiny
+        prompt, back-to-back commits) retires while its final commits'
+        ctrl messages still trail its killed layers in the ring; B joins
+        the same slot the next timestep with a LONGER prompt whose low
+        KV positions those stale commits would overwrite."""
+        a = Request(0, np.arange(1, 4, dtype=np.int32), 2, arrival_t=0)
+        b = Request(1, (np.arange(5, 45, dtype=np.int32) % 100), 4,
+                    arrival_t=1)
+        single = PipeDecEngine(target, target, pcfg, max_len=max_len)
+        want = {r.uid: single.generate(r.prompt, r.max_new_tokens)[0]
+                for r in (a, b)}
+        ex = OverlappedShardedExecutor(
+            target, target, slots=1, max_len=max_len,
+            tree_capacity=pcfg.tree_buffer_capacity,
+            capacity=pcfg.capacity, n_stages=args.stages)
+        eng = SpecPipeDBEngine(target, target, pcfg, max_len=max_len,
+                               max_slots=1, executor=ex)
+        eng.submit(a)
+        eng.submit(b)
         res = eng.run()
         for uid, tokens in want.items():
             np.testing.assert_array_equal(
                 res[uid].tokens, tokens,
-                err_msg=f"{name} executor vs single-request uid={uid}")
-        disp = eng.stats.verify_dispatches
-        assert max(disp) == 1, f"{name}: >1 dispatch in one timestep"
-        assert ex.calls["verify_rows"] == sum(disp), \
-            f"{name}: one batched dispatch per pending timestep"
-        if name == "sharded":
-            assert ex.calls["pipeline_verify"] == sum(disp), \
-                "one batched sharded tick per pending timestep"
-        summary[name] = {
-            "timesteps": eng.stats.timesteps,
-            "tokens_per_timestep": round(eng.stats.tokens_per_timestep, 4),
-            "peak_occupancy": eng.stats.peak_occupancy,
-            "dispatches": dict(ex.calls),
-        }
+                err_msg=f"slot-recycle ctrl leak uid={uid}")
+        assert ex.calls["kill"] >= 2, "both retires must kill in-ring"
+        return {"bit_identical": True, "kills": int(ex.calls["kill"])}
+
+    summary["independent_draft"] = check_workload(target, draft,
+                                                  mk_reqs(3, 7))
+    if args.overlap:
+        # self-draft: perfect acceptance — every commit is a hit, so the
+        # prune index_maps ride the ring with n_stages-1 layers in flight
+        summary["self_draft"] = check_workload(target, target,
+                                               mk_reqs(8, 14))
+        summary["slot_recycle"] = check_recycle()
+        assert summary["self_draft"]["acceptance_mean"] > 0.99
+        assert summary["self_draft"]["sharded_overlapped"][
+            "dispatches"].get("remap_rows", 0) > 0, \
+            "self-draft workload must exercise in-ring prune propagation"
+        summary["pruning_propagation"] = \
+            _pruning_propagation_scenario(args.stages)
     summary["bit_identical"] = True
     print(json.dumps(summary))
     return 0

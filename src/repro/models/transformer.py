@@ -688,6 +688,42 @@ def commit_tree_nodes(cfg: ModelConfig, cache, tree_caches, node_idx,
         merge, tree_caches, cache, is_leaf=lambda x: x is None)
 
 
+def remap_tree_cache_rows(tree_caches, index_maps):
+    """Batched post-prune tree-cache compaction (SpecPipe-DB exit phase).
+
+    ``index_maps [B, cap]`` carries one old→new prune map per slot row
+    (identity rows leave that slot's buffers bit-unchanged, so callers mix
+    pruned and untouched slots in ONE gather).  Per slot the permutation
+    is exactly ``core.speculative.remap_tree_caches``'s: dropped rows
+    (``-1``) are pushed past the buffer end, then the inverse permutation
+    gathers each surviving row to its compacted position.  Buffers may
+    carry ``capacity + w`` rows (fixed-width layer-write slack) and a
+    leading reps/stage dim — the length axis is resolved per buffer name,
+    with the slot axis immediately before it (as in ``commit_tree_nodes``).
+    """
+    index_maps = jnp.asarray(index_maps, jnp.int32)
+
+    def gather(path, buf):
+        if buf is None:
+            return None
+        name = path[-1].key
+        ax = cache_len_axis(name, buf)
+        bx = ax - 1                    # slot axis precedes the length axis
+        cap = buf.shape[ax]
+        im = jnp.concatenate([
+            index_maps,
+            jnp.full((index_maps.shape[0], cap - index_maps.shape[1]), -1,
+                     jnp.int32)], axis=1)
+        # inverse permutation per row: g[b, new] = old (dropped → the end)
+        g = jnp.argsort(jnp.where(im >= 0, im, cap + jnp.arange(cap)[None]),
+                        axis=1)
+        return jax.vmap(lambda b, gi: jnp.take(b, gi, axis=ax - 1),
+                        in_axes=(bx, 0), out_axes=bx)(buf, g)
+
+    return jax.tree_util.tree_map_with_path(
+        gather, tree_caches, is_leaf=lambda x: x is None)
+
+
 def _hidden(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
             enc_out=None, window_override: int = -1, remat: bool = False):
     """Final-norm hidden states (pre-unembed) + MoE aux loss."""

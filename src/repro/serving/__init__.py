@@ -1,12 +1,15 @@
 from repro.serving.dynbatch import (DBStats, SpecPipeDBEngine,
                                     generate_with_executor)
 from repro.serving.engine import Request, Result, ServingEngine
-from repro.serving.executor import (LocalFusedExecutor, PipelineExecutor,
+from repro.serving.executor import (DeferredLogits, LocalFusedExecutor,
+                                    OverlappedShardedExecutor,
+                                    PipelineExecutor,
                                     ShardedPipelineExecutor)
 from repro.serving.scheduler import (DynamicBatchScheduler, KVArena,
                                      SchedulerStats, SlotPool)
 
-__all__ = ["DBStats", "DynamicBatchScheduler", "KVArena",
-           "LocalFusedExecutor", "PipelineExecutor", "Request", "Result",
-           "SchedulerStats", "ServingEngine", "ShardedPipelineExecutor",
-           "SlotPool", "SpecPipeDBEngine", "generate_with_executor"]
+__all__ = ["DBStats", "DeferredLogits", "DynamicBatchScheduler", "KVArena",
+           "LocalFusedExecutor", "OverlappedShardedExecutor",
+           "PipelineExecutor", "Request", "Result", "SchedulerStats",
+           "ServingEngine", "ShardedPipelineExecutor", "SlotPool",
+           "SpecPipeDBEngine", "generate_with_executor"]

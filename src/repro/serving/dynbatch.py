@@ -17,12 +17,20 @@ batched ``tree_verify`` per model per timestep over the slot-stacked
 ``ShardedPipelineExecutor`` runs the same dispatches on the paper's
 pipelined deployment — the target stack partitioned over an
 ``n_stages``-device mesh with the per-row metadata riding the ``ppermute``
-activation ring (``launch.pipeline``).  Outputs are bit-identical across
-backends (and to the single-request engine) because only *where* the
-verify runs changes, never *what* is computed — the same argument the
-paper makes for losslessness; tests/test_serving_db.py and
-tests/test_executor_sharded.py pin it.  Wall-clock is priced in
-``core.sim.specpipe_db_*`` / ``specpipe_db_sharded_*``.
+activation ring (``launch.pipeline``), flushing each entry through all
+stages so logits stay available at entry.  ``OverlappedShardedExecutor``
+is the steady-state schedule on the same deployment: the ring persists
+and stays full, the engine issues exactly ONE ring tick per executed
+global timestep, each ``Flight`` carries a *deferred* logits future the
+tick resolves at ``exit_t``, and misses/retirements kill the slot's
+in-flight layers in-ring (pruning propagation).  Outputs are
+bit-identical across all backends (and to the single-request engine)
+because only *where and when* the verify logits materialise changes,
+never *what* is computed — the same argument the paper makes for
+losslessness; tests/test_serving_db.py and tests/test_executor_sharded.py
+pin it.  Wall-clock is priced in ``core.sim.specpipe_db_*`` /
+``specpipe_db_sharded_*`` (the overlapped schedule is the ``flush=False``
+curve, measured).
 
 Per-request *decisions* (flight bookkeeping, token selection with
 per-request ``SamplingParams``, tree expand/prune, index remaps) run
@@ -83,12 +91,16 @@ class DBStats:
     the number of fused tree-verify calls per model per timestep (0 when
     no slot had a pending entry, otherwise exactly 1 — the fusion the
     equivalence test asserts via the executor's ``calls`` hook).
+    ``tick_dispatches`` traces the overlapped backend's ring ticks per
+    executed timestep — exactly 1 every timestep (the ring must advance
+    even when no entry is pending); empty on the flush/local backends.
     """
     timesteps: int = 0
     total_commits: int = 0
     per_request: Dict[int, GenStats] = dataclasses.field(default_factory=dict)
     occupancy: List[int] = dataclasses.field(default_factory=list)
     verify_dispatches: List[int] = dataclasses.field(default_factory=list)
+    tick_dispatches: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def tokens_per_timestep(self) -> float:
@@ -126,6 +138,13 @@ class SpecPipeDBEngine:
         self.arena = executor.arena
         assert fused or isinstance(self.arena, KVArena), \
             "looped (fused=False) mode needs the local KVArena backend"
+        self.overlapped = bool(getattr(executor, "overlapped", False))
+        if self.overlapped:
+            assert fused, "the overlapped schedule is fused by construction"
+            assert executor.n_stages == self.pcfg.n_stages, \
+                ("overlapped executor: the mesh stage count must equal "
+                 "PipeDecConfig.n_stages — the ring IS the flight "
+                 "bookkeeping, so the fill latencies must agree")
         self.sched = DynamicBatchScheduler(self.arena)
         self.trees = TreeBatch(max_slots, self.pcfg.capacity)
         self.max_slots = max_slots
@@ -147,13 +166,13 @@ class SpecPipeDBEngine:
                         for r in self.sched.queue), default=0)
         return 64 + arrivals + per_req
 
-    # -- fused phase 1: stacked entry + ONE verify dispatch per model ----
-    def _fused_entry(self, active: Dict[int, _Active],
-                     pending: List[int]) -> None:
+    # -- fused phase 1: stacked entry rows shared by all fused backends --
+    def _entry_rows(self, active: Dict[int, _Active], pending: List[int]):
         """Stack every pending slot's entry layer (via the TreeBatch's
-        vmapped deepest-layer view — no per-slot gather), hand the
-        executor ONE bucketed verify per model, and scatter the logits
-        back through ``apply_entry``."""
+        vmapped deepest-layer view — no per-slot gather) into full-slot
+        arrays.  Returns (tokens, positions, masks, model_len, write_idx,
+        row_on, node_idx_b); non-pending rows are masked and only ever
+        write into their own slack region."""
         p, tcap = self.pcfg, self.inner.tree_buffer_capacity
         nb = self.max_slots
         w = p.width
@@ -190,37 +209,113 @@ class SpecPipeDBEngine:
                        p.capacity).astype(jnp.int32)
         mlen = jnp.where(on, mlen, 0)
 
-        v_all, d_all = self.executor.verify_rows(tokens, positions, masks,
-                                                 mlen, wi, row_on)
-
         # one host sync for every slot's node indices (the only entry
         # metadata the bookkeeping needs)
         node_idx_b = np.where(np.asarray(valid_b), np.asarray(idx_b),
                               -1).astype(np.int32)
+        return tokens, positions, masks, mlen, wi, row_on, node_idx_b
+
+    def _apply_entries(self, active: Dict[int, _Active],
+                       pending: List[int], rows, v_of, d_all) -> None:
+        """Scatter one dispatch's results back through ``apply_entry``:
+        ``v_of(slot)`` supplies the slot's target verify logits — a row
+        of the fused logits (flush/local) or a ``DeferredLogits`` future
+        (overlapped)."""
+        tokens, positions, masks, _, wi, _, node_idx_b = rows
         for slot in pending:
             entry = EntryInputs(tokens=tokens[slot],
                                 positions=positions[slot],
                                 mask=masks[slot], write_index=wi[slot],
                                 node_idx=node_idx_b[slot])
             self.inner.apply_entry(active[slot].state, entry,
-                                   v_all[slot], d_all[slot])
+                                   v_of(slot), d_all[slot])
+
+    def _fused_entry(self, active: Dict[int, _Active],
+                     pending: List[int]) -> None:
+        """Hand the executor ONE bucketed verify per model over the
+        stacked entry rows and scatter the logits back through
+        ``apply_entry``."""
+        rows = self._entry_rows(active, pending)
+        tokens, positions, masks, mlen, wi, row_on, _ = rows
+        v_all, d_all = self.executor.verify_rows(tokens, positions, masks,
+                                                 mlen, wi, row_on)
+        self._apply_entries(active, pending, rows,
+                            lambda slot: v_all[slot], d_all)
+
+    # -- shared per-timestep phases ------------------------------------
+    def _bump(self, active: Dict[int, _Active],
+              stepping: List[int]) -> List[int]:
+        for slot in stepping:
+            st = active[slot].state
+            st.t += 1
+            st.stats.timesteps = st.t
+            st.tree = self.trees.get_row(slot)
+        return [s for s in stepping if active[s].state.pending]
+
+    def _pick_exits(self, active: Dict[int, _Active],
+                    stepping: List[int]) -> Dict[int, tuple]:
+        picks = {}
+        for slot in stepping:
+            ev = self.inner.exit_pick(active[slot].state)
+            if ev is not None:
+                picks[slot] = ev
+        return picks
+
+    def _commit_exits(self, active: Dict[int, _Active], picks) -> None:
+        """ONE batched two-level cache sync over every exiting slot."""
+        if not picks:
+            return
+        mask_rows = np.zeros((self.max_slots,), bool)
+        mlen_rows = np.zeros((self.max_slots,), np.int32)
+        for slot in picks:
+            mask_rows[slot] = True
+            mlen_rows[slot] = active[slot].state.model_len
+        self.executor.commit_rows(jnp.asarray(mlen_rows),
+                                  jnp.asarray(mask_rows))
+
+    def _apply_exits(self, active: Dict[int, _Active], stepping: List[int],
+                     picks, *, kill_stale: bool = False) -> None:
+        """Per-slot exit bookkeeping (token select, prune, flight remap),
+        then ONE batched tree prune/remap over every pruned slot
+        (``executor.remap_rows``; identity rows for the rest).  With
+        ``kill_stale`` (overlapped backend) a miss additionally kills the
+        slot's in-flight ring layers — the pruning-propagation stage."""
+        remaps: Dict[int, np.ndarray] = {}
+        for slot in stepping:
+            st = active[slot].state
+            commits = 0
+            if slot in picks:
+                fl, root_row = picks[slot]
+                misses0 = st.stats.misses
+                commits = self.inner.exit_apply(
+                    st, fl, root_row,
+                    commit_caches=lambda _st: None,  # batched above
+                    remap_caches=lambda _st, imap, s=slot:
+                        remaps.__setitem__(s, imap))
+                if kill_stale and st.stats.misses > misses0:
+                    self.executor.kill(slot)
+            st.stats.commits_per_step.append(commits)
+            self.trees.set_row(slot, st.tree)
+            st.tree = None
+        if remaps:
+            imaps = np.tile(np.arange(self.pcfg.capacity, dtype=np.int32),
+                            (self.max_slots, 1))
+            row_mask = np.zeros((self.max_slots,), bool)
+            for slot, imap in remaps.items():
+                imaps[slot] = np.asarray(imap, np.int32)
+                row_mask[slot] = True
+            self.executor.remap_rows(imaps, row_mask)
 
     # ------------------------------------------------------------------
     def _advance_fused(self, active: Dict[int, _Active],
                        stepping: List[int]) -> None:
         """One shared pipeline timestep over all stepping slots: gather
         entries → ONE fused verify per model → per-slot expansion →
-        batched commit → per-slot prune/remap."""
-        for slot in stepping:
-            st = active[slot].state
-            st.t += 1
-            st.stats.timesteps = st.t
-            st.tree = self.trees.get_row(slot)
-
+        batched commit → batched prune/remap."""
         # phase 1: stacked gather-entry, ONE fused verify per model (the
         # pending flag alone decides participation — the entry inputs come
         # from the stacked TreeBatch views, not a per-slot gather)
-        pending = [s for s in stepping if active[s].state.pending]
+        pending = self._bump(active, stepping)
         if pending:
             self._fused_entry(active, pending)
         self.stats.verify_dispatches.append(1 if pending else 0)
@@ -229,33 +324,49 @@ class SpecPipeDBEngine:
         for slot in stepping:
             self.inner.maybe_expand(active[slot].state)
 
-        # phase 2: exit — batched commit, then per-slot prune/remap
-        picks = {}
+        # phase 2: exit — batched commit, then batched prune/remap
+        picks = self._pick_exits(active, stepping)
+        self._commit_exits(active, picks)
+        self._apply_exits(active, stepping, picks)
+
+    # ------------------------------------------------------------------
+    def _advance_overlapped(self, active: Dict[int, _Active],
+                            stepping: List[int]) -> None:
+        """One steady-state timestep: ONE ring tick interleaves the entry
+        for timestep t with the exit for timestep t - (n_stages - 1).
+
+        The tick always dispatches (the in-flight layers must advance a
+        stage whether or not anything enters); entering slots receive
+        ``DeferredLogits`` futures that this same tick resolves for the
+        layers exiting NOW, so ``exit_apply`` consumes logits delivered
+        at exit time.  Misses/retires kill the slot's in-flight layers
+        in-ring; commits and prune maps are queued as the next tick's
+        ctrl message, trailing the in-flight layers stage by stage."""
+        pending = self._bump(active, stepping)
+        if pending:
+            rows = self._entry_rows(active, pending)
+        else:
+            rows = (*self.executor.dead_entry,
+                    np.zeros((self.max_slots,), bool), None)
+        tokens, positions, masks, mlen, wi, row_on, _ = rows
+
+        # phase 1: ONE ring tick — entry for t in, exit for
+        # t - (n_stages - 1) out
+        d_all, handles = self.executor.tick_rows(tokens, positions, masks,
+                                                 mlen, wi, row_on)
+        self.stats.verify_dispatches.append(1 if pending else 0)
+        self.stats.tick_dispatches.append(1)
+        self._apply_entries(active, pending, rows,
+                            lambda slot: handles[slot], d_all)
+
         for slot in stepping:
-            ev = self.inner.exit_pick(active[slot].state)
-            if ev is not None:
-                picks[slot] = ev
-        if picks:
-            mask_rows = np.zeros((self.max_slots,), bool)
-            mlen_rows = np.zeros((self.max_slots,), np.int32)
-            for slot in picks:
-                mask_rows[slot] = True
-                mlen_rows[slot] = active[slot].state.model_len
-            self.executor.commit_rows(jnp.asarray(mlen_rows),
-                                      jnp.asarray(mask_rows))
-        for slot in stepping:
-            st = active[slot].state
-            commits = 0
-            if slot in picks:
-                fl, root_row = picks[slot]
-                commits = self.inner.exit_apply(
-                    st, fl, root_row,
-                    commit_caches=lambda _st: None,  # batched above
-                    remap_caches=lambda _st, imap, s=slot:
-                        self.executor.remap_row(s, imap))
-            st.stats.commits_per_step.append(commits)
-            self.trees.set_row(slot, st.tree)
-            st.tree = None
+            self.inner.maybe_expand(active[slot].state)
+
+        # phase 2: exit — this tick's resolved futures; cache sync rides
+        # the NEXT tick's ctrl (draft applies immediately)
+        picks = self._pick_exits(active, stepping)
+        self._commit_exits(active, picks)
+        self._apply_exits(active, stepping, picks, kill_stale=True)
 
     # ------------------------------------------------------------------
     def _stream(self, active: Dict[int, _Active], now: int,
@@ -321,7 +432,9 @@ class SpecPipeDBEngine:
             self.stats.timesteps += 1
             stepping = [s for s in sorted(active)
                         if not active[s].state.done]
-            if self.fused:
+            if self.overlapped:
+                self._advance_overlapped(active, stepping)
+            elif self.fused:
                 self._advance_fused(active, stepping)
             else:
                 for slot in stepping:
@@ -343,6 +456,10 @@ class SpecPipeDBEngine:
                 self.stats.per_request[a.req.uid] = st.stats
                 self.stats.total_commits += st.stats.commits
                 self.trees.release_row(slot)
+                if self.overlapped:
+                    # kill the retired request's in-flight ring layers and
+                    # cancel its queued ctrl — the slot is being recycled
+                    self.executor.kill(slot, drop_ctrl=True)
                 self.sched.retire(
                     a.req.uid, slot, now,
                     caches=None if self.fused else st.caches())
@@ -354,6 +471,11 @@ class SpecPipeDBEngine:
                 raise RuntimeError(
                     f"SpecPipeDBEngine exceeded timestep guard ({guard}); "
                     f"{len(active)} active, {self.sched.pending} queued")
+        if self.overlapped:
+            # every live flight resolved during the run (retires killed the
+            # rest), so this is a no-op safety valve that leaves the
+            # executor's ring clean for the next run
+            self.executor.drain()
         return results
 
 

@@ -25,22 +25,37 @@ Backends:
   * ``LocalFusedExecutor`` — PR-2's fused single-device path unchanged:
     slot-stacked ``KVArena`` pytrees, ``ModelBundle.tree_verify_rows`` /
     ``commit_rows`` dispatches.
-  * ``ShardedPipelineExecutor`` — the paper's pipelined deployment: the
-    target's layer stack is partitioned over an ``n_stages``-device mesh
-    (``launch.pipeline``), stage caches carry a leading slot axis
-    mirroring the KV arena, and each timestep's verify is ONE compiled
-    dispatch that flushes the batched entry layer around the ``ppermute``
-    activation ring (``launch.pipeline.make_pipeline_verify``).  The
-    draft runs replicated next to stage 0 (it proposes the next layer the
-    same timestep, so it cannot ride the ring).  Because the flush keeps
-    verify logits available at the entry timestep, the logical schedule —
-    and therefore every request's token output — is bit-identical to the
-    local backend; steady-state overlap is the wall-clock model
-    (``core.sim.specpipe_db_sharded_*``).
+  * ``ShardedPipelineExecutor`` — the paper's pipelined deployment, FLUSH
+    schedule: the target's layer stack is partitioned over an
+    ``n_stages``-device mesh (``launch.pipeline``), stage caches carry a
+    leading slot axis mirroring the KV arena, and each timestep's verify
+    is ONE compiled dispatch that flushes the batched entry layer around
+    the ``ppermute`` activation ring (``n_stages`` hops;
+    ``launch.pipeline.make_pipeline_verify``).  The draft runs replicated
+    next to stage 0 (it proposes the next layer the same timestep, so it
+    cannot ride the ring).  Because the flush keeps verify logits
+    available at the entry timestep, the logical schedule — and therefore
+    every request's token output — is bit-identical to the local backend.
+  * ``OverlappedShardedExecutor`` — the same deployment in the paper's
+    steady-state wall-clock regime: the ring *persists* across timesteps
+    and stays full, so each global timestep is ONE tick (one stage-hop)
+    instead of an ``n_stages``-hop flush — the ``flush=False`` pricing of
+    ``core.sim.specpipe_db_sharded_*``, measured.  Verify logits only
+    exist when a layer exits (``exit_t = t + n_stages - 1``), so
+    ``verify_rows``/``tick_rows`` return *deferred* ``DeferredLogits``
+    futures that the engine stores in its ``Flight``s and resolves at
+    exit; exit commits and prune compactions enter the ring as a ctrl
+    message trailing the in-flight layers (pruning propagation), misses
+    and retirements ``kill`` the slot's in-flight layers in-ring and bump
+    its tree version.  Committed tokens are bit-identical to the flush
+    backend — only *when* logits materialise changes, never what is
+    computed.
 
-Both backends expose ``calls`` (a Counter) as the dispatch-count hook: the
+All backends expose ``calls`` (a Counter) as the dispatch-count hook: the
 equivalence tests assert ``calls["verify_rows"]`` == one batched dispatch
-per global timestep with pending entries.
+per global timestep with pending entries (flush/local), and
+``calls["pipeline_tick"]`` == one ring tick per executed global timestep
+(overlapped).
 """
 from __future__ import annotations
 
@@ -104,6 +119,36 @@ class PipelineExecutor:
         """Post-prune tree-cache compaction on one slot's rows."""
         raise NotImplementedError
 
+    def _draft_verify(self, tokens, positions, masks, model_len,
+                      write_idx, row_on):
+        """ONE bucketed draft tree-verify over the entering slot rows
+        (shared by every backend: the draft proposes the next layer the
+        same timestep, slot-stacked beside stage 0).  Returns the draft
+        logits and the updated draft tree caches."""
+        nb = self._bucket(int(np.max(np.nonzero(np.asarray(row_on))[0])) + 1)
+        sl = lambda a: a[:nb]
+        d_all, d_tree = self.draft.tree_verify_rows(
+            sl(tokens), sl(positions), sl(masks), self._draft_cache(),
+            sl(model_len), self._draft_tree(), sl(write_idx), bucket=nb)
+        self.calls["verify_rows"] += 1
+        return d_all, d_tree
+
+    def _draft_cache(self):
+        raise NotImplementedError
+
+    def _draft_tree(self):
+        raise NotImplementedError
+
+    def remap_rows(self, index_maps, row_mask) -> None:
+        """Batched exit-phase prune/remap: slot ``b``'s tree caches are
+        compacted with ``index_maps[b]`` wherever ``row_mask[b]``
+        (``index_maps`` rows for unmasked slots must be identity).  This
+        base implementation loops ``remap_row`` over the masked slots —
+        kept as the equivalence reference; backends override it with ONE
+        batched gather per model (``tf.remap_tree_cache_rows``)."""
+        for slot in np.nonzero(np.asarray(row_mask))[0]:
+            self.remap_row(int(slot), index_maps[int(slot)])
+
 
 class LocalFusedExecutor(PipelineExecutor):
     """PR-2's fused single-device path behind the executor seam: the
@@ -126,19 +171,23 @@ class LocalFusedExecutor(PipelineExecutor):
         self.arena.store(slot, (t_cache, d_cache, t_tree, d_tree))
         return t_logits
 
+    def _draft_cache(self):
+        return self.arena.stacked[1]
+
+    def _draft_tree(self):
+        return self.arena.stacked[3]
+
     def verify_rows(self, tokens, positions, masks, model_len, write_idx,
                     row_on):
         nb = self._bucket(int(np.max(np.nonzero(np.asarray(row_on))[0])) + 1)
         sl = lambda a: a[:nb]
-        t_cache, d_cache, t_tree, d_tree = self.arena.stacked
+        t_cache, _, t_tree, _ = self.arena.stacked
         v_all, t_tree = self.target.tree_verify_rows(
             sl(tokens), sl(positions), sl(masks), t_cache, sl(model_len),
             t_tree, sl(write_idx), bucket=nb)
-        d_all, d_tree = self.draft.tree_verify_rows(
-            sl(tokens), sl(positions), sl(masks), d_cache, sl(model_len),
-            d_tree, sl(write_idx), bucket=nb)
+        d_all, d_tree = self._draft_verify(tokens, positions, masks,
+                                           model_len, write_idx, row_on)
         self.arena.set_tree_caches(t_tree, d_tree)
-        self.calls["verify_rows"] += 1
         return v_all, d_all
 
     def commit_rows(self, model_len, commit_mask) -> None:
@@ -160,6 +209,22 @@ class LocalFusedExecutor(PipelineExecutor):
         self.arena.set_tree_caches(
             tf.update_cache_rows(t_tree, t_row, slot),
             tf.update_cache_rows(d_tree, d_row, slot))
+
+    def remap_rows(self, index_maps, row_mask) -> None:
+        """ONE batched gather per model over the slot-stacked arena
+        (identity rows leave unmasked slots bit-unchanged)."""
+        if not np.any(np.asarray(row_mask)):
+            return
+        _, _, t_tree, d_tree = self.arena.stacked
+        imaps = jnp.asarray(np.asarray(index_maps), jnp.int32)
+        self.arena.set_tree_caches(_remap_rows_jit(t_tree, imaps),
+                                   _remap_rows_jit(d_tree, imaps))
+        self.calls["remap_rows"] += 1
+
+
+# one compiled batched remap shared by every backend (retraces per cache
+# pytree structure, i.e. once per model)
+_remap_rows_jit = jax.jit(tf.remap_tree_cache_rows)
 
 
 def _sharded_verify_impl(params, stage_p, stage_valid, model_kv, tree_kv,
@@ -216,6 +281,7 @@ class ShardedPipelineExecutor(PipelineExecutor):
         super().__init__(slots)
         self.target, self.draft = target, draft
         self.capacity, self.max_len = capacity, max_len
+        self.dtype = dtype
         width = tree_capacity - capacity
         assert width >= 1, "tree_capacity must include the width-w slack"
         if mesh is None:
@@ -250,6 +316,12 @@ class ShardedPipelineExecutor(PipelineExecutor):
             static_argnames=("bucket",))
         self._commit = jax.jit(functools.partial(self._commit_impl,
                                                  cfg=target.cfg))
+
+    def _draft_cache(self):
+        return self._d_cache
+
+    def _draft_tree(self):
+        return self._d_tree
 
     # -- target stage-arena plumbing ------------------------------------
     @staticmethod
@@ -301,11 +373,9 @@ class ShardedPipelineExecutor(PipelineExecutor):
             self.model_kv, self.tree_kv, tokens, positions, masks,
             write_idx, model_len, jnp.asarray(np.asarray(row_on)),
             bucket=nb)
-        sl = lambda a: a[:nb]
-        d_all, self._d_tree = self.draft.tree_verify_rows(
-            sl(tokens), sl(positions), sl(masks), self._d_cache,
-            sl(model_len), self._d_tree, sl(write_idx), bucket=nb)
-        self.calls["verify_rows"] += 1
+        d_all, self._d_tree = self._draft_verify(tokens, positions, masks,
+                                                 model_len, write_idx,
+                                                 row_on)
         self.calls["pipeline_verify"] += 1
         return v_all, d_all
 
@@ -326,7 +396,277 @@ class ShardedPipelineExecutor(PipelineExecutor):
                     r.astype(full.dtype)), c, row)
 
         self.tree_kv = [one(c) for c in self.tree_kv]
+        self._d_tree = self._draft_remap_row(slot, index_map)
+
+    def _draft_remap_row(self, slot: int, index_map):
         d_row = remap_tree_caches(
             tf.slice_cache_rows(self._d_tree, slot, 1), index_map,
             self.capacity)
-        self._d_tree = tf.update_cache_rows(self._d_tree, d_row, slot)
+        return tf.update_cache_rows(self._d_tree, d_row, slot)
+
+    def remap_rows(self, index_maps, row_mask) -> None:
+        """ONE batched gather per model: the stage-layout tree arenas
+        ([S, slots, rows, ...] leaves) and the replicated draft's
+        slot-stacked tree cache compact every pruned slot together."""
+        if not np.any(np.asarray(row_mask)):
+            return
+        imaps = jnp.asarray(np.asarray(index_maps), jnp.int32)
+        self.tree_kv = _remap_rows_jit(self.tree_kv, imaps)
+        self._d_tree = _remap_rows_jit(self._d_tree, imaps)
+        self.calls["remap_rows"] += 1
+
+
+def _overlap_tick_impl(params, stage_p, stage_valid, model_kv, tree_kv,
+                       ring, node_tokens, node_positions, tree_mask,
+                       write_idx, model_len, entry_on, entry_version,
+                       ctrl_commit, ctrl_len, ctrl_imap, ctrl_clear, kill,
+                       *, cfg, tick):
+    """ONE steady-state ring tick: ingest the batched entry layer into
+    stage 0, apply the pruning-propagation ctrl at whichever stage it
+    reached this tick, advance every in-flight layer one stage, and
+    unembed the exiting activations into verify logits.  ``params``
+    carries only the embed/final-norm/unembed leaves (the layer stack
+    already rides in ``stage_p``)."""
+    entry = {
+        "act": embed(params["embed"], node_tokens),
+        "positions": node_positions,
+        "mask": tree_mask,
+        "write_idx": write_idx,
+        "model_len": model_len,
+        "valid": entry_on,
+        "version": entry_version,
+    }
+    ctrl = {"commit": ctrl_commit, "commit_len": ctrl_len,
+            "index_map": ctrl_imap, "clear": ctrl_clear}
+    model_kv, tree_kv, ring, exit_out = tick(
+        stage_p, stage_valid, model_kv, tree_kv, ring, entry, kill, ctrl)
+    logits = tf._logits(params, cfg, exit_out["act"])
+    return (model_kv, tree_kv, ring, logits, exit_out["valid"],
+            exit_out["version"])
+
+
+class DeferredLogits:
+    """Future for one slot's verify logits ([w, V]).
+
+    Issued by ``OverlappedShardedExecutor`` at a layer's entry, stored in
+    the engine's ``Flight.logits``, and resolved by the ring tick of the
+    layer's exit timestep (``exit_t = entry_t + n_stages - 1``); a kill
+    (miss / retire) marks every outstanding future of the slot dead, so a
+    stale flight can never commit."""
+
+    __slots__ = ("slot", "version", "_value", "dead")
+
+    def __init__(self, slot: int, version: int):
+        self.slot, self.version = slot, version
+        self._value, self.dead = None, False
+
+    def resolve(self):
+        if self.dead:
+            raise RuntimeError(
+                f"stale flight: slot {self.slot} tree version "
+                f"{self.version} was pruned/retired while in flight")
+        if self._value is None:
+            raise RuntimeError(
+                f"slot {self.slot} flight consumed before its exit tick")
+        return self._value
+
+
+class OverlappedShardedExecutor(ShardedPipelineExecutor):
+    """Steady-state overlapped schedule on the sharded deployment: ONE
+    ring tick per global timestep with the ring always full.
+
+    Differences from the flush parent, all at the seam:
+
+      * ``tick_rows`` (and ``verify_rows``) dispatch ONE
+        ``make_pipedec_tick`` per timestep on a *persistent* ring and
+        return ``DeferredLogits`` futures — the target's verify logits
+        for an entering layer materialise only at its exit tick.
+      * ``commit_rows`` / ``remap_row(s)`` queue the target-side cache
+        mutation as the next tick's ctrl message (it must trail the
+        in-flight layers stage by stage — pruning propagation); the
+        replicated draft applies immediately, exactly as on the flush
+        backend.
+      * ``kill(slot)`` invalidates the slot's in-flight layers in-ring
+        (miss / retire) and bumps its tree version; ``drain()`` advances
+        the ring with dead entries until every outstanding future has
+        resolved (shutdown/test helper — the per-timestep ticks already
+        resolve every live flight).
+
+    The engine must tick every executed timestep (entries or not) and its
+    ``PipeDecConfig.n_stages`` must equal the mesh's stage count — the
+    ring IS the flight bookkeeping, so the fill latencies must agree.
+    """
+
+    overlapped = True
+
+    def __init__(self, target: ModelBundle, draft: ModelBundle, *,
+                 slots: int, max_len: int, tree_capacity: int,
+                 capacity: int, n_stages: Optional[int] = None, mesh=None,
+                 dtype=jnp.float32):
+        super().__init__(target, draft, slots=slots, max_len=max_len,
+                         tree_capacity=tree_capacity, capacity=capacity,
+                         n_stages=n_stages, mesh=mesh, dtype=dtype)
+        self._ring = pl.init_ring(target.cfg, self.plcfg, dtype=self.dtype,
+                                  batch=slots, ctrl=True)
+        tick = pl.make_pipedec_tick(target.cfg, self.plcfg, self.mesh)
+        self._tick = jax.jit(functools.partial(
+            _overlap_tick_impl, cfg=target.cfg, tick=tick))
+        # per-slot tree version counters + outstanding-flight futures
+        self._versions = np.zeros((slots,), np.int32)
+        self._handles = [collections.deque() for _ in range(slots)]
+        self._identity_imap = np.tile(
+            np.arange(capacity, dtype=np.int32), (slots, 1))
+        self._kill_mask = np.zeros((slots,), bool)
+        self._reset_ctrl()
+        w = self.plcfg.width
+        tcap = capacity + w
+        self.dead_entry = (
+            jnp.zeros((slots, w), jnp.int32),        # tokens
+            jnp.zeros((slots, w), jnp.int32),        # positions
+            jnp.zeros((slots, w, tcap), bool),       # masks
+            jnp.zeros((slots,), jnp.int32),          # model_len
+            jnp.full((slots,), capacity, jnp.int32),  # write_idx (parked)
+        )
+
+    def _reset_ctrl(self) -> None:
+        self._ctrl_commit = np.zeros((self.slots,), bool)
+        self._ctrl_len = np.zeros((self.slots,), np.int32)
+        self._ctrl_imap = self._identity_imap.copy()
+        self._ctrl_clear = np.zeros((self.slots,), bool)
+
+    # -- the per-timestep ring tick -------------------------------------
+    def _dispatch_tick(self, tokens, positions, masks, model_len,
+                       write_idx, row_on, counter: str) -> None:
+        """Run one compiled ring tick (consuming any queued ctrl + kill)
+        and resolve the futures of every layer that exited."""
+        (self.model_kv, self.tree_kv, self._ring, exit_logits, exit_valid,
+         exit_version) = self._tick(
+            self._head_params, self.stage_p, self.stage_valid,
+            self.model_kv, self.tree_kv, self._ring, tokens, positions,
+            masks, write_idx, model_len, jnp.asarray(np.asarray(row_on)),
+            jnp.asarray(self._versions),
+            jnp.asarray(self._ctrl_commit), jnp.asarray(self._ctrl_len),
+            jnp.asarray(self._ctrl_imap), jnp.asarray(self._ctrl_clear),
+            jnp.asarray(self._kill_mask))
+        self._reset_ctrl()
+        self._kill_mask[:] = False
+        self.calls[counter] += 1
+
+        ev, evers = np.asarray(exit_valid), np.asarray(exit_version)
+        for slot in np.nonzero(ev)[0]:
+            q = self._handles[int(slot)]
+            if not q:
+                raise RuntimeError(
+                    f"ring exit for slot {slot} with no outstanding flight")
+            h = q.popleft()
+            if h.version != int(evers[slot]):
+                raise RuntimeError(
+                    f"tree-version mismatch at ring exit: slot {slot} "
+                    f"entered at version {h.version}, exited carrying "
+                    f"{int(evers[slot])}")
+            h._value = exit_logits[slot]
+
+    def tick_rows(self, tokens, positions, masks, model_len, write_idx,
+                  row_on):
+        """ONE ring tick for this global timestep.
+
+        ``row_on`` marks the slot rows entering a new tree layer; all
+        other metadata rows are dead and ride masked.  Returns
+        ``(d_all, handles)``: ``handles`` maps each entering slot to the
+        ``DeferredLogits`` future of its exit tick, ``d_all`` is the
+        draft's proposal logits over the bucketed entering rows (``None``
+        when nothing enters — the tick still runs, advancing the ring).
+        """
+        row_on_np = np.asarray(row_on)
+        handles = {}
+        for slot in np.nonzero(row_on_np)[0]:
+            h = DeferredLogits(int(slot), int(self._versions[slot]))
+            self._handles[int(slot)].append(h)
+            handles[int(slot)] = h
+
+        self._dispatch_tick(tokens, positions, masks, model_len,
+                            write_idx, row_on_np, "pipeline_tick")
+
+        d_all = None
+        if row_on_np.any():
+            d_all, self._d_tree = self._draft_verify(
+                tokens, positions, masks, model_len, write_idx, row_on_np)
+        return d_all, handles
+
+    # -- PipelineExecutor seam ------------------------------------------
+    def verify_rows(self, tokens, positions, masks, model_len, write_idx,
+                    row_on):
+        """Standard seam, overlapped semantics: returns (handles, d_all)
+        where ``handles`` are deferred futures instead of logits."""
+        d_all, handles = self.tick_rows(tokens, positions, masks,
+                                        model_len, write_idx, row_on)
+        return handles, d_all
+
+    def commit_rows(self, model_len, commit_mask) -> None:
+        """Queue the target-side exit commit as the next tick's ctrl
+        message (it must trail the in-flight layers through the ring);
+        the replicated draft commits immediately, like the flush
+        backend."""
+        mask = np.asarray(commit_mask)
+        ml = np.asarray(model_len).astype(np.int32)
+        self._ctrl_commit |= mask
+        self._ctrl_len = np.where(mask, ml, self._ctrl_len)
+        node0 = jnp.zeros((self.slots,), jnp.int32)
+        self._d_cache = self.draft.commit_rows(
+            self._d_cache, self._d_tree, node0, model_len, commit_mask)
+        self.calls["commit_rows"] += 1
+
+    def remap_row(self, slot: int, index_map) -> None:
+        self._ctrl_imap[slot] = np.asarray(index_map, np.int32)
+        self._d_tree = self._draft_remap_row(slot, index_map)
+
+    def remap_rows(self, index_maps, row_mask) -> None:
+        rm = np.asarray(row_mask)
+        if not rm.any():
+            return
+        imaps = np.asarray(index_maps, np.int32)
+        self._ctrl_imap = np.where(rm[:, None], imaps, self._ctrl_imap)
+        self._d_tree = _remap_rows_jit(self._d_tree,
+                                       jnp.asarray(imaps, jnp.int32))
+        self.calls["remap_rows"] += 1
+
+    # -- pruning propagation: miss / retire -----------------------------
+    def kill(self, slot: int, *, drop_ctrl: bool = False) -> None:
+        """Invalidate the slot's in-flight ring layers (miss / retire):
+        the kill enters with the next tick, stale layers stop writing
+        their stage tree-cache rows and exit dead, and the slot's tree
+        version advances so no stale future can ever resolve.
+        ``drop_ctrl=True`` (retire) also cancels the slot's queued ctrl
+        AND neutralises its ctrl messages still riding the ring (via the
+        next tick's ``clear`` mask) — the slot is being recycled, and a
+        retired occupant's in-flight commits/prunes must never write
+        into the next occupant's freshly prefilled caches.  A miss keeps
+        both: the missed request's earlier commits stay valid and must
+        finish propagating stage by stage."""
+        self._versions[slot] += 1
+        self._kill_mask[slot] = True
+        for h in self._handles[slot]:
+            h.dead = True
+        self._handles[slot].clear()
+        if drop_ctrl:
+            self._ctrl_commit[slot] = False
+            self._ctrl_len[slot] = 0
+            self._ctrl_imap[slot] = self._identity_imap[slot]
+            self._ctrl_clear[slot] = True
+        self.calls["kill"] += 1
+
+    def drain(self) -> int:
+        """Advance the ring with dead entries until every outstanding
+        future has resolved (at most ``n_stages - 1`` ticks).  The
+        engine's per-timestep ticks already resolve every live flight, so
+        this is a shutdown/test helper, counted separately from the
+        steady-state dispatches."""
+        tokens, positions, masks, model_len, write_idx = self.dead_entry
+        row_on = np.zeros((self.slots,), bool)
+        n = 0
+        while any(self._handles):
+            assert n < self.n_stages, "ring failed to drain"
+            self._dispatch_tick(tokens, positions, masks, model_len,
+                                write_idx, row_on, "drain_tick")
+            n += 1
+        return n

@@ -2,13 +2,17 @@
 
 The logical scheduler must produce bit-identical per-request outputs on
 every backend — ``LocalFusedExecutor`` (PR-2's fused single-device path),
-``ShardedPipelineExecutor`` (the paper's pipelined deployment on an
-n-stage mesh), and the single-request ``PipeDecEngine`` — because the
-executor seam changes *where* the batched verify runs, never *what* is
-computed.  The 8-stage acceptance pin runs in a subprocess
-(``repro.launch.sharded_check``) so the forced host-device count never
-leaks into this process; the in-process tests use a 1-stage mesh, which
-exercises the same ring/psum/stage-masking code paths.
+``ShardedPipelineExecutor`` (the paper's pipelined deployment, flush
+schedule), ``OverlappedShardedExecutor`` (the steady-state schedule: ONE
+ring tick per timestep, deferred exit logits, in-ring pruning
+propagation), and the single-request ``PipeDecEngine`` — because the
+executor seam changes *where and when* the batched verify logits
+materialise, never *what* is computed.  The 8-stage acceptance pin runs
+in a subprocess (``repro.launch.sharded_check --overlap``) so the forced
+host-device count never leaks into this process; the in-process tests use
+a 1-stage mesh, which exercises the same ring/psum/stage-masking, ctrl
+and kill code paths (in-flight layers *behind* a prune need >1 stage and
+are covered by the subprocess pin's pruning-propagation scenario).
 """
 import json
 import os
@@ -22,11 +26,15 @@ import pytest
 from repro.core.pipedec import PipeDecConfig, PipeDecEngine
 from repro.core.speculative import ModelBundle
 from repro.models import transformer as tf
-from repro.serving import (Request, ShardedPipelineExecutor,
-                           SpecPipeDBEngine, generate_with_executor)
+from repro.serving import (OverlappedShardedExecutor, Request,
+                           ShardedPipelineExecutor, SpecPipeDBEngine,
+                           generate_with_executor)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PCFG = PipeDecConfig(n_stages=3, width=4, branch=2)
+# the overlapped ring length equals pcfg.n_stages, and in-process tests
+# only have a 1-device mesh — multi-stage overlap runs via subprocess
+PCFG1 = PipeDecConfig(n_stages=1, width=4, branch=2)
 MAX_LEN = 128
 
 
@@ -47,12 +55,18 @@ def _mk_reqs(seed, n, arrivals=None, max_new=None):
             for i in range(n)]
 
 
-def _sharded(bundles, slots, n_stages=1):
+def _sharded(bundles, slots, n_stages=1, cls=ShardedPipelineExecutor,
+             pcfg=PCFG):
     target, draft = bundles
-    return ShardedPipelineExecutor(
+    return cls(
         target, draft, slots=slots, max_len=MAX_LEN,
-        tree_capacity=PCFG.tree_buffer_capacity, capacity=PCFG.capacity,
+        tree_capacity=pcfg.tree_buffer_capacity, capacity=pcfg.capacity,
         n_stages=n_stages)
+
+
+def _overlapped(bundles, slots):
+    return _sharded(bundles, slots, cls=OverlappedShardedExecutor,
+                    pcfg=PCFG1)
 
 
 def test_sharded_executor_bitmatches_local_and_single(bundles):
@@ -134,25 +148,148 @@ def test_executor_slot_count_must_match(bundles):
 
 
 def test_sharded_8stage_acceptance_pin_subprocess():
-    """The PR's acceptance pin on a REAL 8-device simulated mesh: sharded
-    == local == single per uid, one batched tick per timestep.  Runs
-    ``repro.launch.sharded_check`` in a subprocess so the forced
-    host-device count cannot leak into this test process (same pattern as
-    test_dryrun)."""
+    """The PR's acceptance pin on a REAL 8-device simulated mesh: flush
+    AND overlapped sharded backends == local == single per uid, one
+    batched flush dispatch per pending timestep, one ring tick per
+    executed timestep, and the tick-level pruning-propagation scenario (a
+    slot killed with layers in flight writes nothing further, its stale
+    exits come out dead, other slots bit-untouched).  Runs
+    ``repro.launch.sharded_check --overlap`` in a subprocess so the
+    forced host-device count cannot leak into this test process (same
+    pattern as test_dryrun)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.sharded_check", "--stages",
-         "8", "--requests", "4"],
-        capture_output=True, text=True, timeout=1200, env=env, cwd=REPO)
+         "8", "--requests", "4", "--overlap"],
+        capture_output=True, text=True, timeout=1800, env=env, cwd=REPO)
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
     summary = json.loads(proc.stdout.strip().splitlines()[-1])
     assert summary["bit_identical"]
     assert summary["stages"] == 8
-    assert summary["sharded"]["dispatches"]["pipeline_verify"] > 0
-    assert (summary["sharded"]["tokens_per_timestep"]
-            == summary["local"]["tokens_per_timestep"])
+    indep = summary["independent_draft"]
+    assert indep["sharded"]["dispatches"]["pipeline_verify"] > 0
+    assert (indep["sharded"]["tokens_per_timestep"]
+            == indep["local"]["tokens_per_timestep"])
+    # the steady-state executor: ONE ring tick per executed timestep, on
+    # both the miss-heavy and the perfect-acceptance workloads
+    for wl in ("independent_draft", "self_draft"):
+        over = summary[wl]["sharded_overlapped"]
+        assert (over["dispatches"]["pipeline_tick"] == over["timesteps"])
+        assert (over["tokens_per_timestep"]
+                == summary[wl]["local"]["tokens_per_timestep"])
+    # hits with a full ring: prune index_maps rode the ring
+    assert summary["self_draft"]["acceptance_mean"] > 0.99
+    assert summary["self_draft"]["sharded_overlapped"]["dispatches"][
+        "remap_rows"] > 0
+    # misses with a full ring: in-flight layers were killed
+    assert summary["independent_draft"]["sharded_overlapped"][
+        "dispatches"]["kill"] > 0
+    pp = summary["pruning_propagation"]
+    assert pp["killed_rows_untouched"] and pp["other_slot_unaffected"]
+    assert pp["stale_exits_dropped"] and pp["live_exits_match"]
+    # retire-clear regression: a retired occupant's in-ring ctrl must not
+    # leak into the recycled slot's next occupant
+    assert summary["slot_recycle"]["bit_identical"]
+    assert summary["slot_recycle"]["kills"] >= 2
+
+
+def test_overlapped_bitmatches_flush_and_single(bundles):
+    """Staggered arrivals + slot churn on the overlapped backend
+    (1-stage mesh): per-uid outputs bit-match the flush sharded backend
+    and the single-request engine (same ``PipeDecConfig`` so the traces
+    are comparable)."""
+    target, draft = bundles
+    reqs = _mk_reqs(7, 4, arrivals=[0, 1, 4, 6], max_new=[4, 5, 3, 4])
+    single = PipeDecEngine(target, draft, PCFG1, max_len=MAX_LEN)
+    want = {r.uid: single.generate(r.prompt, r.max_new_tokens)[0]
+            for r in reqs}
+
+    outs = {}
+    for name, ex in (("flush", _sharded(bundles, 2, pcfg=PCFG1)),
+                     ("overlapped", _overlapped(bundles, 2))):
+        eng = SpecPipeDBEngine(target, draft, PCFG1, max_len=MAX_LEN,
+                               max_slots=2, executor=ex)
+        for r in reqs:
+            eng.submit(r)
+        outs[name] = eng.run()
+    for uid, tokens in want.items():
+        np.testing.assert_array_equal(
+            outs["flush"][uid].tokens, tokens,
+            err_msg=f"flush vs single uid={uid}")
+        np.testing.assert_array_equal(
+            outs["overlapped"][uid].tokens, tokens,
+            err_msg=f"overlapped vs single uid={uid}")
+
+
+def test_overlapped_one_tick_per_timestep(bundles):
+    """The steady-state dispatch hook: the overlapped executor issues
+    exactly ONE ring tick per executed global timestep — entries pending
+    or not — and never falls back to a flush or per-slot dispatch."""
+    target, draft = bundles
+    reqs = _mk_reqs(8, 3, arrivals=[0, 0, 2], max_new=[4, 3, 4])
+    ex = _overlapped(bundles, 2)
+    eng = SpecPipeDBEngine(target, draft, PCFG1, max_len=MAX_LEN,
+                           max_slots=2, executor=ex)
+    before = {b: dict(b.calls) for b in (target, draft)}
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+
+    assert eng.stats.tick_dispatches == [1] * eng.stats.timesteps
+    assert ex.calls["pipeline_tick"] == eng.stats.timesteps
+    assert ex.calls["drain_tick"] == 0, \
+        "per-timestep ticks must resolve every live flight"
+    assert ex.calls["pipeline_verify"] == 0, "no flush dispatches"
+    # draft rides the entry cadence, replicated locally
+    disp = eng.stats.verify_dispatches
+    assert draft.calls["tree_verify_rows"] - \
+        before[draft].get("tree_verify_rows", 0) == sum(disp)
+    for b in (target, draft):
+        assert b.calls["tree_verify"] == before[b].get("tree_verify", 0)
+    assert target.calls["tree_verify_rows"] == \
+        before[target].get("tree_verify_rows", 0)
+    assert eng.stats.peak_occupancy == 2, "slots actually shared"
+
+
+def test_overlapped_generate_b1_path(bundles):
+    """The B=1 path through ``generate_with_executor`` on the overlapped
+    backend bit-matches the direct single-request engine."""
+    target, draft = bundles
+    prompt = np.asarray([5, 3, 2, 7, 11], np.int32)
+    single = PipeDecEngine(target, draft, PCFG1, max_len=MAX_LEN)
+    want, want_stats = single.generate(prompt, 6)
+    got, stats = generate_with_executor(target, draft, PCFG1, prompt, 6,
+                                        executor=_overlapped(bundles, 1),
+                                        max_len=MAX_LEN)
+    np.testing.assert_array_equal(got, want)
+    assert stats.commits == want_stats.commits
+    assert stats.acceptance == want_stats.acceptance
+
+
+def test_overlapped_requires_matching_stage_count(bundles):
+    """The ring IS the flight bookkeeping: an overlapped executor whose
+    mesh stage count differs from ``PipeDecConfig.n_stages`` must be
+    rejected (the fill latencies would disagree)."""
+    target, draft = bundles
+    with pytest.raises(AssertionError, match="n_stages"):
+        SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                         max_slots=2, executor=_overlapped(bundles, 2))
+
+
+def test_overlapped_stale_flight_cannot_commit(bundles):
+    """A killed slot's outstanding futures are dead: resolving one raises
+    instead of committing from a stale tree (the engine never does — this
+    pins the guard rail itself)."""
+    from repro.serving import DeferredLogits
+
+    h = DeferredLogits(slot=0, version=3)
+    with pytest.raises(RuntimeError, match="not yet|before its exit"):
+        h.resolve()
+    h.dead = True
+    with pytest.raises(RuntimeError, match="stale"):
+        h.resolve()
 
 
 def test_devices_not_polluted_by_sharded_check():

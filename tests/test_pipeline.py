@@ -1,7 +1,21 @@
 """shard_map pipeline tick: lowering + numerical equivalence vs the
 single-device tree-verify step (1-stage CPU mesh).  The ring and stage
 caches are slot-batched (leading B axis) since the executor-layer PR —
-B=1 here is the single-request deployment."""
+B=1 here is the single-request deployment.
+
+Since the overlapped-execution PR the tick is ingest-first: stage 0
+adopts AND processes the entry on the same tick, so an entry at tick t
+exits at tick ``t + n_stages - 1`` (the engine's ``Flight.exit_t``) and
+``make_pipeline_verify`` needs exactly ``n_stages`` ticks — both pinned
+here.  The tick also carries the overlapped schedule's pruning-
+propagation inputs (per-slot tree ``version`` metadata, a ``kill`` mask,
+and the in-ring commit/remap ctrl channel); the ctrl application is
+pinned bit-identical to the central ``commit_tree_nodes`` +
+``remap_tree_cache_rows`` path the flush executor uses.  Multi-stage
+in-flight behaviour (stale layers behind a kill) runs on a REAL 8-device
+mesh via ``repro.launch.sharded_check`` (see tests/test_executor_sharded
+.py).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -47,7 +61,22 @@ def _stage_model_kv(cache):
             for l in range(reps)]
 
 
+def _entry(params, tokens, positions, mask, batch=1):
+    cat = lambda a: jnp.concatenate([a] * batch, 0)
+    return {
+        "act": cat(embed(params["embed"], tokens)),
+        "positions": cat(positions),
+        "mask": cat(jnp.asarray(mask)[None]),
+        "write_idx": jnp.zeros((batch,), jnp.int32),
+        "model_len": jnp.full((batch,), 4, jnp.int32),
+        "valid": jnp.ones((batch,), bool),
+        "version": jnp.zeros((batch,), jnp.int32),
+    }
+
+
 def test_tick_matches_tree_verify(tiny_dense):
+    """Ingest-first semantics: ONE tick ingests, processes AND exits the
+    entry on a 1-stage mesh (entry at t exits at t + n_stages - 1)."""
     cfg = tiny_dense
     params, mesh, pcfg, sp, valid = _setup(cfg)
     _, tree_kv = pl.init_stage_caches(cfg, pcfg)
@@ -57,24 +86,10 @@ def test_tick_matches_tree_verify(tiny_dense):
     cache, tokens, positions, mask, ref_logits = _reference(cfg, params,
                                                             pcfg)
     model_kv = _stage_model_kv(cache)
-    x_in = embed(params["embed"], tokens)  # [1, w, d]
-    entry = {
-        "act": x_in, "positions": positions,
-        "mask": jnp.asarray(mask)[None],
-        "write_idx": jnp.zeros((1,), jnp.int32),
-        "model_len": jnp.full((1,), 4, jnp.int32),
-        "valid": jnp.ones((1,), bool),
-    }
+    entry = _entry(params, tokens, positions, mask)
     with mesh:
-        # tick 1: ring empty, entry ingested into stage 0
-        tkv1, ring1, exit1 = jax.jit(tick)(sp, valid, model_kv, tree_kv,
-                                           ring, entry)
-        assert not bool(exit1["valid"][0])
-        # tick 2: stage 0 processes the ingested layer; it exits
-        entry2 = dict(entry)
-        entry2["valid"] = jnp.zeros((1,), bool)
-        _, _, exit_out = jax.jit(tick)(sp, valid, model_kv, tkv1, ring1,
-                                       entry2)
+        _, _, _, exit_out = jax.jit(tick)(sp, valid, model_kv, tree_kv,
+                                          ring, entry)
 
     got = exit_out["act"]  # [1, w, d] final hidden of the exiting layer
     got_logits = tf._logits(params, cfg, got)[0]
@@ -82,12 +97,33 @@ def test_tick_matches_tree_verify(tiny_dense):
                                np.asarray(ref_logits[0, 0]),
                                rtol=2e-4, atol=2e-4)
     assert bool(exit_out["valid"][0])
+    assert int(exit_out["version"][0]) == 0
+
+
+def test_tick_version_rides_to_exit(tiny_dense):
+    """The per-slot tree version frozen at entry is returned at exit —
+    the overlapped executor's proof that a resolved future belongs to the
+    slot's current tree."""
+    cfg = tiny_dense
+    params, mesh, pcfg, sp, valid = _setup(cfg)
+    _, tree_kv = pl.init_stage_caches(cfg, pcfg)
+    ring = pl.init_ring(cfg, pcfg)
+    tick = pl.make_pipedec_tick(cfg, pcfg, mesh)
+    cache, tokens, positions, mask, _ = _reference(cfg, params, pcfg)
+    model_kv = _stage_model_kv(cache)
+    entry = dict(_entry(params, tokens, positions, mask),
+                 version=jnp.full((1,), 7, jnp.int32))
+    with mesh:
+        _, _, _, exit_out = jax.jit(tick)(sp, valid, model_kv, tree_kv,
+                                          ring, entry)
+    assert bool(exit_out["valid"][0])
+    assert int(exit_out["version"][0]) == 7
 
 
 def test_pipeline_verify_flush_matches_tree_verify(tiny_dense):
-    """``make_pipeline_verify`` (the sharded executor's one-dispatch
-    flush) reproduces the reference tree-verify logits, and invalid rows
-    leave the tree caches bit-untouched."""
+    """``make_pipeline_verify`` (the sharded flush executor's
+    one-dispatch schedule) reproduces the reference tree-verify logits,
+    and invalid rows leave the tree caches bit-untouched."""
     cfg = tiny_dense
     params, mesh, pcfg, sp, valid = _setup(cfg)
     _, tree_kv = pl.init_stage_caches(cfg, pcfg, batch=2)
@@ -100,14 +136,8 @@ def test_pipeline_verify_flush_matches_tree_verify(tiny_dense):
     model_kv = [jax.tree.map(
         lambda t: jnp.concatenate([t, jnp.zeros_like(t)], axis=1), c)
         for c in model_kv1]
-    entry = {
-        "act": jnp.concatenate([embed(params["embed"], tokens)] * 2, 0),
-        "positions": jnp.concatenate([positions] * 2, 0),
-        "mask": jnp.concatenate([jnp.asarray(mask)[None]] * 2, 0),
-        "write_idx": jnp.zeros((2,), jnp.int32),
-        "model_len": jnp.full((2,), 4, jnp.int32),
-        "valid": jnp.asarray([True, False]),
-    }
+    entry = _entry(params, tokens, positions, mask, batch=2)
+    entry["valid"] = jnp.asarray([True, False])
     with mesh:
         exit_act, exit_valid, new_tkv = jax.jit(verify)(
             sp, valid, model_kv, tree_kv, entry)
@@ -127,3 +157,121 @@ def test_pipeline_verify_flush_matches_tree_verify(tiny_dense):
         for c_new, c_old in zip(new_tkv, tree_kv)
         for n, o in zip(jax.tree.leaves(c_new), jax.tree.leaves(c_old)))
     assert wrote
+
+
+def test_pipeline_verify_runs_exactly_n_stages_ticks(tiny_dense,
+                                                     monkeypatch):
+    """The flush dispatch is exactly ``n_stages`` hops — the old trailing
+    dead-entry tick (ingest-after-process semantics) is gone."""
+    cfg = tiny_dense
+    counts = {"ticks": 0}
+    real = pl.make_pipedec_tick
+
+    def counting(*args, **kwargs):
+        tick = real(*args, **kwargs)
+
+        def wrapped(*a, **k):
+            counts["ticks"] += 1
+            return tick(*a, **k)
+
+        return wrapped
+
+    monkeypatch.setattr(pl, "make_pipedec_tick", counting)
+    params, mesh, pcfg, sp, valid = _setup(cfg)
+    _, tree_kv = pl.init_stage_caches(cfg, pcfg)
+    verify = pl.make_pipeline_verify(cfg, pcfg, mesh)
+    cache, tokens, positions, mask, _ = _reference(cfg, params, pcfg)
+    model_kv = _stage_model_kv(cache)
+    entry = _entry(params, tokens, positions, mask)
+    with mesh:
+        _, exit_valid, _ = verify(sp, valid, model_kv, tree_kv, entry)
+    assert bool(exit_valid[0]), "the layer must complete within the flush"
+    assert counts["ticks"] == pcfg.n_stages
+
+
+def test_tick_ctrl_matches_central_commit_and_remap(tiny_dense):
+    """In-ring pruning propagation == the flush executor's central path:
+    a ctrl message (commit mask/length + prune index_map) applied by the
+    tick produces bit-identical model/tree caches to
+    ``commit_tree_nodes`` + ``remap_tree_cache_rows`` applied directly,
+    and an identity ctrl is a bit-exact no-op."""
+    cfg = tiny_dense
+    params, mesh, pcfg, sp, valid = _setup(cfg)
+    _, tree_kv = pl.init_stage_caches(cfg, pcfg)
+    tick = pl.make_pipedec_tick(cfg, pcfg, mesh)
+    cache, tokens, positions, mask, _ = _reference(cfg, params, pcfg)
+    model_kv = _stage_model_kv(cache)
+    ring = pl.init_ring(cfg, pcfg, ctrl=True)
+    cap = pcfg.tree_capacity
+    identity = jnp.arange(cap, dtype=jnp.int32)[None]
+    no_ctrl = {"commit": jnp.zeros((1,), bool),
+               "commit_len": jnp.zeros((1,), jnp.int32),
+               "index_map": identity,
+               "clear": jnp.zeros((1,), bool)}
+    kill0 = jnp.zeros((1,), bool)
+    entry = _entry(params, tokens, positions, mask)
+    dead = dict(entry, valid=jnp.zeros((1,), bool))
+
+    with mesh:
+        # tick 1 writes the root layer's KV into tree row 0 (identity
+        # ctrl riding along must be a bit-exact no-op)
+        model_kv0 = [jax.tree.map(lambda t: t.copy(), c) for c in model_kv]
+        model_kv, tree_kv, ring, _ = jax.jit(tick)(
+            sp, valid, model_kv, tree_kv, ring, entry, kill0, no_ctrl)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), model_kv, model_kv0)
+
+        # a prune keeping old row 0 at new row 0 and dropping the rest,
+        # plus a commit of row 0 at model_len=4
+        imap = jnp.full((cap,), -1, jnp.int32).at[0].set(0)
+        ctrl = {"commit": jnp.ones((1,), bool),
+                "commit_len": jnp.full((1,), 4, jnp.int32),
+                "index_map": imap[None],
+                "clear": jnp.zeros((1,), bool)}
+        got_kv, got_tkv, _, _ = jax.jit(tick)(
+            sp, valid, model_kv, tree_kv, ring, dead, kill0, ctrl)
+
+    node0 = jnp.zeros((1,), jnp.int32)
+    want_kv = [tf.commit_tree_nodes(cfg, mkv, tkv, node0,
+                                    jnp.full((1,), 4, jnp.int32),
+                                    jnp.ones((1,), bool))
+               for mkv, tkv in zip(model_kv, tree_kv)]
+    want_tkv = [tf.remap_tree_cache_rows(c, imap[None]) for c in tree_kv]
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), got_kv, want_kv)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), got_tkv, want_tkv)
+
+
+def test_remap_tree_cache_rows_matches_per_row_reference(tiny_dense):
+    """The batched gather (``remap_rows`` seam) equals the per-slot
+    ``core.speculative.remap_tree_caches`` loop, identity rows
+    included."""
+    from repro.core.speculative import remap_tree_caches
+
+    cfg = tiny_dense
+    cap, slack, slots = 11, 4, 3
+    tkv = jax.tree.map(
+        lambda t: jax.random.normal(jax.random.PRNGKey(1), t.shape),
+        tf.init_tree_caches(cfg, slots, cap + slack))
+    rng = np.random.default_rng(0)
+    imaps = np.tile(np.arange(cap, dtype=np.int32), (slots, 1))
+    # slot 0: a real prune (drop half the rows, compact the rest)
+    keep = np.sort(rng.choice(cap, size=cap // 2, replace=False))
+    imaps[0] = -1
+    imaps[0][keep] = np.arange(len(keep))
+    # slot 1: identity (untouched); slot 2: reversal
+    imaps[2] = np.arange(cap, dtype=np.int32)[::-1]
+
+    got = tf.remap_tree_cache_rows(tkv, jnp.asarray(imaps))
+    for slot in range(slots):
+        want_row = remap_tree_caches(
+            tf.slice_cache_rows(tkv, slot, 1), jnp.asarray(imaps[slot]),
+            cap)
+        got_row = tf.slice_cache_rows(got, slot, 1)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), got_row, want_row)
+    # the identity slot is bit-untouched
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a[1]), np.asarray(b[1])),
+        tf.slice_cache_rows(got, 1, 1), tf.slice_cache_rows(tkv, 1, 1))
