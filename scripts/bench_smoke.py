@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""CI bench-smoke regression gate for the steady-state tick cost.
+
+Runs ``benchmarks/fig8_throughput.py`` in quick measured mode (the
+sharded measured workload is identical to the full mode, so its schedule
+metrics are deterministic) and diffs the regenerated
+``measured_engine_sharded`` block against the committed
+``BENCH_fig8.json``.  Fails (non-zero exit) when a PR silently
+re-inflates the tick:
+
+  * ``ticks_per_timestep`` of the overlapped schedule must stay exactly
+    1.0 — one ring tick per executed global timestep, admission
+    timesteps included;
+  * overlapped ``hops_per_timestep`` must not exceed the committed
+    baseline (1 hop per tick; the flush schedule must still span
+    ``n_stages`` hops so the two regimes stay distinguishable);
+  * the measured ctrl-active rate must not inflate past the committed
+    baseline (tolerance ``--rate-slack``, default 0.05): the gated ctrl
+    channel must keep closing on quiet ticks;
+  * admission prefill must keep riding the tick —
+    ``separate_prefill_dispatches == 0`` and ``prefill_in_ring`` > 0;
+  * the flush / overlapped / ungated schedules must stay token-for-token
+    ``bit_identical``.
+
+Wall-clock numbers (``tick_cost_s``) are reported but never gated —
+runner noise is not a regression.  The regenerated JSON is written to
+``--out`` (uploaded as a workflow artifact by the CI job) so a failing
+run leaves the evidence behind.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check(baseline: dict, fresh: dict, rate_slack: float):
+    errors = []
+
+    def gate(cond: bool, msg: str):
+        print(("  ok   " if cond else "  FAIL ") + msg)
+        if not cond:
+            errors.append(msg)
+
+    base = baseline["measured_engine_sharded"]
+    new = fresh["measured_engine_sharded"]
+    over_b, over_n = base["overlapped"], new["overlapped"]
+
+    gate(new["bit_identical"],
+         "flush/overlapped/ungated schedules bit-identical")
+    gate(over_n["ticks_per_timestep"] == 1.0,
+         f"overlapped ticks_per_timestep == 1.0 "
+         f"(got {over_n['ticks_per_timestep']})")
+    gate(over_n["hops_per_timestep"] <= over_b["hops_per_timestep"] + 1e-9,
+         f"overlapped hops_per_timestep {over_n['hops_per_timestep']} <= "
+         f"baseline {over_b['hops_per_timestep']}")
+    gate(new["flush"]["hops_per_timestep"] >= new["mesh_stages"],
+         f"flush still spans n_stages hops "
+         f"(got {new['flush']['hops_per_timestep']}, "
+         f"mesh {new['mesh_stages']})")
+    gate(over_n["ctrl_active_rate"]
+         <= over_b["ctrl_active_rate"] + rate_slack,
+         f"ctrl-active rate {over_n['ctrl_active_rate']} <= baseline "
+         f"{over_b['ctrl_active_rate']} + {rate_slack}")
+    gate(over_n["ctrl_active_rate"] < 1.0,
+         "gated ctrl closes on some ticks")
+    gate(over_n["separate_prefill_dispatches"] == 0,
+         "no separate prefill dispatches on the overlapped backend")
+    gate(over_n["dispatch_counts"].get("prefill_in_ring", 0) > 0,
+         "admissions prefilled in-ring")
+
+    print(f"  info tick_cost_s gated={over_n.get('tick_cost_s')} "
+          f"ungated={new['overlapped_ungated'].get('tick_cost_s')} "
+          f"(not gated: wall-clock noise)")
+    return errors
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO, "BENCH_fig8.json"))
+    ap.add_argument("--out", default="BENCH_fig8.regen.json",
+                    help="regenerated JSON (uploaded as a CI artifact)")
+    ap.add_argument("--rate-slack", type=float, default=0.05)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    sys.path[:0] = [REPO, os.path.join(REPO, "src")]
+    from benchmarks import fig8_throughput
+
+    fig8_throughput.run(verbose=True, quick=True, out_json=args.out)
+    with open(args.out) as f:
+        fresh = json.load(f)
+
+    print("# bench-smoke gate (fresh quick run vs committed "
+          "BENCH_fig8.json)")
+    errors = check(baseline, fresh, args.rate_slack)
+    if errors:
+        print(f"BENCH_SMOKE fail ({len(errors)} regression(s)) — the "
+              f"steady-state tick got more expensive; see {args.out}")
+        return 1
+    print("BENCH_SMOKE ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

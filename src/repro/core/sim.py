@@ -159,27 +159,56 @@ def specpipe_db_tbt(hw: StageHardware, batch: int,
 # in-ring pruning propagation — the paper's wall-clock regime, now
 # executed and measured: benchmarks/fig8_throughput.py records 1
 # tick/timestep vs the flush's n_stages hops, with bit-identical tokens).
+#
+# Steady-state cost terms (the cheap-ticks PR):
+#   * ``ctrl_rate`` × ``t_ctrl`` — the gated in-ring ctrl: only the
+#     fraction of ticks whose ctrl message is active pays the per-stage
+#     commit-scatter + prune-gather cost ``t_ctrl`` (ungated executors
+#     pay it every tick: ``ctrl_rate=1``; the measured rate is
+#     ``calls["ctrl_active_ticks"] / calls["pipeline_tick"]``).
+#   * ``prefill_rate`` × ``t_prefill`` — admission prefill: the flush
+#     schedule pays a separate prefill dispatch per admission
+#     (``prefill_rate`` admissions per timestep); the overlapped schedule
+#     rides the prompt through the tick's prefill lane (prefill-in-ring),
+#     so the separate term vanishes and only the (already-counted) hop is
+#     paid.
 # --------------------------------------------------------------------------
 def specpipe_db_sharded_timestep(hw: StageHardware, batch: int,
                                  batch_scale: Callable[[int], float] = None,
-                                 flush: bool = False) -> float:
+                                 flush: bool = False,
+                                 ctrl_rate: float = 0.0,
+                                 t_ctrl: float = 0.0,
+                                 prefill_rate: float = 0.0,
+                                 t_prefill: float = 0.0) -> float:
     s = batch_scale(batch) if batch_scale else 1.0
     hop = hw.t_stage_width * s + hw.t_comm
-    stages = hw.n_stages if flush else 1
-    return max(hw.t_draft * s, stages * hop) + hw.t_sync
+    if flush:
+        # flush: n_stages hops per timestep, a separate central
+        # commit/remap application (ctrl_rate prices how often), and a
+        # separate prefill dispatch per admission
+        steps = hw.n_stages * hop + ctrl_rate * t_ctrl \
+            + prefill_rate * t_prefill
+        return max(hw.t_draft * s, steps) + hw.t_sync
+    # overlapped: ONE hop per timestep; the gated ctrl rides the hop only
+    # on active ticks, and prefill-in-ring amortises admission into the
+    # same hop (no separate term)
+    return max(hw.t_draft * s, hop + ctrl_rate * t_ctrl) + hw.t_sync
 
 
 def specpipe_db_sharded_throughput(hw: StageHardware, batch: int,
                                    tokens_per_timestep: float,
                                    batch_scale: Callable[[int], float]
-                                   = None, flush: bool = False) -> float:
-    ts = specpipe_db_sharded_timestep(hw, batch, batch_scale, flush)
+                                   = None, flush: bool = False,
+                                   **cost_terms) -> float:
+    ts = specpipe_db_sharded_timestep(hw, batch, batch_scale, flush,
+                                      **cost_terms)
     return batch * tokens_per_timestep / ts
 
 
 def specpipe_db_sharded_tbt(hw: StageHardware, batch: int,
                             tokens_per_timestep: float,
                             batch_scale: Callable[[int], float] = None,
-                            flush: bool = False) -> float:
-    ts = specpipe_db_sharded_timestep(hw, batch, batch_scale, flush)
+                            flush: bool = False, **cost_terms) -> float:
+    ts = specpipe_db_sharded_timestep(hw, batch, batch_scale, flush,
+                                      **cost_terms)
     return ts / max(tokens_per_timestep, 1e-9)

@@ -42,17 +42,27 @@ Two executor schedules drive this tick (``serving.executor``):
     paper's steady-state wall-clock regime (``flush=False`` pricing).
     Verify logits only exist at the layer's *exit* timestep, so the
     engine's ``Flight``s resolve deferred-logit futures, and correctness
-    under pruning needs the two in-ring mechanisms this module compiles:
+    under pruning needs the in-ring mechanisms this module compiles:
 
-      - **ctrl channel** (pruning propagation): the exit decision at
-        timestep t (commit length + old→new prune ``index_map``) enters
-        the ring at t+1 and reaches stage k at tick t+1+k — exactly after
-        stage k processed every pre-prune in-flight layer (stage k runs
-        layer j at tick j+k) and exactly before it processes the first
-        post-prune layer.  Each stage applies commit-then-compact to its
-        local cache slice on arrival, so pre-prune layers always read
-        pre-prune rows and post-prune layers always read compacted rows —
-        the in-flight schedule computes bit-identical logits to the flush.
+      - **gated ctrl channel** (pruning propagation): the exit decision
+        at timestep t (commit length + old→new prune ``index_map``)
+        enters the ring at t+1 and reaches stage k at tick t+1+k —
+        exactly after stage k processed every pre-prune in-flight layer
+        (stage k runs layer j at tick j+k) and exactly before it
+        processes the first post-prune layer.  Each stage applies
+        commit-then-compact to its local cache slice on arrival, so
+        pre-prune layers always read pre-prune rows and post-prune layers
+        always read compacted rows — the in-flight schedule computes
+        bit-identical logits to the flush.  The channel is *gated*: an
+        ``active`` predicate enters with the message and rides the ring
+        beside it (``c_active``, one bool per stage slot), and each
+        stage's commit-scatter + prune-gather is wrapped in
+        ``jax.lax.cond`` on its local predicate — the all-identity /
+        no-commit message that rides most ticks costs a predicate check
+        instead of a full scatter+gather per stage.  The executor only
+        raises the predicate on timesteps where exit ctrl was actually
+        queued, and an inactive message is by construction the identity,
+        so gating is bit-exact.
       - **kill + version** (miss / retire invalidation): a ``kill [B]``
         input invalidates every in-flight layer of a pruned-to-miss or
         retired slot wherever it is in the ring (stale layers stop
@@ -60,6 +70,23 @@ Two executor schedules drive this tick (``serving.executor``):
         ``valid=False``); the per-slot ``version`` counter rides with
         each layer and is returned at exit so the executor can prove a
         resolved future belongs to the slot's *current* tree.
+      - **prefill-in-ring** (overlapped admission): with
+        ``prefill_cap > 0`` the ring carries a second lane
+        (``p_act [S, B, Pcap, d]`` + per-slot ``p_len``/``p_on``) for
+        admission prefills.  A joining request's padded prompt enters at
+        stage 0 as a special layer kind the same tick the in-flight tree
+        layers advance; each stage applies its layers in *full* (prefill)
+        mode to the lane — gated by ``jax.lax.cond`` on "any prefill at
+        this stage", so the empty lane that rides most ticks is free —
+        writing the slot's model-cache rows [0, Pcap) stage by stage.
+        The prompt's last-position hidden state exits ``n_stages - 1``
+        ticks later (``p_last``/``p_valid``; the lane never touches the
+        tree exit, so the prefill is a *dead exit* there), and admitting
+        a request no longer costs the ring a separate dispatch or an
+        idle timestep.  Pad rows beyond ``p_len`` are causally masked at
+        positions < len and only ever overwrite model rows that the
+        growing ``model_len`` overwrites again before reading — outputs
+        stay bit-identical to the separate-dispatch prefill.
 
 Supports attention-family architectures (dense / VLM / MoE-with-attention);
 recurrent families use chain-mode speculative decoding instead (DESIGN.md
@@ -153,7 +180,7 @@ def init_stage_caches(cfg: ModelConfig, pcfg: PipelineConfig,
 
 
 def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32,
-              batch: int = 1, ctrl: bool = False):
+              batch: int = 1, ctrl: bool = False, prefill_cap: int = 0):
     """In-flight activation + metadata ring, one slot per stage.  Every
     leaf carries the KV-slot axis ``batch`` right after the stage dim —
     a batched tick moves every slot's layer one stage forward together.
@@ -162,7 +189,14 @@ def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32,
     channel: per stage-slot exit-commit mask/length and an old→new prune
     ``index_map`` that each stage applies to its local cache slice the
     tick the message reaches it (identity maps are the no-op, so the
-    channel is always well-formed)."""
+    channel is always well-formed), plus the per-stage ``c_active``
+    gating predicate that rides beside the message (False = the message
+    is the identity and the stage skips the whole application).
+
+    ``prefill_cap > 0`` adds the prefill lane (overlapped admission):
+    per-stage padded prompt activations ``p_act`` with their
+    ``p_len``/``p_on`` metadata, advancing one stage per tick like the
+    tree layers."""
     s, w = pcfg.n_stages, pcfg.width
     ring = {
         "act": jnp.zeros((s, batch, w, cfg.d_model), dtype),
@@ -180,10 +214,17 @@ def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32,
         ring["c_imap"] = jnp.broadcast_to(
             jnp.arange(pcfg.tree_capacity, dtype=jnp.int32),
             (s, batch, pcfg.tree_capacity))
+        ring["c_active"] = jnp.zeros((s,), bool)
+    if prefill_cap:
+        ring["p_act"] = jnp.zeros((s, batch, prefill_cap, cfg.d_model),
+                                  dtype)
+        ring["p_len"] = jnp.zeros((s, batch), jnp.int32)
+        ring["p_on"] = jnp.zeros((s, batch), bool)
     return ring
 
 
-def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
+def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
+                      prefill_cap: int = 0):
     """Build the jittable one-timestep pipeline tick (slot-batched).
 
     Inputs (global shapes; ``B`` = KV slots, B=1 = single-request):
@@ -199,23 +240,40 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
                   these slots (miss / retire: the pruning-propagation
                   kill; the entry ingested THIS tick is never killed)
       ctrl:       None, or {"commit" [B] bool, "commit_len" [B] i32,
-                  "index_map" [B, cap] i32, "clear" [B] bool} — the exit
-                  decision of the previous timestep, entering at stage 0
-                  and applied by each stage (commit row 0 → model cache,
-                  then compact the tree rows) the tick it arrives, BEFORE
-                  that stage's layer compute.  Identity index_map +
-                  commit False is the per-slot no-op.  ``clear``
-                  neutralises the slot's ctrl messages still RIDING the
-                  ring (retire: the slot is being recycled, and a
-                  retired occupant's in-flight commits/prunes must never
-                  reach the next occupant's freshly prefilled caches);
-                  a miss must NOT clear — the missed request's earlier
-                  commits stay valid and must finish propagating.
+                  "index_map" [B, cap] i32, "clear" [B] bool,
+                  "active" [] bool} — the exit decision of the previous
+                  timestep, entering at stage 0 and applied by each stage
+                  (commit row 0 → model cache, then compact the tree
+                  rows) the tick it arrives, BEFORE that stage's layer
+                  compute.  Identity index_map + commit False is the
+                  per-slot no-op; ``active`` is the *gate*: it rides the
+                  ring beside the message (``c_active``) and each stage
+                  wraps the whole commit-scatter + prune-gather in
+                  ``jax.lax.cond`` on it, so an inactive (all-identity)
+                  message costs a predicate check instead of a
+                  scatter+gather per stage.  The caller must only raise
+                  ``active`` when the message is not the identity.
+                  ``clear`` neutralises the slot's ctrl messages still
+                  RIDING the ring (retire: the slot is being recycled,
+                  and a retired occupant's in-flight commits/prunes must
+                  never reach the next occupant's freshly prefilled
+                  caches); a miss must NOT clear — the missed request's
+                  earlier commits stay valid and must finish propagating.
+      pentry:     (only when ``prefill_cap > 0``) {"act" [B, Pcap, d],
+                  "len" [B] i32, "on" [B] bool} — admission prefills
+                  entering the prefill lane at stage 0.  Each stage
+                  applies its layers in full (prefill) mode to the lane
+                  the tick it holds it — under ``jax.lax.cond`` on "any
+                  prefill at this stage", so the empty lane is free —
+                  writing the slot's model-cache rows [0, Pcap).  The
+                  lane's last-position hidden state is returned at exit
+                  (``p_last [B, d]``, ``p_valid [B]``); the tree-layer
+                  exit for those slots stays dead.
 
     Stage 0 ingests the entry THIS tick (and processes it this tick), so
     an entry at tick t exits at tick ``t + n_stages - 1`` — the engine's
     ``Flight.exit_t``.  Returns (new model_kv, new tree_kv, new ring,
-    exit: {act [B, w, d], valid [B], version [B]}).
+    exit: {act [B, w, d], valid [B], version [B](, p_last, p_valid)}).
     """
     s_axis = "model"
     n_stages = pcfg.n_stages
@@ -247,10 +305,37 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
                 tc[0], ntc[0]))
         return xs, new_tkv
 
+    def prefill_stage(stage_p, valid_row, kv, x, on):
+        """Apply this stage's layers in FULL (prefill) mode over the
+        padded prompt lane ([B, Pcap, d]), writing each participating
+        slot's model-cache rows [0, Pcap) — the same per-layer math
+        ``tf.prefill`` runs, partitioned stage by stage."""
+        b = x.shape[0]
+        positions = jnp.broadcast_to(
+            jnp.arange(prefill_cap, dtype=jnp.int32)[None],
+            (b, prefill_cap))
+        ctx = tf.Ctx(mode="full", positions=positions, cache_len=0)
+        xs = x
+        new_kv = []
+        for l in range(lps):
+            y, nc, _, _ = tf._apply_unit(stage_p[l], cfg, kinds, xs,
+                                         [kv[l]], None, ctx)
+            ok = valid_row[l] & on                       # [B]
+            xs = jnp.where(ok[:, None, None], y, xs)
+            new_kv.append(jax.tree.map(
+                lambda old, new, k=ok: jnp.where(
+                    k.reshape((-1,) + (1,) * (old.ndim - 1)),
+                    new.astype(old.dtype), old),
+                kv[l], nc[0]))
+        return new_kv, xs
+
     def tick(stage_p, stage_valid, model_kv, tree_kv, ring, entry,
-             kill=None, ctrl=None):
+             kill=None, ctrl=None, pentry=None):
+        assert (pentry is not None) == bool(prefill_cap), \
+            "pass pentry iff the tick was built with prefill_cap > 0"
+
         def body(stage_p, stage_valid, model_kv, tree_kv, ring, entry,
-                 kill, ctrl):
+                 kill, ctrl, pentry):
             # local slices carry a leading stage dim of 1 (dropped below)
             sp = [jax.tree.map(lambda t: t[0], lp) for lp in stage_p]
             sv = stage_valid[0]
@@ -295,6 +380,9 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
                 cur["c_commit"] = pick(ctrl["commit"], ring_commit)
                 cur["c_len"] = pick(ctrl["commit_len"], ring_len)
                 cur["c_imap"] = pick(ctrl["index_map"], ring_imap)
+                cur["c_active"] = jnp.where(
+                    is0, jnp.reshape(ctrl["active"], (1,)),
+                    ring["c_active"])
 
                 # 3. pruning propagation: apply the ctrl that reached this
                 # stage — commit first (tree row 0 is still the exiting
@@ -302,15 +390,46 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
                 # trails every pre-prune in-flight layer and leads every
                 # post-prune one, so each stage flips its local caches at
                 # exactly the schedule point the flush executor does
-                # centrally.
-                commit_on, commit_len = cur["c_commit"][0], cur["c_len"][0]
-                node0 = jnp.zeros_like(commit_len)
-                kv = [tf.commit_tree_nodes(cfg, kv[l], tkv[l], node0,
-                                           commit_len, commit_on)
-                      for l in range(lps)]
-                imap = cur["c_imap"][0]
-                tkv = [tf.remap_tree_cache_rows(tkv[l], imap)
-                       for l in range(lps)]
+                # centrally.  Gated: the whole commit-scatter +
+                # prune-gather runs under ``lax.cond`` on the message's
+                # ``c_active`` flag — the all-identity message that rides
+                # most ticks costs one predicate check per stage.
+                def apply_ctrl(ops):
+                    kv_, tkv_ = ops
+                    commit_on = cur["c_commit"][0]
+                    commit_len = cur["c_len"][0]
+                    node0 = jnp.zeros_like(commit_len)
+                    kv_ = [tf.commit_tree_nodes(cfg, kv_[l], tkv_[l],
+                                                node0, commit_len,
+                                                commit_on)
+                           for l in range(lps)]
+                    imap = cur["c_imap"][0]
+                    tkv_ = [tf.remap_tree_cache_rows(tkv_[l], imap)
+                            for l in range(lps)]
+                    return kv_, tkv_
+
+                kv, tkv = jax.lax.cond(cur["c_active"][0], apply_ctrl,
+                                       lambda ops: ops, (kv, tkv))
+
+            # 3b. prefill lane: a joining slot's padded prompt advances
+            # one stage per tick beside the tree layers; the stage
+            # applies its layers in full mode (writing the slot's
+            # model-cache rows) only when a prefill actually sits here —
+            # the empty lane costs one any() per tick.
+            p_x = None
+            if prefill_cap:
+                p_on_r = ring["p_on"]
+                if kill is not None:
+                    p_on_r = p_on_r & ~kill[None]
+                cur["p_act"] = pick(pentry["act"], ring["p_act"])
+                cur["p_len"] = pick(pentry["len"], ring["p_len"])
+                cur["p_on"] = pick(pentry["on"], p_on_r)
+                pon = cur["p_on"][0]
+                kv, p_x = jax.lax.cond(
+                    jnp.any(pon),
+                    lambda kv_, px: prefill_stage(sp, sv, kv_, px, pon),
+                    lambda kv_, px: (kv_, px),
+                    kv, cur["p_act"][0])
 
             # 4. compute: this stage's layers over the layer it holds
             x, new_tkv = local_stage(
@@ -326,21 +445,35 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
                 (cur["valid"][0] & is_last).astype(jnp.int32), s_axis) > 0
             exit_version = jax.lax.psum(
                 cur["version"][0] * is_last.astype(jnp.int32), s_axis)
+            exit_out = {"act": exit_act, "valid": exit_valid,
+                        "version": exit_version}
+            if prefill_cap:
+                # the prefill lane's exit: the prompt's last-position
+                # hidden state after every stage's layers (the tree exit
+                # above stays dead for joining slots)
+                last = jnp.clip(cur["p_len"][0] - 1, 0, prefill_cap - 1)
+                x_last = jnp.take_along_axis(
+                    p_x, last[:, None, None], axis=1)[:, 0]      # [B, d]
+                exit_out["p_last"] = jax.lax.psum(
+                    x_last * is_last.astype(x_last.dtype), s_axis)
+                exit_out["p_valid"] = jax.lax.psum(
+                    (pon & is_last).astype(jnp.int32), s_axis) > 0
 
             # 6. rotate one stage forward (paper's transmission step);
             # stage 0's slot empties (refilled by the next ingest)
             perm = [(i, i + 1) for i in range(n_stages - 1)]
             shift = lambda v: jax.lax.ppermute(v, s_axis, perm)
-            # rotate the POST-compute activation; the stale pre-compute
-            # act must not ride (nor cost a dead collective)
-            new_ring = {k: shift(v) for k, v in cur.items() if k != "act"}
+            # rotate the POST-compute activations; the stale pre-compute
+            # acts must not ride (nor cost a dead collective)
+            new_ring = {k: shift(v) for k, v in cur.items()
+                        if k not in ("act", "p_act")}
             new_ring["act"] = shift(x[None])
+            if prefill_cap:
+                new_ring["p_act"] = shift(p_x[None])
 
             new_kv = [jax.tree.map(lambda t: t[None], lc) for lc in kv]
             new_tkv = [jax.tree.map(lambda t: t[None], lc) for lc in new_tkv]
-            return (new_kv, new_tkv, new_ring,
-                    {"act": exit_act, "valid": exit_valid,
-                     "version": exit_version})
+            return (new_kv, new_tkv, new_ring, exit_out)
 
         kv_spec = jax.tree.map(lambda _: P(s_axis), model_kv)
         tkv_spec = jax.tree.map(lambda _: P(s_axis), tree_kv)
@@ -349,15 +482,21 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh):
         kill_spec = None if kill is None else P()
         ctrl_spec = None if ctrl is None else jax.tree.map(
             lambda _: P(), ctrl)
+        pentry_spec = None if pentry is None else jax.tree.map(
+            lambda _: P(), pentry)
+        exit_spec = {"act": P(), "valid": P(), "version": P()}
+        if prefill_cap:
+            exit_spec["p_last"] = P()
+            exit_spec["p_valid"] = P()
         out = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(s_axis), stage_p),
                       P(s_axis), kv_spec, tkv_spec, ring_spec, entry_spec,
-                      kill_spec, ctrl_spec),
-            out_specs=(kv_spec, tkv_spec, ring_spec,
-                       {"act": P(), "valid": P(), "version": P()}),
+                      kill_spec, ctrl_spec, pentry_spec),
+            out_specs=(kv_spec, tkv_spec, ring_spec, exit_spec),
             check_vma=False,
-        )(stage_p, stage_valid, model_kv, tree_kv, ring, entry, kill, ctrl)
+        )(stage_p, stage_valid, model_kv, tree_kv, ring, entry, kill, ctrl,
+          pentry)
         return out
 
     return tick

@@ -18,16 +18,24 @@ global timestep, deferred exit logits, in-ring pruning propagation):
     layers in flight) and a self-draft (perfect acceptance: every commit
     is a hit, so prune index_maps ride the ring through a full pipeline);
   * exactly ONE ring tick per executed timestep
-    (``calls["pipeline_tick"]`` == engine timesteps);
+    (``calls["pipeline_tick"]`` == engine timesteps) — admission
+    timesteps included: prefill rides the tick's prefill lane
+    (prefill-in-ring), so NEITHER model ever logs a separate ``prefill``
+    dispatch on the overlapped backend;
+  * the gated ctrl channel actually gates: the measured ctrl-active rate
+    (``calls["ctrl_active_ticks"] / calls["pipeline_tick"]``) is < 1;
   * a tick-level pruning-propagation scenario on the real S-stage mesh: a
     slot killed with layers still in flight writes nothing further into
     its stage tree caches (rows bit-untouched), its stale exits come out
     dead, and the other slot's rows/exits are bit-identical to a run
     without the kill.
 
-Prints one JSON summary line; exits non-zero on any mismatch.  Run in its
-own process: the forced host-device count must not leak into other jax
-users (tests spawn it via subprocess, CI runs it as a dedicated leg).
+Prints one JSON summary line plus one machine-greppable status line —
+``SHARDED_CHECK ok stages=8 ...`` on success, ``SHARDED_CHECK fail ...``
+(and a non-zero exit code, no traceback spelunking needed) on any
+mismatch.  Run in its own process: the forced host-device count must not
+leak into other jax users (tests spawn it via subprocess, CI runs it as a
+dedicated leg and greps the status line).
 """
 from __future__ import annotations
 
@@ -226,6 +234,7 @@ def main(argv=None):
             ex = make(tgt, drf)
             eng = SpecPipeDBEngine(tgt, drf, pcfg, max_len=max_len,
                                    max_slots=args.slots, executor=ex)
+            before = {m: dict(m.calls) for m in (tgt, drf)}
             for r in reqs:
                 eng.submit(r)
             res = eng.run()
@@ -237,18 +246,6 @@ def main(argv=None):
             assert max(disp) == 1, f"{name}: >1 dispatch in one timestep"
             assert ex.calls["verify_rows"] == sum(disp), \
                 f"{name}: one batched dispatch per pending timestep"
-            if name == "sharded":
-                assert ex.calls["pipeline_verify"] == sum(disp), \
-                    "one batched sharded flush per pending timestep"
-            if name == "sharded_overlapped":
-                # the steady-state pin: ONE ring tick per executed global
-                # timestep, entries or not
-                assert ex.calls["pipeline_tick"] == eng.stats.timesteps, \
-                    "overlapped: one ring tick per executed timestep"
-                assert eng.stats.tick_dispatches == \
-                    [1] * eng.stats.timesteps
-                assert ex.calls["drain_tick"] == 0, \
-                    "per-timestep ticks must resolve every live flight"
             part[name] = {
                 "timesteps": eng.stats.timesteps,
                 "tokens_per_timestep": round(eng.stats.tokens_per_timestep,
@@ -256,6 +253,31 @@ def main(argv=None):
                 "peak_occupancy": eng.stats.peak_occupancy,
                 "dispatches": dict(ex.calls),
             }
+            if name == "sharded":
+                assert ex.calls["pipeline_verify"] == sum(disp), \
+                    "one batched sharded flush per pending timestep"
+            if name == "sharded_overlapped":
+                # the steady-state pin: ONE ring tick per executed global
+                # timestep — admission timesteps included (prefill rides
+                # the tick's prefill lane, never its own dispatch)
+                assert ex.calls["pipeline_tick"] == eng.stats.timesteps, \
+                    "overlapped: one ring tick per executed timestep"
+                assert eng.stats.tick_dispatches == \
+                    [1] * eng.stats.timesteps
+                assert ex.calls["drain_tick"] == 0, \
+                    "per-timestep ticks must resolve every live flight"
+                assert ex.calls["prefill_in_ring"] == len(reqs), \
+                    "every admission must prefill in-ring"
+                for m in (tgt, drf):
+                    assert m.calls["prefill"] == \
+                        before[m].get("prefill", 0), \
+                        "overlapped: no separate ModelBundle prefill " \
+                        "dispatch"
+                rate = ex.calls["ctrl_active_ticks"] / \
+                    max(ex.calls["pipeline_tick"], 1)
+                assert rate < 1.0, \
+                    "gated ctrl must close on some ticks"
+                part[name]["ctrl_active_rate"] = round(rate, 4)
         return part
 
     summary = {"stages": args.stages, "slots": args.slots,
@@ -290,22 +312,47 @@ def main(argv=None):
         assert ex.calls["kill"] >= 2, "both retires must kill in-ring"
         return {"bit_identical": True, "kills": int(ex.calls["kill"])}
 
-    summary["independent_draft"] = check_workload(target, draft,
-                                                  mk_reqs(3, 7))
-    if args.overlap:
-        # self-draft: perfect acceptance — every commit is a hit, so the
-        # prune index_maps ride the ring with n_stages-1 layers in flight
-        summary["self_draft"] = check_workload(target, target,
-                                               mk_reqs(8, 14))
-        summary["slot_recycle"] = check_recycle()
-        assert summary["self_draft"]["acceptance_mean"] > 0.99
-        assert summary["self_draft"]["sharded_overlapped"][
-            "dispatches"].get("remap_rows", 0) > 0, \
-            "self-draft workload must exercise in-ring prune propagation"
-        summary["pruning_propagation"] = \
-            _pruning_propagation_scenario(args.stages)
+    try:
+        summary["independent_draft"] = check_workload(target, draft,
+                                                      mk_reqs(3, 7))
+        if args.overlap:
+            # self-draft: perfect acceptance — every commit is a hit, so
+            # the prune index_maps ride the ring with n_stages-1 layers
+            # in flight
+            summary["self_draft"] = check_workload(target, target,
+                                                   mk_reqs(8, 14))
+            summary["slot_recycle"] = check_recycle()
+            assert summary["self_draft"]["acceptance_mean"] > 0.99
+            assert summary["self_draft"]["sharded_overlapped"][
+                "dispatches"].get("remap_rows", 0) > 0, \
+                "self-draft workload must exercise in-ring prune " \
+                "propagation"
+            summary["pruning_propagation"] = \
+                _pruning_propagation_scenario(args.stages)
+    except Exception as e:  # single loud line, non-zero exit — the CI
+        # legs grep this instead of fishing assertion tracebacks
+        import traceback
+        traceback.print_exc(file=sys.stderr)
+        reason = str(e).splitlines()[0][:200] if str(e) else ""
+        print(f"SHARDED_CHECK fail stages={args.stages} "
+              f"slots={args.slots} requests={args.requests} "
+              f"overlap={int(args.overlap)} "
+              f"error={type(e).__name__}: {reason}")
+        return 1
     summary["bit_identical"] = True
     print(json.dumps(summary))
+    parts = [f"SHARDED_CHECK ok stages={args.stages}",
+             f"slots={args.slots}", f"requests={args.requests}",
+             f"overlap={int(args.overlap)}", "bit_identical=1"]
+    if args.overlap:
+        over = summary["independent_draft"]["sharded_overlapped"]
+        parts += [
+            f"ticks_per_timestep="
+            f"{over['dispatches']['pipeline_tick'] / over['timesteps']:.2f}",
+            f"ctrl_active_rate={over['ctrl_active_rate']:.4f}",
+            f"prefill_in_ring={over['dispatches']['prefill_in_ring']}",
+        ]
+    print(" ".join(parts))
     return 0
 
 

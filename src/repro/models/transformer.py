@@ -625,6 +625,26 @@ def update_cache_rows(cache, rows, start: int = 0):
                                             is_leaf=lambda x: x is None)
 
 
+def where_cache_rows(on, new, old):
+    """Per-slot select over slot-stacked cache pytrees: slot ``b`` of
+    every buffer takes ``new`` where ``on[b]`` and keeps ``old``
+    otherwise (``None`` leaves pass through).  Used by batched prefill
+    paths that compute all slot rows but must only land the
+    participating ones (e.g. the overlapped executor's in-tick draft
+    prefill)."""
+    on = jnp.asarray(on)
+
+    def f(path, o, n):
+        if o is None:
+            return None
+        shape = [1] * o.ndim
+        shape[_slot_axis(path)] = on.shape[0]
+        return jnp.where(on.reshape(shape), n.astype(o.dtype), o)
+
+    return jax.tree_util.tree_map_with_path(f, old, new,
+                                            is_leaf=lambda x: x is None)
+
+
 def commit_tree_node(cfg: ModelConfig, cache, tree_caches, node_idx,
                      model_len):
     """Two-level cache sync (paper §3.4.3): move one verified tree node's KV

@@ -1,14 +1,16 @@
 from repro.serving.dynbatch import (DBStats, SpecPipeDBEngine,
                                     generate_with_executor)
 from repro.serving.engine import Request, Result, ServingEngine
-from repro.serving.executor import (DeferredLogits, LocalFusedExecutor,
+from repro.serving.executor import (DeferredLogits, DeferredPrefill,
+                                    LocalFusedExecutor,
                                     OverlappedShardedExecutor,
                                     PipelineExecutor,
                                     ShardedPipelineExecutor)
 from repro.serving.scheduler import (DynamicBatchScheduler, KVArena,
                                      SchedulerStats, SlotPool)
 
-__all__ = ["DBStats", "DeferredLogits", "DynamicBatchScheduler", "KVArena",
+__all__ = ["DBStats", "DeferredLogits", "DeferredPrefill",
+           "DynamicBatchScheduler", "KVArena",
            "LocalFusedExecutor", "OverlappedShardedExecutor",
            "PipelineExecutor", "Request", "Result", "SchedulerStats",
            "ServingEngine", "ShardedPipelineExecutor", "SlotPool",

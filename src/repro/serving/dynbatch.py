@@ -42,7 +42,13 @@ identical to running it alone.
 Scheduling per global timestep:
   1. refill — admit arrived requests (priority/aging order, FIFO when
      priorities tie) onto free KV slots, running their prefill
-     (join-on-prefill) through the executor into their arena rows;
+     (join-on-prefill) through the executor into their arena rows.  On
+     the overlapped backend the prefill rides the ring instead
+     (``executor.begin_prefill``): the prompt enters the next tick's
+     prefill lane — zero extra dispatches, the ring never idles — and
+     the request parks as *joining* until the lane exits
+     ``n_stages - 1`` ticks later, when its ``DecodeState`` is seeded
+     from the resolved ``DeferredPrefill`` logits;
   2. advance — gather every active request's entry, run the fused verify,
      then expansion and (batched-commit) exit per slot;
   3. retire — requests that hit eos or their token budget release their
@@ -78,6 +84,20 @@ class _Active:
     state: DecodeState
     t0: float
     emitted: int = 0          # tokens already streamed via on_token
+
+
+@dataclasses.dataclass
+class _Joining:
+    """A request whose admission prefill is riding the ring (overlapped
+    backend with prefill-in-ring): the slot is allocated and the padded
+    prompt advances one stage per tick inside the normal tick dispatch;
+    once the ``DeferredPrefill`` future resolves (``n_stages - 1`` ticks
+    after entry) the request's ``DecodeState`` is seeded from the
+    resolved logits and it joins ``active``."""
+    req: object
+    key: jax.Array
+    handle: object            # DeferredPrefill
+    t0: float
 
 
 @dataclasses.dataclass
@@ -159,8 +179,11 @@ class SpecPipeDBEngine:
 
     # ------------------------------------------------------------------
     def _timestep_guard(self) -> int:
+        # prefill-in-ring adds an n_stages pipeline-fill delay between a
+        # request's admission and its first entry — budget it per request
         per_req = sum(
             r.max_new_tokens * (self.pcfg.n_stages + 2) + 17
+            + self.pcfg.n_stages + 1
             for r in self.sched.queue)
         arrivals = max((getattr(r, "arrival_t", 0)
                         for r in self.sched.queue), default=0)
@@ -395,22 +418,51 @@ class SpecPipeDBEngine:
         self.stats = DBStats()  # per-run aggregates (scheduler stats persist)
         results: Dict[int, Result] = {}
         active: Dict[int, _Active] = {}
+        joining: Dict[int, _Joining] = {}
+        ring_prefill = self.overlapped and \
+            getattr(self.executor, "prefill_cap", 0) > 0
         guard = self._timestep_guard()
         now = 0
 
-        while self.sched.pending or active:
-            if not active:
+        while self.sched.pending or active or joining:
+            if not active and not joining:
                 # pipeline drained; fast-forward to the next arrival
                 nxt = self.sched.next_arrival()
                 if nxt is not None and nxt > now:
                     now = nxt
 
-            # 1. refill: join-on-prefill for arrived requests — prefill
-            # runs through the executor straight into the slot's arena
-            # rows (looped mode: the request keeps its row views instead)
+            # 0. join: requests whose in-ring admission prefill resolved
+            # (its last tick exited the prompt's final hidden state) seed
+            # their DecodeState from the resolved logits and go active —
+            # the same init_state path, with the prefill already done
+            for slot in [s for s in sorted(joining)
+                         if joining[s].handle.ready]:
+                j = joining.pop(slot)
+                st = self.inner.init_state(
+                    j.req.prompt, j.req.max_new_tokens, key=j.key,
+                    eos=self.eos_token,
+                    sampling=getattr(j.req, "sampling", None),
+                    prefill_fn=lambda _p, h=j.handle: h.resolve())
+                self.trees.adopt_row(slot, st.tree)
+                st.tree = None
+                active[slot] = _Active(j.req, st, j.t0)
+
+            # 1. refill: join-on-prefill for arrived requests.  On the
+            # overlapped backend the prefill enters the ring inside the
+            # NEXT tick dispatch (prefill-in-ring: no separate dispatch,
+            # no idle timestep) and the request parks in ``joining``
+            # until its prompt exits the pipeline; other backends (and
+            # prompts longer than the ring's prefill lane) prefill
+            # through the executor immediately
             for req, slot in self.sched.admit(now):
                 rkey = jax.random.fold_in(base_key, req.uid)
                 sampling = getattr(req, "sampling", None)
+                if ring_prefill:
+                    h = self.executor.begin_prefill(slot, req.prompt)
+                    if h is not None:
+                        joining[slot] = _Joining(req, rkey, h,
+                                                 time.perf_counter())
+                        continue
                 if self.fused:
                     st = self.inner.init_state(
                         req.prompt, req.max_new_tokens, key=rkey,

@@ -416,17 +416,26 @@ class ShardedPipelineExecutor(PipelineExecutor):
         self.calls["remap_rows"] += 1
 
 
-def _overlap_tick_impl(params, stage_p, stage_valid, model_kv, tree_kv,
-                       ring, node_tokens, node_positions, tree_mask,
-                       write_idx, model_len, entry_on, entry_version,
-                       ctrl_commit, ctrl_len, ctrl_imap, ctrl_clear, kill,
-                       *, cfg, tick):
+def _overlap_tick_impl(params, d_params, stage_p, stage_valid, model_kv,
+                       tree_kv, ring, d_cache, node_tokens, node_positions,
+                       tree_mask, write_idx, model_len, entry_on,
+                       entry_version, p_tokens, p_len, p_on, ctrl_commit,
+                       ctrl_len, ctrl_imap, ctrl_clear, ctrl_active, kill,
+                       *, cfg, d_cfg, tick, prefill_cap):
     """ONE steady-state ring tick: ingest the batched entry layer into
-    stage 0, apply the pruning-propagation ctrl at whichever stage it
-    reached this tick, advance every in-flight layer one stage, and
-    unembed the exiting activations into verify logits.  ``params``
-    carries only the embed/final-norm/unembed leaves (the layer stack
-    already rides in ``stage_p``)."""
+    stage 0, apply the (gated) pruning-propagation ctrl at whichever
+    stage it reached this tick, advance every in-flight layer — and the
+    prefill lane — one stage, and unembed the exiting activations into
+    verify logits.  ``params`` carries only the embed/final-norm/unembed
+    leaves (the layer stack already rides in ``stage_p``).
+
+    Admission prefill rides the SAME dispatch: the target's prompt lane
+    enters the ring (``p_tokens``/``p_len``/``p_on``) and the replicated
+    draft's prefill runs here beside the sharded tick (gated on "any
+    prefill entering"), so admitting a request costs zero extra
+    dispatches.  The whole pytree state (``model_kv``/``tree_kv``/
+    ``ring``/``d_cache``) is donated by the caller so XLA updates the
+    buffers in place."""
     entry = {
         "act": embed(params["embed"], node_tokens),
         "positions": node_positions,
@@ -437,12 +446,41 @@ def _overlap_tick_impl(params, stage_p, stage_valid, model_kv, tree_kv,
         "version": entry_version,
     }
     ctrl = {"commit": ctrl_commit, "commit_len": ctrl_len,
-            "index_map": ctrl_imap, "clear": ctrl_clear}
+            "index_map": ctrl_imap, "clear": ctrl_clear,
+            "active": ctrl_active}
+    pentry = None
+    if prefill_cap:
+        pentry = {"act": embed(params["embed"], p_tokens), "len": p_len,
+                  "on": p_on}
     model_kv, tree_kv, ring, exit_out = tick(
-        stage_p, stage_valid, model_kv, tree_kv, ring, entry, kill, ctrl)
+        stage_p, stage_valid, model_kv, tree_kv, ring, entry, kill, ctrl,
+        pentry)
     logits = tf._logits(params, cfg, exit_out["act"])
-    return (model_kv, tree_kv, ring, logits, exit_out["valid"],
-            exit_out["version"])
+    p_logits = p_valid = None
+    if prefill_cap:
+        # unembed the prefill exit only on the (rare) ticks one actually
+        # exits — p_last is garbage otherwise and the [B,d]x[d,V] matmul
+        # would be pure steady-state waste
+        p_valid = exit_out["p_valid"]
+        p_logits = jax.lax.cond(
+            jnp.any(p_valid),
+            lambda x: tf._logits(params, cfg, x),
+            lambda x: jnp.zeros(
+                (x.shape[0], cfg.vocab_size), x.dtype),
+            exit_out["p_last"])
+        # the replicated draft prefills the entering prompts inside this
+        # same compiled dispatch (its caches are slot-stacked, so one
+        # batched full-mode pass covers every joining slot; rows beyond
+        # the prompt length are never attended, and non-entering slots
+        # keep their buffers bit-unchanged)
+        d_cache = jax.lax.cond(
+            jnp.any(p_on),
+            lambda dc: tf.where_cache_rows(
+                p_on, tf.prefill(d_params, d_cfg, p_tokens, dc)[1], dc),
+            lambda dc: dc,
+            d_cache)
+    return (model_kv, tree_kv, ring, d_cache, logits, exit_out["valid"],
+            exit_out["version"], p_logits, p_valid)
 
 
 class DeferredLogits:
@@ -471,28 +509,83 @@ class DeferredLogits:
         return self._value
 
 
+class DeferredPrefill:
+    """Future for one slot's admission-prefill logits ([1, V]).
+
+    Issued by ``OverlappedShardedExecutor.begin_prefill`` when the
+    request's prompt enters the ring's prefill lane; resolved by the
+    tick of the lane's exit timestep (``entry_t + n_stages - 1``), at
+    which point the engine finishes the request's ``init_state`` with
+    the resolved last-position logits.  A ``kill`` of the slot while the
+    prompt is still riding marks the future dead — it will never
+    resolve and must not be consumed."""
+
+    __slots__ = ("slot", "_value", "dead")
+
+    def __init__(self, slot: int):
+        self.slot, self._value, self.dead = slot, None, False
+
+    @property
+    def ready(self) -> bool:
+        return self._value is not None
+
+    def resolve(self):
+        if self.dead:
+            raise RuntimeError(
+                f"stale prefill: slot {self.slot} was killed while its "
+                f"prompt was in flight")
+        if self._value is None:
+            raise RuntimeError(
+                f"slot {self.slot} prefill consumed before its exit tick")
+        return self._value
+
+
 class OverlappedShardedExecutor(ShardedPipelineExecutor):
     """Steady-state overlapped schedule on the sharded deployment: ONE
-    ring tick per global timestep with the ring always full.
+    ring tick per global timestep with the ring always full — and kept
+    as cheap as the hardware allows (gated ctrl, donated buffers,
+    prefill-in-ring).
 
     Differences from the flush parent, all at the seam:
 
       * ``tick_rows`` (and ``verify_rows``) dispatch ONE
         ``make_pipedec_tick`` per timestep on a *persistent* ring and
         return ``DeferredLogits`` futures — the target's verify logits
-        for an entering layer materialise only at its exit tick.
+        for an entering layer materialise only at its exit tick.  The
+        ring/stage-cache/draft-cache pytrees are *donated* through the
+        jitted tick (``donate=True``) so XLA updates them in place
+        instead of copying them in and out every tick.
       * ``commit_rows`` / ``remap_row(s)`` queue the target-side cache
         mutation as the next tick's ctrl message (it must trail the
         in-flight layers stage by stage — pruning propagation); the
         replicated draft applies immediately, exactly as on the flush
-        backend.
+        backend.  The ctrl channel is *gated* (``gate_ctrl=True``): the
+        executor raises the per-tick ``active`` predicate only when exit
+        ctrl was actually queued, so the all-identity message that rides
+        most ticks costs each stage a predicate check instead of a full
+        commit-scatter + prune-gather (``calls["ctrl_active_ticks"]`` /
+        ``calls["pipeline_tick"]`` is the measured ctrl-active rate).
+      * ``begin_prefill(slot, prompt)`` (``prefill_cap > 0``) overlaps
+        admission prefill with the ring: the padded prompt enters the
+        tick's prefill lane as a special layer kind (version-bumped
+        slot, dead tree exit) and BOTH models' prefills ride the same
+        compiled dispatch — the target stage by stage around the ring,
+        the replicated draft beside it — so admission issues no separate
+        prefill dispatch and never idles the ring.  Returns a
+        ``DeferredPrefill`` future resolved at the lane's exit tick, or
+        ``None`` when the prompt exceeds ``prefill_cap`` (the caller
+        falls back to the parent's separate-dispatch ``prefill``).
       * ``kill(slot)`` invalidates the slot's in-flight layers in-ring
         (miss / retire) and bumps its tree version; ``drain()`` advances
-        the ring with dead entries until every outstanding future has
-        resolved (shutdown/test helper — the per-timestep ticks already
-        resolve every live flight).
+        the ring with dead entries until every outstanding future
+        (verify and prefill) has resolved (shutdown/test helper — the
+        per-timestep ticks already resolve every live flight).
 
-    The engine must tick every executed timestep (entries or not) and its
+    All three cost levers preserve bit-identity: gating only skips
+    messages that are the identity, donation only changes buffer
+    aliasing, and the in-ring prefill computes the same per-layer math as
+    the separate dispatch (pad rows are causally invisible).  The engine
+    must tick every executed timestep (entries or not) and its
     ``PipeDecConfig.n_stages`` must equal the mesh's stage count — the
     ring IS the flight bookkeeping, so the fill latencies must agree.
     """
@@ -502,22 +595,46 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
     def __init__(self, target: ModelBundle, draft: ModelBundle, *,
                  slots: int, max_len: int, tree_capacity: int,
                  capacity: int, n_stages: Optional[int] = None, mesh=None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, gate_ctrl: bool = True,
+                 donate: bool = True, prefill_cap: int = 64):
         super().__init__(target, draft, slots=slots, max_len=max_len,
                          tree_capacity=tree_capacity, capacity=capacity,
                          n_stages=n_stages, mesh=mesh, dtype=dtype)
+        self.gate_ctrl, self.donate = bool(gate_ctrl), bool(donate)
+        # the draft is attention-family by construction (it tree-verifies
+        # through the same per-row API), so its padded in-tick prefill is
+        # causally invisible beyond each prompt's length — a recurrent
+        # draft could not ride here (pad tokens would enter its state),
+        # but such a draft cannot tree-verify at all
+        self.prefill_cap = min(int(prefill_cap), max_len)
+        if any(b.prefix_embeds is not None or b.enc_out is not None
+               or b.window_override >= 0 for b in (target, draft)):
+            # the in-ring prefill embeds raw prompt tokens only —
+            # ModelBundle prefill semantics (prefix_embeds, enc_out,
+            # window_override) must go through the parent's
+            # separate-dispatch prefill, which bakes them in
+            self.prefill_cap = 0
         self._ring = pl.init_ring(target.cfg, self.plcfg, dtype=self.dtype,
-                                  batch=slots, ctrl=True)
-        tick = pl.make_pipedec_tick(target.cfg, self.plcfg, self.mesh)
-        self._tick = jax.jit(functools.partial(
-            _overlap_tick_impl, cfg=target.cfg, tick=tick))
+                                  batch=slots, ctrl=True,
+                                  prefill_cap=self.prefill_cap)
+        tick = pl.make_pipedec_tick(target.cfg, self.plcfg, self.mesh,
+                                    prefill_cap=self.prefill_cap)
+        impl = functools.partial(
+            _overlap_tick_impl, cfg=target.cfg, d_cfg=draft.cfg, tick=tick,
+            prefill_cap=self.prefill_cap)
+        # donate the persistent state pytrees (model_kv, tree_kv, ring,
+        # d_cache) so XLA aliases them through the tick in place
+        self._tick = jax.jit(
+            impl, donate_argnums=(4, 5, 6, 7) if self.donate else ())
         # per-slot tree version counters + outstanding-flight futures
         self._versions = np.zeros((slots,), np.int32)
         self._handles = [collections.deque() for _ in range(slots)]
+        self._p_handles: dict = {}
         self._identity_imap = np.tile(
             np.arange(capacity, dtype=np.int32), (slots, 1))
         self._kill_mask = np.zeros((slots,), bool)
         self._reset_ctrl()
+        self._reset_prefill()
         w = self.plcfg.width
         tcap = capacity + w
         self.dead_entry = (
@@ -533,22 +650,63 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
         self._ctrl_len = np.zeros((self.slots,), np.int32)
         self._ctrl_imap = self._identity_imap.copy()
         self._ctrl_clear = np.zeros((self.slots,), bool)
+        self._ctrl_active = False
+
+    def _reset_prefill(self) -> None:
+        cap = max(self.prefill_cap, 1)
+        self._p_tokens = np.zeros((self.slots, cap), np.int32)
+        self._p_len = np.zeros((self.slots,), np.int32)
+        self._p_on = np.zeros((self.slots,), bool)
+
+    # -- prefill-in-ring ------------------------------------------------
+    def begin_prefill(self, slot: int, prompt):
+        """Queue ``slot``'s admission prefill into the NEXT ring tick
+        (the prompt rides the prefill lane; both models' prefills run
+        inside that tick's single dispatch).  Returns a
+        ``DeferredPrefill`` future resolved at the lane's exit tick, or
+        ``None`` when the prompt does not fit ``prefill_cap`` (caller
+        falls back to the separate-dispatch ``prefill``)."""
+        pr = np.asarray(prompt).reshape(-1).astype(np.int32)
+        if not self.prefill_cap or len(pr) > self.prefill_cap:
+            return None
+        if self._handles[slot] or slot in self._p_handles:
+            raise RuntimeError(
+                f"slot {slot} still has outstanding futures at admission")
+        self._versions[slot] += 1        # version-bumped slot
+        self._p_tokens[slot] = 0
+        self._p_tokens[slot, :len(pr)] = pr
+        self._p_len[slot] = len(pr)
+        self._p_on[slot] = True
+        h = DeferredPrefill(slot)
+        self._p_handles[slot] = h
+        self.calls["prefill_in_ring"] += 1
+        return h
 
     # -- the per-timestep ring tick -------------------------------------
     def _dispatch_tick(self, tokens, positions, masks, model_len,
                        write_idx, row_on, counter: str) -> None:
-        """Run one compiled ring tick (consuming any queued ctrl + kill)
-        and resolve the futures of every layer that exited."""
-        (self.model_kv, self.tree_kv, self._ring, exit_logits, exit_valid,
-         exit_version) = self._tick(
-            self._head_params, self.stage_p, self.stage_valid,
-            self.model_kv, self.tree_kv, self._ring, tokens, positions,
-            masks, write_idx, model_len, jnp.asarray(np.asarray(row_on)),
-            jnp.asarray(self._versions),
+        """Run one compiled ring tick (consuming any queued ctrl, kill
+        and prefill entries) and resolve the futures of every layer —
+        and every prefill — that exited."""
+        ctrl_active = self._ctrl_active or not self.gate_ctrl
+        (self.model_kv, self.tree_kv, self._ring, self._d_cache,
+         exit_logits, exit_valid, exit_version, p_logits,
+         p_valid) = self._tick(
+            self._head_params, self.draft.params, self.stage_p,
+            self.stage_valid, self.model_kv, self.tree_kv, self._ring,
+            self._d_cache, tokens, positions, masks, write_idx, model_len,
+            jnp.asarray(np.asarray(row_on)), jnp.asarray(self._versions),
+            jnp.asarray(self._p_tokens), jnp.asarray(self._p_len),
+            jnp.asarray(self._p_on),
             jnp.asarray(self._ctrl_commit), jnp.asarray(self._ctrl_len),
             jnp.asarray(self._ctrl_imap), jnp.asarray(self._ctrl_clear),
-            jnp.asarray(self._kill_mask))
+            jnp.asarray(ctrl_active), jnp.asarray(self._kill_mask))
+        if ctrl_active and counter == "pipeline_tick":
+            # drain ticks are counted separately — the ctrl-active rate
+            # (ctrl_active_ticks / pipeline_tick) prices steady state only
+            self.calls["ctrl_active_ticks"] += 1
         self._reset_ctrl()
+        self._reset_prefill()
         self._kill_mask[:] = False
         self.calls[counter] += 1
 
@@ -565,6 +723,15 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
                     f"entered at version {h.version}, exited carrying "
                     f"{int(evers[slot])}")
             h._value = exit_logits[slot]
+
+        if self.prefill_cap:
+            for slot in np.nonzero(np.asarray(p_valid))[0]:
+                h = self._p_handles.pop(int(slot), None)
+                if h is None:
+                    raise RuntimeError(
+                        f"prefill exit for slot {slot} with no "
+                        f"outstanding prefill future")
+                h._value = p_logits[int(slot):int(slot) + 1]
 
     def tick_rows(self, tokens, positions, masks, model_len, write_idx,
                   row_on):
@@ -611,6 +778,8 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
         ml = np.asarray(model_len).astype(np.int32)
         self._ctrl_commit |= mask
         self._ctrl_len = np.where(mask, ml, self._ctrl_len)
+        if mask.any():
+            self._ctrl_active = True
         node0 = jnp.zeros((self.slots,), jnp.int32)
         self._d_cache = self.draft.commit_rows(
             self._d_cache, self._d_tree, node0, model_len, commit_mask)
@@ -618,6 +787,7 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
 
     def remap_row(self, slot: int, index_map) -> None:
         self._ctrl_imap[slot] = np.asarray(index_map, np.int32)
+        self._ctrl_active = True
         self._d_tree = self._draft_remap_row(slot, index_map)
 
     def remap_rows(self, index_maps, row_mask) -> None:
@@ -626,6 +796,7 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
             return
         imaps = np.asarray(index_maps, np.int32)
         self._ctrl_imap = np.where(rm[:, None], imaps, self._ctrl_imap)
+        self._ctrl_active = True
         self._d_tree = _remap_rows_jit(self._d_tree,
                                        jnp.asarray(imaps, jnp.int32))
         self.calls["remap_rows"] += 1
@@ -648,6 +819,16 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
         for h in self._handles[slot]:
             h.dead = True
         self._handles[slot].clear()
+        # a prefill still riding (or queued) for the slot dies with it:
+        # the tick masks the lane via ``kill``, so its future would
+        # otherwise never resolve and drain() could never finish
+        ph = self._p_handles.pop(slot, None)
+        if ph is not None:
+            ph.dead = True
+        if self.prefill_cap:
+            self._p_on[slot] = False
+            self._p_len[slot] = 0
+            self._p_tokens[slot] = 0
         if drop_ctrl:
             self._ctrl_commit[slot] = False
             self._ctrl_len[slot] = 0
@@ -657,14 +838,14 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
 
     def drain(self) -> int:
         """Advance the ring with dead entries until every outstanding
-        future has resolved (at most ``n_stages - 1`` ticks).  The
-        engine's per-timestep ticks already resolve every live flight, so
-        this is a shutdown/test helper, counted separately from the
-        steady-state dispatches."""
+        future — verify AND prefill — has resolved (at most
+        ``n_stages - 1`` ticks).  The engine's per-timestep ticks already
+        resolve every live flight, so this is a shutdown/test helper,
+        counted separately from the steady-state dispatches."""
         tokens, positions, masks, model_len, write_idx = self.dead_entry
         row_on = np.zeros((self.slots,), bool)
         n = 0
-        while any(self._handles):
+        while any(self._handles) or self._p_handles:
             assert n < self.n_stages, "ring failed to drain"
             self._dispatch_tick(tokens, positions, masks, model_len,
                                 write_idx, row_on, "drain_tick")

@@ -207,14 +207,16 @@ def test_tick_ctrl_matches_central_commit_and_remap(tiny_dense):
     no_ctrl = {"commit": jnp.zeros((1,), bool),
                "commit_len": jnp.zeros((1,), jnp.int32),
                "index_map": identity,
-               "clear": jnp.zeros((1,), bool)}
+               "clear": jnp.zeros((1,), bool),
+               "active": jnp.ones((), bool)}
     kill0 = jnp.zeros((1,), bool)
     entry = _entry(params, tokens, positions, mask)
     dead = dict(entry, valid=jnp.zeros((1,), bool))
 
     with mesh:
         # tick 1 writes the root layer's KV into tree row 0 (identity
-        # ctrl riding along must be a bit-exact no-op)
+        # ctrl riding along — with the gate OPEN — must be a bit-exact
+        # no-op)
         model_kv0 = [jax.tree.map(lambda t: t.copy(), c) for c in model_kv]
         model_kv, tree_kv, ring, _ = jax.jit(tick)(
             sp, valid, model_kv, tree_kv, ring, entry, kill0, no_ctrl)
@@ -227,7 +229,8 @@ def test_tick_ctrl_matches_central_commit_and_remap(tiny_dense):
         ctrl = {"commit": jnp.ones((1,), bool),
                 "commit_len": jnp.full((1,), 4, jnp.int32),
                 "index_map": imap[None],
-                "clear": jnp.zeros((1,), bool)}
+                "clear": jnp.zeros((1,), bool),
+                "active": jnp.ones((), bool)}
         got_kv, got_tkv, _, _ = jax.jit(tick)(
             sp, valid, model_kv, tree_kv, ring, dead, kill0, ctrl)
 
@@ -241,6 +244,108 @@ def test_tick_ctrl_matches_central_commit_and_remap(tiny_dense):
         np.asarray(a), np.asarray(b)), got_kv, want_kv)
     jax.tree.map(lambda a, b: np.testing.assert_array_equal(
         np.asarray(a), np.asarray(b)), got_tkv, want_tkv)
+
+
+def test_tick_ctrl_gate_skips_inactive_message(tiny_dense):
+    """The gated ctrl channel: with ``active=False`` the stage skips the
+    commit-scatter + prune-gather entirely — even a (mis-addressed)
+    non-identity message leaves every cache bit-untouched, proving the
+    ``lax.cond`` short-circuits rather than applying an identity op."""
+    cfg = tiny_dense
+    params, mesh, pcfg, sp, valid = _setup(cfg)
+    _, tree_kv = pl.init_stage_caches(cfg, pcfg)
+    tick = pl.make_pipedec_tick(cfg, pcfg, mesh)
+    cache, tokens, positions, mask, _ = _reference(cfg, params, pcfg)
+    model_kv = _stage_model_kv(cache)
+    ring = pl.init_ring(cfg, pcfg, ctrl=True)
+    cap = pcfg.tree_capacity
+    kill0 = jnp.zeros((1,), bool)
+    entry = _entry(params, tokens, positions, mask)
+    dead = dict(entry, valid=jnp.zeros((1,), bool))
+    no_ctrl = {"commit": jnp.zeros((1,), bool),
+               "commit_len": jnp.zeros((1,), jnp.int32),
+               "index_map": jnp.arange(cap, dtype=jnp.int32)[None],
+               "clear": jnp.zeros((1,), bool),
+               "active": jnp.ones((), bool)}
+    with mesh:
+        model_kv, tree_kv, ring, _ = jax.jit(tick)(
+            sp, valid, model_kv, tree_kv, ring, entry, kill0, no_ctrl)
+        # a REAL commit+prune message, but with the gate closed
+        imap = jnp.full((cap,), -1, jnp.int32).at[0].set(0)
+        gated = {"commit": jnp.ones((1,), bool),
+                 "commit_len": jnp.full((1,), 4, jnp.int32),
+                 "index_map": imap[None],
+                 "clear": jnp.zeros((1,), bool),
+                 "active": jnp.zeros((), bool)}
+        got_kv, got_tkv, _, _ = jax.jit(tick)(
+            sp, valid, model_kv, tree_kv, ring, dead, kill0, gated)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), got_kv, model_kv)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), got_tkv, tree_kv)
+
+
+def test_tick_prefill_lane_matches_prefill(tiny_dense):
+    """Prefill-in-ring: a prompt entering the tick's prefill lane exits
+    with last-position logits and stage model-cache rows BIT-IDENTICAL
+    to ``tf.prefill``, while off slots stay untouched and the tree exit
+    stays dead for the joining slot."""
+    cfg = tiny_dense
+    params, mesh, pcfg, sp, valid = _setup(cfg)
+    pcap = 8
+    model_kv, tree_kv = pl.init_stage_caches(cfg, pcfg, batch=2)
+    ring = pl.init_ring(cfg, pcfg, batch=2, ctrl=True, prefill_cap=pcap)
+    tick = pl.make_pipedec_tick(cfg, pcfg, mesh, prefill_cap=pcap)
+
+    prompt = np.asarray([5, 3, 2, 7, 11], np.int32)
+    ptok = np.zeros((2, pcap), np.int32)
+    ptok[0, :len(prompt)] = prompt
+    pentry = {"act": embed(params["embed"], jnp.asarray(ptok)),
+              "len": jnp.asarray([len(prompt), 0], jnp.int32),
+              "on": jnp.asarray([True, False])}
+    w = pcfg.width
+    dead_entry = {
+        "act": jnp.zeros((2, w, cfg.d_model)),
+        "positions": jnp.zeros((2, w), jnp.int32),
+        "mask": jnp.zeros((2, w, pcfg.tree_capacity + w), bool),
+        "write_idx": jnp.zeros((2,), jnp.int32),
+        "model_len": jnp.zeros((2,), jnp.int32),
+        "valid": jnp.zeros((2,), bool),
+        "version": jnp.zeros((2,), jnp.int32),
+    }
+    cap = pcfg.tree_capacity
+    no_ctrl = {"commit": jnp.zeros((2,), bool),
+               "commit_len": jnp.zeros((2,), jnp.int32),
+               "index_map": jnp.broadcast_to(
+                   jnp.arange(cap, dtype=jnp.int32), (2, cap)),
+               "clear": jnp.zeros((2,), bool),
+               "active": jnp.zeros((), bool)}
+    kill0 = jnp.zeros((2,), bool)
+    with mesh:
+        model_kv, tree_kv, ring, ex = jax.jit(tick)(
+            sp, valid, model_kv, tree_kv, ring, dead_entry, kill0,
+            no_ctrl, pentry)
+
+    assert bool(ex["p_valid"][0]) and not bool(ex["p_valid"][1])
+    assert not bool(ex["valid"][0]), "tree exit stays dead while joining"
+    got = tf._logits(params, cfg, ex["p_last"][0:1])
+    ref_cache = tf.init_cache(cfg, 1, 32)
+    ref_logits, ref_cache = tf.prefill(params, cfg,
+                                       jnp.asarray(prompt)[None], ref_cache)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref_logits))
+    # stage model-cache rows [0, len) of the joining slot == the scan
+    # prefill's rows; the off slot's rows are bit-untouched (zeros)
+    stacked = ref_cache["stack"][0]
+    reps = len(jax.tree.leaves(stacked)[0])
+    for l in range(reps):
+        want = jax.tree.map(lambda t, l=l: np.asarray(t[l][0, :len(prompt)]),
+                            stacked)
+        got_rows = jax.tree.map(
+            lambda t: np.asarray(t[0, 0, :len(prompt)]), model_kv[l])
+        jax.tree.map(np.testing.assert_array_equal, got_rows, want)
+        for leaf in jax.tree.leaves(
+                jax.tree.map(lambda t: np.asarray(t[0, 1]), model_kv[l])):
+            assert not leaf.any(), "off slot must stay untouched"
 
 
 def test_remap_tree_cache_rows_matches_per_row_reference(tiny_dense):
