@@ -170,6 +170,26 @@ def measure_sharded_engines(w: int, c: int = 4, *, slots: int = 3,
     return out
 
 
+def measure_arena_bytes(*, max_len: int = 256, tree_capacity: int = 64):
+    """fp32 vs int8 KV-arena bytes per slot (``KVArena.bytes_per_slot``
+    is ``jax.eval_shape`` over the init closures — no allocation): the
+    quantized serving path's capacity story, gated by CI bench-smoke at
+    ratio ≤ 0.55 (≥1.9x slots at an equal byte budget)."""
+    from repro.serving import KVArena
+    target, draft = common.trained_pair()
+    q_target, q_draft = target.quantize(), draft.quantize()
+
+    def bps(t, d):
+        return KVArena(t, d, slots=1, max_len=max_len,
+                       tree_capacity=tree_capacity).bytes_per_slot()
+
+    fp32_b, int8_b = bps(target, draft), bps(q_target, q_draft)
+    return {"max_len": max_len, "tree_capacity": tree_capacity,
+            "fp32": fp32_b, "int8": int8_b,
+            "ratio": round(int8_b / fp32_b, 4),
+            "slots_multiplier": fp32_b // int8_b}
+
+
 def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
         out_json: str = "BENCH_fig8.json", quick: bool = False):
     """``quick=True`` is the CI bench-smoke mode: it shrinks the
@@ -193,6 +213,11 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
               f"{measured['tokens_per_timestep']:.2f} tokens/timestep, "
               f"{measured['verify_dispatches_total']} fused dispatches in "
               f"{measured['timesteps']} timesteps")
+    arena = measure_arena_bytes()
+    if verbose:
+        print(f"  arena bytes/slot: int8 {arena['int8']} vs fp32 "
+              f"{arena['fp32']} ({arena['ratio']:.3f}x -> "
+              f"{arena['slots_multiplier']}x slots)")
     sharded = measure_sharded_engines(w)
     over, ung = sharded["overlapped"], sharded["overlapped_ungated"]
     if verbose:
@@ -273,6 +298,7 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
         "modelled_tokens_per_s": curves,
         "measured_engine": measured,
         "measured_engine_sharded": sharded,
+        "arena_bytes_per_slot": arena,
     }
     if out_json:
         with open(out_json, "w") as f:

@@ -40,6 +40,47 @@ def run(verbose: bool = True):
         ("tree_attention_pallas_interp", us_kernel, f"ref_us={us_ref:.0f}"),
         ("decode_attention_pallas_interp", us_dec, f"ref_us={us_dref:.0f}"),
     ]
+
+    # --- int8 quant paths: bytes moved + time vs the fp32 baselines ------
+    from repro.kernels.quant import quantize_rows, quantize_weight
+    kpq, kps = quantize_rows(kp)
+    vpq, vps = quantize_rows(vp)
+    ktq, kts = quantize_rows(kt)
+    vtq, vts = quantize_rows(vt)
+
+    def nbytes(*xs):
+        return sum(x.size * x.dtype.itemsize for x in xs)
+
+    fp32_kv_b = nbytes(kp, vp, kt, vt)
+    int8_kv_b = nbytes(kpq, vpq, ktq, vtq, kps, vps, kts, vts)
+    us_qtree = _time(lambda: ops.tree_attention(
+        q, kpq, vpq, ktq, vtq, mask, 1024, k_scale=kps, v_scale=vps,
+        kt_scale=kts, vt_scale=vts))
+    us_qdec = _time(lambda: ops.decode_attention(dq, kpq, vpq, 1024,
+                                                 k_scale=kps, v_scale=vps))
+    rows += [
+        ("tree_attention_int8_interp", us_qtree,
+         f"kv_bytes={int8_kv_b} (fp32 {fp32_kv_b}, "
+         f"{int8_kv_b / fp32_kv_b:.3f}x)"),
+        ("decode_attention_int8_interp", us_qdec,
+         f"fp32_us={us_dec:.0f}"),
+    ]
+
+    m, k, nn = 64, 512, 512
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, nn)), jnp.float32)
+    wq = quantize_weight(w, 1)
+    w_b, wq_b = nbytes(w), nbytes(wq["q8"], wq["scale"])
+    us_mm = _time(lambda: x @ w)
+    us_dqk = _time(lambda: ops.dequant_matmul(x, wq["q8"], wq["scale"],
+                                              use_kernel=True))
+    us_dqr = _time(lambda: ops.dequant_matmul(x, wq["q8"], wq["scale"],
+                                              use_kernel=False))
+    rows += [
+        ("dequant_matmul_pallas_interp", us_dqk,
+         f"jnp_oracle_us={us_dqr:.0f} fp32_matmul_us={us_mm:.0f} "
+         f"w_bytes={wq_b} (fp32 {w_b}, {wq_b / w_b:.3f}x)"),
+    ]
     if verbose:
         print("# Kernels (interpret mode)")
         for name, us, extra in rows:

@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--quant", choices=["none", "int8"], default="int8",
+                    help="int8: also demo the quantized serving path "
+                         "(ModelBundle.quantize() — int8 weights + int8 "
+                         "KV arena)")
     args = ap.parse_args()
 
     print(f"== training target ({TARGET.param_count()/1e6:.1f}M params) ==")
@@ -159,6 +163,40 @@ def main():
           f"{overlapped.calls['prefill_in_ring']} admissions prefilled "
           f"in-ring (0 separate prefill dispatches), ring/stage buffers "
           f"donated through the tick")
+
+    if args.quant == "int8":
+        print("\n== quantized serving path (--quant int8) ==")
+        # ModelBundle.quantize() converts the weights ONCE (per-out-channel
+        # int8) and flips every cache to the int8 KV layout; the fp32
+        # bundles above are untouched.  Quantized outputs are not bitwise
+        # fp32 outputs — the regression currency is the acceptance rate
+        # (DBStats.accepted/proposed) and the arena bytes per slot.
+        from repro.serving.scheduler import KVArena
+        q_target, q_draft = target.quantize(), draft.quantize()
+        dbq = ServingEngine(q_target, q_draft, mode="pipedec-db",
+                            max_batch=3, pipedec=pcfg)
+        for r in reqs:
+            dbq.submit(Request(r.uid, r.prompt, r.max_new_tokens,
+                               arrival_t=4 * r.uid))
+        q_results = dbq.run()
+        sq = dbq.db_stats
+        exact = sum(
+            bool(np.array_equal(q_results[uid].tokens, res.tokens))
+            for uid, res in pp_results.items())
+
+        def bps(t, d):
+            return KVArena(t, d, slots=1, max_len=512,
+                           tree_capacity=pcfg.tree_buffer_capacity
+                           ).bytes_per_slot()
+
+        fp32_b, int8_b = bps(target, draft), bps(q_target, q_draft)
+        print(f"  int8: acceptance {sq.acceptance_rate:.2f} "
+              f"(fp32 {s.acceptance_rate:.2f}), "
+              f"{sq.tokens_per_timestep:.2f} tokens/timestep, "
+              f"{exact}/{len(pp_results)} outputs equal fp32 greedy")
+        print(f"  arena: {int8_b} B/slot vs {fp32_b} B/slot fp32 "
+              f"({int8_b / fp32_b:.2f}x bytes -> "
+              f"{fp32_b // int8_b}x slots at an equal budget)")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,9 @@ re-inflates the tick:
   * admission prefill must keep riding the tick —
     ``separate_prefill_dispatches == 0`` and ``prefill_in_ring`` > 0;
   * the flush / overlapped / ungated schedules must stay token-for-token
-    ``bit_identical``.
+    ``bit_identical``;
+  * the quantized KV arena must keep its capacity win — int8
+    bytes-per-slot ≤ 0.55x fp32 (≥1.9x slots at an equal byte budget).
 
 Wall-clock numbers (``tick_cost_s``) are reported but never gated —
 runner noise is not a regression.  The regenerated JSON is written to
@@ -71,6 +73,13 @@ def check(baseline: dict, fresh: dict, rate_slack: float):
          "no separate prefill dispatches on the overlapped backend")
     gate(over_n["dispatch_counts"].get("prefill_in_ring", 0) > 0,
          "admissions prefilled in-ring")
+
+    arena = fresh["arena_bytes_per_slot"]
+    gate(arena["ratio"] <= 0.55,
+         f"int8 arena bytes/slot ratio {arena['ratio']} <= 0.55 "
+         f"(int8 {arena['int8']} vs fp32 {arena['fp32']})")
+    gate(arena["slots_multiplier"] >= 1.9,
+         f"int8 arena slots multiplier {arena['slots_multiplier']} >= 1.9")
 
     print(f"  info tick_cost_s gated={over_n.get('tick_cost_s')} "
           f"ungated={new['overlapped_ungated'].get('tick_cost_s')} "

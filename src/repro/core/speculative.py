@@ -50,6 +50,13 @@ def select_token(logits: jnp.ndarray, sp: SamplingParams, key) -> jnp.ndarray:
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
+# projection-weight name -> number of leading contraction axes, for the
+# int8 serving path (per-out-channel symmetric quantization).  Everything
+# else (embeddings, norms, biases, lm_head) stays fp32.
+QUANT_WEIGHTS = {"w_q": 1, "w_k": 1, "w_v": 1, "w_o": 2,
+                 "w_gate": 1, "w_up": 1, "w_down": 1}
+
+
 def _tree_verify_rows_impl(params, node_tokens, node_positions, tree_mask,
                            cache, cache_len, tree_caches, tree_write_index,
                            *, bucket: int, cfg, enc_out, window_override):
@@ -159,6 +166,38 @@ class ModelBundle:
 
     def init_tree_caches(self, batch, capacity):
         return tf.init_tree_caches(self.cfg, batch, capacity)
+
+    def quantize(self) -> "ModelBundle":
+        """Int8 serving copy: projection weights become per-out-channel
+        symmetric int8 ``{"q8", "scale"}`` dicts (converted ONCE here) and
+        ``cfg.quant = "int8"`` switches every cache this bundle builds to
+        the int8 KV layout.  Dense attention families only; this bundle is
+        left untouched — the fp32 path stays the bit-pinned reference.
+        """
+        cfg = self.cfg
+        unsupported = (cfg.mla is not None or cfg.moe is not None
+                       or cfg.ssm is not None or cfg.rglru is not None
+                       or cfg.is_encdec)
+        assert not unsupported, (
+            f"int8 serving supports dense attention only, got {cfg.name!r}")
+        from repro.kernels.quant import quantize_weight
+
+        def leaf(path, w):
+            n_in = QUANT_WEIGHTS.get(getattr(path[-1], "key", None))
+            if n_in is None:
+                return w
+            if getattr(path[0], "key", None) == "stack":
+                # stacked scan leaves carry a leading reps dim: quantize
+                # each layer independently; the scale keeps the reps dim
+                # so per-layer slicing / stage reshapes stay tree-mapped.
+                return jax.vmap(lambda t: quantize_weight(t, n_in))(w)
+            return quantize_weight(w, n_in)
+
+        q_params = jax.tree_util.tree_map_with_path(leaf, self.params)
+        return ModelBundle(q_params, dataclasses.replace(cfg, quant="int8"),
+                           enc_out=self.enc_out,
+                           prefix_embeds=self.prefix_embeds,
+                           window_override=self.window_override)
 
 
 def remap_tree_caches(tree_caches, index_map, capacity: int):

@@ -33,10 +33,16 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     getattr(pltpu, "TPUCompilerParams")
 
 
-def _flash_kernel(plen_ref, q_ref, k_ref, v_ref, qpos_ref,
-                  o_ref, m_ref, l_ref,
-                  acc_ref, ms_ref, ls_ref, *, scale, block_k, window,
-                  causal):
+def _flash_kernel(plen_ref, q_ref, k_ref, v_ref, *rest, scale, block_k,
+                  window, causal, quant):
+    # quantized K/V ride with per-row scale side refs ([bk] per tile,
+    # same index map as k/v) that dequantize in-kernel before the fp32
+    # QK^T / PV accumulation
+    if quant:
+        (ks_ref, vs_ref, qpos_ref, o_ref, m_ref, l_ref,
+         acc_ref, ms_ref, ls_ref) = rest
+    else:
+        qpos_ref, o_ref, m_ref, l_ref, acc_ref, ms_ref, ls_ref = rest
     kb = pl.program_id(3)
     nb = pl.num_programs(3)
 
@@ -49,6 +55,9 @@ def _flash_kernel(plen_ref, q_ref, k_ref, v_ref, qpos_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale          # [n, hd]
     k = k_ref[0, 0].astype(jnp.float32)                  # [bk, hd]
     v = v_ref[0, 0].astype(jnp.float32)                  # [bk, hd]
+    if quant:
+        k = k * ks_ref[0, 0][:, None]
+        v = v * vs_ref[0, 0][:, None]
     n = q.shape[0]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -90,7 +99,8 @@ def _flash_kernel(plen_ref, q_ref, k_ref, v_ref, qpos_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_k", "block_q", "window",
                                              "interpret", "scale", "causal"))
-def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
+def flash_attention_lse(q, k, v, kv_len, qpos=None, *, k_scale=None,
+                        v_scale=None, scale=None,
                         block_k: int = 512, block_q: int = 0,
                         window: int = 0, causal: bool = False,
                         interpret: bool = True):
@@ -99,10 +109,14 @@ def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
 
     qpos: [n] or per-row [B,n] int32 absolute query positions (required
     when window > 0 or causal).  block_q tiles the query dim (0 => one tile
-    — decode/tree widths; prefill passes e.g. 512).  Returns
+    — decode/tree widths; prefill passes e.g. 512).  k_scale/v_scale
+    [B,KV,L] f32 mark k/v as per-row symmetric int8: each block_k tile of
+    scales rides beside its K/V tile and the dequant fuses into the
+    kernel (fp32 accumulate unchanged).  Returns
     (o [B,H,n,hd], m [B,H,n,128], l [B,H,n,128]) — lane-replicated LSE
     stats for flash-decoding combination.
     """
+    quant = k_scale is not None
     b, h, n0, hd = q.shape
     kvh, lmax = k.shape[1], k.shape[2]
     rep = h // kvh
@@ -111,6 +125,9 @@ def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
         pad = block_k - lmax % block_k
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if quant:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad)))
         lmax += pad
     nb = lmax // block_k
     if qpos is None:
@@ -131,12 +148,21 @@ def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
 
     grid = (b, h, nq, nb)
     kernel = functools.partial(_flash_kernel, scale=scale, block_k=block_k,
-                               window=window, causal=causal)
+                               window=window, causal=causal, quant=quant)
     out_shape = [
         jax.ShapeDtypeStruct((b, h, n, hd), q.dtype),
         jax.ShapeDtypeStruct((b, h, n, 128), jnp.float32),
         jax.ShapeDtypeStruct((b, h, n, 128), jnp.float32),
     ]
+    kv_spec = pl.BlockSpec((1, 1, block_k, hd),
+                           lambda i, j, qi, kb, *_: (i, j // rep, kb, 0))
+    scale_specs, scale_args = [], []
+    if quant:
+        scale_specs = [pl.BlockSpec((1, 1, block_k),
+                                    lambda i, j, qi, kb, *_:
+                                    (i, j // rep, kb))] * 2
+        scale_args = [k_scale.astype(jnp.float32),
+                      v_scale.astype(jnp.float32)]
     o, m, l = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -145,10 +171,9 @@ def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
             in_specs=[
                 pl.BlockSpec((1, 1, bq, hd),
                              lambda i, j, qi, kb, *_: (i, j, qi, 0)),
-                pl.BlockSpec((1, 1, block_k, hd),
-                             lambda i, j, qi, kb, *_: (i, j // rep, kb, 0)),
-                pl.BlockSpec((1, 1, block_k, hd),
-                             lambda i, j, qi, kb, *_: (i, j // rep, kb, 0)),
+                kv_spec,
+                kv_spec,
+                *scale_specs,
                 pl.BlockSpec((1, 1, bq, 128),
                              lambda i, j, qi, kb, *_: (i, 0, qi, 0)),
             ],
@@ -171,7 +196,7 @@ def flash_attention_lse(q, k, v, kv_len, qpos=None, *, scale=None,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(plen, q, k, v, qpos2)
+    )(plen, q, k, v, *scale_args, qpos2)
     if qpad:
         o, m, l = o[:, :, :n0], m[:, :, :n0], l[:, :, :n0]
     return o, m, l

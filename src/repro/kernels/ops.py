@@ -6,20 +6,47 @@ sources using their log-sum-exp stats — mathematically identical to a joint
 softmax over the concatenation (flash-decoding combination), which is how
 paper Algorithm 1's  softmax(concat(S_past, S_predict))  is realised
 without materialising the concat.
+
+Interpret-mode policy: the ``REPRO_KERNEL_INTERPRET`` env var sets the
+module default (``INTERPRET``), but every dispatcher also takes an
+explicit ``interpret=`` override resolved at *call time* — tests and
+benchmarks flip modes per call (or by reassigning ``ops.INTERPRET``)
+without reimporting.
+
+Quantized paths: passing per-row ``k_scale``/``v_scale`` side tensors
+marks K/V as symmetric int8 and fuses the dequant into the kernels;
+``dequant_matmul``/``quant_matmul`` dispatch the fused int8-weight matmul
+(kernel vs jnp oracle under the same policy, defaulting to the jnp path
+unless ``REPRO_USE_PALLAS_QUANT=1`` — mirroring ``USE_PALLAS_ATTN``).
 """
 from __future__ import annotations
 
+import math
 import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import quant as qz
 from repro.kernels import ref
 from repro.kernels.flash import flash_attention_lse
 from repro.kernels.tree_block import tree_block_attention
 
 # On a real TPU set REPRO_KERNEL_INTERPRET=0; CPU CI runs interpret mode.
+# This is only the *default* — dispatchers resolve it per call, so
+# reassigning ops.INTERPRET (or passing interpret=) needs no reimport.
 INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+
+# Kernel-vs-jnp policy for the fused dequant-matmul at weight-projection
+# call sites (interpret-mode Pallas is slow on CPU CI, so the jnp oracle
+# is the host default, like USE_PALLAS_ATTN for the attention paths).
+USE_PALLAS_QUANT = os.environ.get("REPRO_USE_PALLAS_QUANT", "0") == "1"
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    """Resolve the per-call override against the module default."""
+    return INTERPRET if interpret is None else bool(interpret)
 
 
 def combine_lse(parts):
@@ -41,45 +68,105 @@ def combine_lse(parts):
 
 def tree_attention(q, k_past, v_past, k_tree, v_tree, tree_mask, past_len,
                    *, scale=None, window: int = 0, qpos=None,
-                   use_kernel: bool = True, block_k: int = 512):
+                   use_kernel: bool = True, block_k: int = 512,
+                   interpret: Optional[bool] = None,
+                   k_scale=None, v_scale=None, kt_scale=None,
+                   vt_scale=None):
     """Two-level tree attention — see kernels/ref.py for the oracle.
 
     ``past_len`` may be a scalar or per-row [B], ``tree_mask`` [n,T] or
     per-row [B,n,T] (the SpecPipe-DB fused dispatch stacks one request per
     batch row, each with its own committed prefix and ancestor mask).
+
+    Quantized caches pass int8 k/v plus per-row f32 scales
+    (``k_scale``/``v_scale`` [B,KV,Lmax] for the past half,
+    ``kt_scale``/``vt_scale`` [B,KV,T] for the tree half); the dequant
+    fuses into both kernels, and the jnp fallback uses the quant oracle.
     """
+    quant = k_scale is not None
     if not use_kernel:
+        if quant:
+            return ref.tree_attention_quant_ref(
+                q, k_past, v_past, k_tree, v_tree, tree_mask, past_len,
+                k_scale=k_scale, v_scale=v_scale, kt_scale=kt_scale,
+                vt_scale=vt_scale, scale=scale)
         return ref.tree_attention_ref(q, k_past, v_past, k_tree, v_tree,
                                       tree_mask, past_len, scale=scale)
+    it = _interp(interpret)
     op, mp, lp = flash_attention_lse(q, k_past, v_past, past_len, qpos,
+                                     k_scale=k_scale, v_scale=v_scale,
                                      scale=scale, window=window,
-                                     block_k=block_k, interpret=INTERPRET)
+                                     block_k=block_k, interpret=it)
     ot, mt, lt = tree_block_attention(q, k_tree, v_tree, tree_mask,
-                                      scale=scale, interpret=INTERPRET)
+                                      k_scale=kt_scale, v_scale=vt_scale,
+                                      scale=scale, interpret=it)
     out = combine_lse([(op, mp, lp), (ot, mt, lt)])
     return out.astype(q.dtype)
 
 
 def prefill_attention(q, k, v, positions, *, scale=None, window: int = 0,
-                      block_k: int = 512, block_q: int = 512):
+                      block_k: int = 512, block_q: int = 512,
+                      interpret: Optional[bool] = None):
     """Causal flash attention for prefill/training — q: [B,H,S,hd],
     k/v: [B,KV,S,hd], positions: [S]."""
     o, _, _ = flash_attention_lse(
         q, k, v, k.shape[2], positions, scale=scale, window=window,
         causal=True, block_k=block_k, block_q=min(block_q, q.shape[2]),
-        interpret=INTERPRET)
+        interpret=_interp(interpret))
     return o.astype(q.dtype)
 
 
 def decode_attention(q, k, v, kv_len, *, scale=None, window: int = 0,
-                     use_kernel: bool = True, block_k: int = 512):
-    """Single-/few-token decode over a long KV cache."""
+                     use_kernel: bool = True, block_k: int = 512,
+                     interpret: Optional[bool] = None,
+                     k_scale=None, v_scale=None):
+    """Single-/few-token decode over a long KV cache (optionally int8
+    with per-row ``k_scale``/``v_scale`` [B,KV,Lmax] dequantized
+    in-kernel)."""
     if not use_kernel:
+        if k_scale is not None:
+            return ref.decode_attention_quant_ref(
+                q, k, v, kv_len, k_scale=k_scale, v_scale=v_scale,
+                window=window, scale=scale)
         return ref.decode_attention_ref(q, k, v, kv_len, window=window,
                                         scale=scale)
     n = q.shape[2]
     qpos = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32) - 1, (n,))
-    o, _, _ = flash_attention_lse(q, k, v, kv_len, qpos, scale=scale,
+    o, _, _ = flash_attention_lse(q, k, v, kv_len, qpos, k_scale=k_scale,
+                                  v_scale=v_scale, scale=scale,
                                   window=window, block_k=block_k,
-                                  interpret=INTERPRET)
+                                  interpret=_interp(interpret))
     return o.astype(q.dtype)
+
+
+def dequant_matmul(x, w_q, w_scale, *, use_kernel: Optional[bool] = None,
+                   interpret: Optional[bool] = None, block_m: int = 128,
+                   block_n: int = 128, block_k: int = 128):
+    """Fused dequant-matmul: x [M,K] f32 @ int8 w_q [K,N] with
+    per-out-channel f32 scales [N] -> [M,N] f32.  ``use_kernel=None``
+    follows the ``USE_PALLAS_QUANT`` module policy."""
+    if use_kernel is None:
+        use_kernel = USE_PALLAS_QUANT
+    if not use_kernel:
+        return ref.dequant_matmul_ref(x, w_q, w_scale)
+    return qz.dequant_matmul_kernel(x, w_q, w_scale, block_m=block_m,
+                                    block_n=block_n, block_k=block_k,
+                                    interpret=_interp(interpret))
+
+
+def quant_matmul(x, w, *, use_kernel: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+    """Apply a quantized weight dict ``{"q8", "scale"}`` to ``x``,
+    contracting x's trailing axes with w's leading (first
+    ``q8.ndim - scale.ndim``) axes — the generalised einsum every
+    quantized projection call site routes through.  Shapes collapse to
+    one 2-D ``dequant_matmul`` and reshape back."""
+    q8, scale = w["q8"], w["scale"]
+    nin = q8.ndim - scale.ndim
+    kdim = math.prod(q8.shape[:nin])
+    out_shape = q8.shape[nin:]
+    batch = x.shape[:x.ndim - nin]
+    y = dequant_matmul(x.reshape(-1, kdim).astype(jnp.float32),
+                       q8.reshape(kdim, -1), scale.reshape(-1),
+                       use_kernel=use_kernel, interpret=interpret)
+    return y.reshape(*batch, *out_shape)

@@ -47,6 +47,32 @@ def tree_attention_ref(q, k_past, v_past, k_tree, v_tree, tree_mask,
     return out
 
 
+def _dequant(q8, row_scale):
+    """int8 values [..., L, hd] * per-row f32 scales [..., L] -> f32."""
+    return q8.astype(jnp.float32) * row_scale[..., None]
+
+
+def tree_attention_quant_ref(q, k_past, v_past, k_tree, v_tree, tree_mask,
+                             past_len, *, k_scale, v_scale, kt_scale,
+                             vt_scale, scale=None):
+    """Quantized two-level tree attention oracle: int8 K/V with per-row
+    f32 scales (``k_scale``/``v_scale`` [B, KV, Lmax], ``kt_scale``/
+    ``vt_scale`` [B, KV, T]) are dequantized densely, then fed through the
+    fp32 reference — what the fused kernels must match."""
+    return tree_attention_ref(
+        q, _dequant(k_past, k_scale), _dequant(v_past, v_scale),
+        _dequant(k_tree, kt_scale), _dequant(v_tree, vt_scale),
+        tree_mask, past_len, scale=scale)
+
+
+def dequant_matmul_ref(x, w_q, w_scale):
+    """Fused dequant-matmul oracle: x [M, K] f32 @ int8 w_q [K, N] with
+    per-out-channel f32 scales [N] -> [M, N] f32 (scale applied after the
+    fp32 accumulation, matching the kernel's association)."""
+    acc = x.astype(jnp.float32) @ w_q.astype(jnp.float32)
+    return acc * w_scale
+
+
 def decode_attention_ref(q, k, v, kv_len, *, window=0, scale=None):
     """Flash-decode reference: q [B, H, 1, hd] vs cache k/v [B, KV, Lmax, hd]
     with ``kv_len`` valid rows, optional sliding window. -> [B, H, 1, hd]."""
@@ -65,3 +91,12 @@ def decode_attention_ref(q, k, v, kv_len, *, window=0, scale=None):
     logits = jnp.where(ok, logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     return jnp.einsum("bhns,bhsd->bhnd", probs, v)
+
+
+def decode_attention_quant_ref(q, k, v, kv_len, *, k_scale, v_scale,
+                               window=0, scale=None):
+    """Quantized flash-decode oracle: int8 k/v [B, KV, Lmax, hd] with
+    per-row f32 scales [B, KV, Lmax], dequantized then scored in fp32."""
+    return decode_attention_ref(q, _dequant(k, k_scale),
+                                _dequant(v, v_scale), kv_len,
+                                window=window, scale=scale)

@@ -22,11 +22,19 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     getattr(pltpu, "TPUCompilerParams")
 
 
-def _tree_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
-                 scale):
+def _tree_kernel(q_ref, k_ref, v_ref, mask_ref, *rest, scale, quant):
+    # quantized K/V carry per-row scale side refs ([t] each, same head
+    # index map) dequantized in-kernel before the fp32 masked softmax
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        o_ref, m_ref, l_ref = rest
     q = q_ref[0, 0].astype(jnp.float32) * scale          # [n, hd]
     k = k_ref[0, 0].astype(jnp.float32)                  # [t, hd]
     v = v_ref[0, 0].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0, 0][:, None]
+        v = v * vs_ref[0, 0][:, None]
     mask = mask_ref[0] != 0                              # [n, t] (this row's)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
@@ -43,14 +51,17 @@ def _tree_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "scale"))
-def tree_block_attention(q, k_tree, v_tree, tree_mask, *, scale=None,
-                         interpret: bool = True):
+def tree_block_attention(q, k_tree, v_tree, tree_mask, *, k_scale=None,
+                         v_scale=None, scale=None, interpret: bool = True):
     """q: [B,H,n,hd]; k/v_tree: [B,KV,T,hd]; tree_mask: [n,T] bool, or
     per-row [B,n,T] (SpecPipe-DB fused dispatch: each batch row is a
     different request's tree, so each row carries its own ancestor mask).
+    k_scale/v_scale [B,KV,T] f32 mark k/v_tree as per-row symmetric int8;
+    the dequant fuses into the kernel.
 
     Returns (o [B,H,n,hd], m [B,H,n,128], l [B,H,n,128]).
     """
+    quant = k_scale is not None
     b, h, n, hd = q.shape
     kvh, t = k_tree.shape[1], k_tree.shape[2]
     rep = h // kvh
@@ -59,19 +70,26 @@ def tree_block_attention(q, k_tree, v_tree, tree_mask, *, scale=None,
         tree_mask = tree_mask[None]
     mask_i8 = jnp.broadcast_to(tree_mask, (b, n, t)).astype(jnp.int8)
 
+    scale_specs, scale_args = [], []
+    if quant:
+        scale_specs = [pl.BlockSpec((1, 1, t),
+                                    lambda i, j: (i, j // rep, 0))] * 2
+        scale_args = [k_scale.astype(jnp.float32),
+                      v_scale.astype(jnp.float32)]
     out_shape = [
         jax.ShapeDtypeStruct((b, h, n, hd), q.dtype),
         jax.ShapeDtypeStruct((b, h, n, 128), jnp.float32),
         jax.ShapeDtypeStruct((b, h, n, 128), jnp.float32),
     ]
     o, m, l = pl.pallas_call(
-        functools.partial(_tree_kernel, scale=scale),
+        functools.partial(_tree_kernel, scale=scale, quant=quant),
         grid=(b, h),
         in_specs=[
             pl.BlockSpec((1, 1, n, hd), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, 1, t, hd), lambda i, j: (i, j // rep, 0, 0)),
             pl.BlockSpec((1, 1, t, hd), lambda i, j: (i, j // rep, 0, 0)),
             pl.BlockSpec((1, n, t), lambda i, j: (i, 0, 0)),
+            *scale_specs,
         ],
         out_specs=[
             pl.BlockSpec((1, 1, n, hd), lambda i, j: (i, j, 0, 0)),
@@ -82,5 +100,5 @@ def tree_block_attention(q, k_tree, v_tree, tree_mask, *, scale=None,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(q, k_tree, v_tree, mask_i8)
+    )(q, k_tree, v_tree, mask_i8, *scale_args)
     return o, m, l

@@ -69,10 +69,17 @@ def main(argv=None):
     ap.add_argument("--width", type=int, default=8)
     ap.add_argument("--branch", type=int, default=4)
     ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--quant", choices=["none", "int8"], default="none",
+                    help="int8: serve both bundles quantized "
+                         "(ModelBundle.quantize() — per-out-channel int8 "
+                         "weights + int8 KV arena, ~3x the slots per byte "
+                         "budget; dense attention architectures only)")
     args = ap.parse_args(argv)
 
     target = build_bundle(args.target_arch, smoke=args.smoke, seed=0)
     draft = build_bundle(args.draft_arch, smoke=args.smoke, seed=1)
+    if args.quant == "int8":
+        target, draft = target.quantize(), draft.quantize()
     if args.overlap:
         assert args.mode == "pipedec-db" and args.executor == "sharded", \
             "--overlap needs --mode pipedec-db --executor sharded"

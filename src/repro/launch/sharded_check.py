@@ -30,6 +30,18 @@ global timestep, deferred exit logits, in-ring pruning propagation):
     dead, and the other slot's rows/exits are bit-identical to a run
     without the kill.
 
+``--quant`` additionally runs the whole workload on int8 bundles
+(``ModelBundle.quantize()``: per-out-channel int8 weights + int8 KV
+arena).  The strong pin is the same as fp32's, *within* the quantized
+path: quantized DB outputs across every executor are bit-identical to
+the quantized single-request engine, with the identical dispatch-count
+assertions (one tick per timestep, prefill-in-ring, no separate prefill
+dispatch).  Against fp32 the gates are statistical, not bitwise — the
+acceptance-rate delta stays within ``QUANT_ACCEPTANCE_TOL``, the
+self-draft workload keeps ~perfect acceptance, and the int8 arena costs
+at most ``QUANT_BYTES_RATIO_MAX`` of the fp32 bytes per slot (so an
+equal byte budget admits >= ``QUANT_SLOTS_MULT_MIN`` x the slots).
+
 Prints one JSON summary line plus one machine-greppable status line —
 ``SHARDED_CHECK ok stages=8 ...`` on success, ``SHARDED_CHECK fail ...``
 (and a non-zero exit code, no traceback spelunking needed) on any
@@ -43,6 +55,11 @@ import argparse
 import json
 import os
 import sys
+
+# int8 regression thresholds (committed gates; see module docstring)
+QUANT_ACCEPTANCE_TOL = 0.15     # |acc(int8) - acc(fp32)| on the workload
+QUANT_BYTES_RATIO_MAX = 0.55    # int8 arena bytes / fp32 arena bytes
+QUANT_SLOTS_MULT_MIN = 1.9      # slots admitted at an equal byte budget
 
 
 def _pruning_propagation_scenario(stages: int):
@@ -157,6 +174,11 @@ def main(argv=None):
                          "tick per timestep; PipeDecConfig.n_stages is "
                          "then --stages so the ring IS the flight "
                          "bookkeeping)")
+    ap.add_argument("--quant", action="store_true",
+                    help="also run the workload on int8 bundles "
+                         "(ModelBundle.quantize()): same bit-identity pin "
+                         "within the quantized path, acceptance-delta and "
+                         "arena-bytes gates against fp32")
     args = ap.parse_args(argv)
 
     if "--xla_force_host_platform_device_count" not in \
@@ -246,11 +268,21 @@ def main(argv=None):
             assert max(disp) == 1, f"{name}: >1 dispatch in one timestep"
             assert ex.calls["verify_rows"] == sum(disp), \
                 f"{name}: one batched dispatch per pending timestep"
+            # per-request acceptance counters (DBStats.accepted/proposed)
+            # must agree with the single-request trace — the runs are
+            # bit-identical, so the verify decisions are too
+            for r in reqs:
+                st = res[r.uid].stats
+                assert eng.stats.accepted[r.uid] == st.hits, \
+                    f"{name}: DBStats.accepted mismatch uid={r.uid}"
+                assert eng.stats.proposed[r.uid] == st.hits + st.misses, \
+                    f"{name}: DBStats.proposed mismatch uid={r.uid}"
             part[name] = {
                 "timesteps": eng.stats.timesteps,
                 "tokens_per_timestep": round(eng.stats.tokens_per_timestep,
                                              4),
                 "peak_occupancy": eng.stats.peak_occupancy,
+                "acceptance_rate": round(eng.stats.acceptance_rate, 4),
                 "dispatches": dict(ex.calls),
             }
             if name == "sharded":
@@ -312,9 +344,56 @@ def main(argv=None):
         assert ex.calls["kill"] >= 2, "both retires must kill in-ring"
         return {"bit_identical": True, "kills": int(ex.calls["kill"])}
 
+    def check_quant_arena():
+        """Byte-budget gate: the int8 arena must cost at most
+        ``QUANT_BYTES_RATIO_MAX`` of the fp32 bytes per slot, so an equal
+        memory budget admits >= ``QUANT_SLOTS_MULT_MIN`` x the slots.
+        Shapes only (``jax.eval_shape``) — nothing is allocated."""
+        from repro.serving.scheduler import KVArena
+
+        def bps(t, d):
+            return KVArena(t, d, slots=1, max_len=max_len,
+                           tree_capacity=pcfg.tree_buffer_capacity
+                           ).bytes_per_slot()
+
+        fp32_b = bps(target, draft)
+        int8_b = bps(target.quantize(), draft.quantize())
+        ratio = int8_b / fp32_b
+        mult = fp32_b // int8_b if int8_b else 0
+        assert ratio <= QUANT_BYTES_RATIO_MAX, \
+            f"int8 arena ratio {ratio:.3f} > {QUANT_BYTES_RATIO_MAX}"
+        assert mult >= QUANT_SLOTS_MULT_MIN, \
+            f"int8 slots multiplier {mult} < {QUANT_SLOTS_MULT_MIN}"
+        return {"fp32": fp32_b, "int8": int8_b,
+                "ratio": round(ratio, 4), "slots_multiplier": int(mult)}
+
     try:
+        reqs_main = mk_reqs(3, 7)
         summary["independent_draft"] = check_workload(target, draft,
-                                                      mk_reqs(3, 7))
+                                                      reqs_main)
+        if args.quant:
+            # same requests, int8 bundles: bit-identity within the
+            # quantized path (DB executors vs quant single-request) with
+            # the identical dispatch-count assertions, then the
+            # statistical gates against fp32
+            q_target, q_draft = target.quantize(), draft.quantize()
+            summary["quant_int8"] = check_workload(q_target, q_draft,
+                                                   reqs_main)
+            delta = abs(summary["quant_int8"]["acceptance_mean"]
+                        - summary["independent_draft"]["acceptance_mean"])
+            assert delta <= QUANT_ACCEPTANCE_TOL, \
+                f"int8 acceptance delta {delta:.4f} > {QUANT_ACCEPTANCE_TOL}"
+            summary["quant_int8"]["acceptance_delta_vs_fp32"] = \
+                round(delta, 4)
+            summary["quant_int8"]["arena_bytes_per_slot"] = \
+                check_quant_arena()
+            if args.overlap:
+                # quantized self-draft: draft == target, so acceptance
+                # must stay ~perfect (quant noise hits both identically)
+                qsd = check_workload(q_target, q_target, mk_reqs(8, 14))
+                assert qsd["acceptance_mean"] > 0.99, \
+                    "int8 self-draft must keep ~perfect acceptance"
+                summary["quant_self_draft"] = qsd
         if args.overlap:
             # self-draft: perfect acceptance — every commit is a hit, so
             # the prune index_maps ride the ring with n_stages-1 layers
@@ -336,14 +415,15 @@ def main(argv=None):
         reason = str(e).splitlines()[0][:200] if str(e) else ""
         print(f"SHARDED_CHECK fail stages={args.stages} "
               f"slots={args.slots} requests={args.requests} "
-              f"overlap={int(args.overlap)} "
+              f"overlap={int(args.overlap)} quant={int(args.quant)} "
               f"error={type(e).__name__}: {reason}")
         return 1
     summary["bit_identical"] = True
     print(json.dumps(summary))
     parts = [f"SHARDED_CHECK ok stages={args.stages}",
              f"slots={args.slots}", f"requests={args.requests}",
-             f"overlap={int(args.overlap)}", "bit_identical=1"]
+             f"overlap={int(args.overlap)}", f"quant={int(args.quant)}",
+             "bit_identical=1"]
     if args.overlap:
         over = summary["independent_draft"]["sharded_overlapped"]
         parts += [
@@ -352,6 +432,20 @@ def main(argv=None):
             f"ctrl_active_rate={over['ctrl_active_rate']:.4f}",
             f"prefill_in_ring={over['dispatches']['prefill_in_ring']}",
         ]
+    if args.quant:
+        q = summary["quant_int8"]
+        arena = q["arena_bytes_per_slot"]
+        parts += [
+            f"quant_acceptance_delta={q['acceptance_delta_vs_fp32']:.4f}",
+            f"quant_arena_ratio={arena['ratio']:.4f}",
+            f"quant_slots_multiplier={arena['slots_multiplier']}",
+        ]
+        if args.overlap:
+            qo = q["sharded_overlapped"]
+            parts += [
+                f"quant_ticks_per_timestep="
+                f"{qo['dispatches']['pipeline_tick'] / qo['timesteps']:.2f}",
+            ]
     print(" ".join(parts))
     return 0
 

@@ -21,6 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant import dequantize_rows, quantize_rows
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, dense_init
 
@@ -69,10 +70,21 @@ def init_attention(key, cfg: ModelConfig, dtype=jnp.float32, cross: bool = False
 # --------------------------------------------------------------------------
 # core
 # --------------------------------------------------------------------------
+def _proj(x, w, eq: str):
+    """Projection einsum that also accepts a quantized ``{"q8", "scale"}``
+    weight (int8 values, per-out-channel scales).  The quantized layout
+    encodes the contraction split itself (leading ``q8.ndim - scale.ndim``
+    axes contract), so the einsum spec only drives the fp32 path."""
+    if isinstance(w, dict) and "q8" in w:
+        from repro.kernels import ops as kops
+        return kops.quant_matmul(x, w)
+    return jnp.einsum(eq, x, w)
+
+
 def _project_qkv(params, cfg: ModelConfig, x, positions, rope: bool = True):
-    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
-    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
-    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    q = _proj(x, params["w_q"], "bsd,dhk->bshk")
+    k = _proj(x, params["w_k"], "bsd,dhk->bshk")
+    v = _proj(x, params["w_v"], "bsd,dhk->bshk")
     if "b_q" in params:
         q = q + params["b_q"]
         k = k + params["b_k"]
@@ -199,10 +211,39 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32)
             "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
             "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
         }
+    if getattr(cfg, "quant", "") == "int8":
+        # int8 serving layout: values are per-row symmetric int8 with one
+        # fp32 scale per (position, kv-head) row — ``dtype`` is ignored
+        # (the layout is fixed by the quantization scheme).
+        return {
+            "k": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+            "v": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, kv), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_len, kv), jnp.float32),
+        }
     return {
         "k": jnp.zeros((batch, max_len, kv, hd), dtype),
         "v": jnp.zeros((batch, max_len, kv, hd), dtype),
     }
+
+
+def _kv_updates(cache, k_new, v_new):
+    """Build the updates dict for a K/V cache write.  Quantized caches
+    (detected by the ``k_scale`` leaf) quantize the fresh rows here so the
+    int8 values AND their scales land in the same write — ``_cache_write``
+    only returns names present in ``updates``."""
+    if "k_scale" in cache:
+        kq, ks = quantize_rows(k_new)
+        vq, vs = quantize_rows(v_new)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return {"k": k_new, "v": v_new}
+
+
+def _kv_read(cache, name):
+    """Read K or V from a cache, dequantizing int8 layouts to fp32."""
+    if "k_scale" in cache:
+        return dequantize_rows(cache[name], cache[name + "_scale"])
+    return cache[name]
 
 
 def _cache_write(cache, updates, index):
@@ -263,13 +304,13 @@ def attn_forward(params, cfg: ModelConfig, x, positions, *,
     q, k, v = _project_qkv(params, cfg, x, positions)
     new_cache = None
     if cache is not None:
-        new_cache = _cache_write(cache, {"k": k, "v": v}, cache_index)
+        new_cache = _cache_write(cache, _kv_updates(cache, k, v), cache_index)
     if causal and s >= CHUNKED_ATTN_THRESHOLD:
         out = chunked_causal_attend(q, k, v, window=window)
     else:
         mask = causal_mask(s, s, 0, window) if causal else None
         out = gqa_attend(q, k, v, mask)
-    y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+    y = _proj(out, params["w_o"], "bqhk,hkd->bqd")
     return y, new_cache
 
 
@@ -337,16 +378,22 @@ def attn_decode(params, cfg: ModelConfig, x, position, cache, cache_len, *,
             out = gqa_attend(q, k, v, valid, scale=scale)
     else:
         q, k_new, v_new = _project_qkv(params, cfg, x, positions)
-        cache = _cache_write(cache, {"k": k_new, "v": v_new}, cache_len)
+        cache = _cache_write(cache, _kv_updates(cache, k_new, v_new),
+                             cache_len)
         if USE_PALLAS_ATTN:
             from repro.kernels import ops as kops
+            qkw = {}
+            if "k_scale" in cache:
+                qkw = dict(k_scale=cache["k_scale"].swapaxes(1, 2),
+                           v_scale=cache["v_scale"].swapaxes(1, 2))
             out = kops.decode_attention(
                 q.swapaxes(1, 2), cache["k"].swapaxes(1, 2),
                 cache["v"].swapaxes(1, 2), position[0] + 1,
-                window=window).swapaxes(1, 2)
+                window=window, **qkw).swapaxes(1, 2)
         else:
-            out = gqa_attend(q, cache["k"], cache["v"], valid)
-    y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+            out = gqa_attend(q, _kv_read(cache, "k"), _kv_read(cache, "v"),
+                             valid)
+    y = _proj(out, params["w_o"], "bqhk,hkd->bqd")
     return y, cache
 
 
@@ -414,21 +461,31 @@ def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
         scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
     else:
         q, k_new, v_new = _project_qkv(params, cfg, x, positions)
-        tree_cache = _cache_write_rows(tree_cache, {"k": k_new, "v": v_new},
+        tree_cache = _cache_write_rows(tree_cache,
+                                       _kv_updates(tree_cache, k_new, v_new),
                                        tree_write_index)
-        k_past, v_past = model_cache["k"], model_cache["v"]
-        k_tree, v_tree = tree_cache["k"], tree_cache["v"]
+        k_past, v_past = _kv_read(model_cache, "k"), _kv_read(model_cache, "v")
+        k_tree, v_tree = _kv_read(tree_cache, "k"), _kv_read(tree_cache, "v")
         scale = None
 
     if USE_PALLAS_ATTN and cfg.mla is None and window == 0:
         # two-kernel path: flash over past + tree-block, LSE-combined
         # (kernels/ops.py) — identical math to the joint softmax below.
+        # Quantized caches pass int8 K/V + per-row scales; the dequant
+        # fuses into both kernels instead of materialising fp32 copies.
         from repro.kernels import ops as kops
+        qkw = {}
+        if "k_scale" in tree_cache:
+            qkw = dict(k_scale=model_cache["k_scale"].swapaxes(1, 2),
+                       v_scale=model_cache["v_scale"].swapaxes(1, 2),
+                       kt_scale=tree_cache["k_scale"].swapaxes(1, 2),
+                       vt_scale=tree_cache["v_scale"].swapaxes(1, 2))
         out = kops.tree_attention(
-            q.swapaxes(1, 2), k_past.swapaxes(1, 2), v_past.swapaxes(1, 2),
-            k_tree.swapaxes(1, 2), v_tree.swapaxes(1, 2), tree_mask,
-            mlen).swapaxes(1, 2)
-        y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+            q.swapaxes(1, 2),
+            model_cache["k"].swapaxes(1, 2), model_cache["v"].swapaxes(1, 2),
+            tree_cache["k"].swapaxes(1, 2), tree_cache["v"].swapaxes(1, 2),
+            tree_mask, mlen, **qkw).swapaxes(1, 2)
+        y = _proj(out, params["w_o"], "bqhk,hkd->bqd")
         return y, tree_cache
     # Joint softmax over [past ‖ tree] (paper computes the two score blocks
     # separately then softmaxes the concat — identical math).
@@ -438,7 +495,7 @@ def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
         [jnp.broadcast_to(past_valid, (b, 1, n, max_len)),
          jnp.broadcast_to(tmask, (b, 1, n, tcap))], axis=-1)
     out = gqa_attend(q, k, v, mask, scale=scale)
-    y = jnp.einsum("bqhk,hkd->bqd", out, params["w_o"])
+    y = _proj(out, params["w_o"], "bqhk,hkd->bqd")
     return y, tree_cache
 
 

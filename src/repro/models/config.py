@@ -116,6 +116,11 @@ class ModelConfig:
 
     dtype: str = "float32"
 
+    # serving quantization: "" = fp32 reference path (bit-pinned),
+    # "int8" = per-out-channel int8 weights + per-row int8 KV cache
+    # (ModelBundle.quantize() sets this; dense attention families only).
+    quant: str = ""
+
     # ---- derived ----------------------------------------------------------
     @property
     def resolved_head_dim(self) -> int:

@@ -91,14 +91,25 @@ def init_mlp(key, d_model: int, d_ff: int, variant: str, dtype=jnp.float32):
     }
 
 
+def matmul(x, w):
+    """``x @ w`` for a plain array or a quantized ``{"q8", "scale"}``
+    weight dict (int8 values, per-out-channel scales — dispatched through
+    the fused dequant-matmul in ``kernels.ops``)."""
+    if isinstance(w, dict) and "q8" in w:
+        from repro.kernels import ops as kops
+        return kops.quant_matmul(x, w)
+    return x @ w
+
+
 def mlp(params, x, variant: str):
     if variant == "swiglu":
-        act = jax.nn.silu(x @ params["w_gate"])
-        return (act * (x @ params["w_up"])) @ params["w_down"]
+        act = jax.nn.silu(matmul(x, params["w_gate"]))
+        return matmul(act * matmul(x, params["w_up"]), params["w_down"])
     if variant == "geglu":
-        act = jax.nn.gelu(x @ params["w_gate"], approximate=True)
-        return (act * (x @ params["w_up"])) @ params["w_down"]
-    return jax.nn.gelu(x @ params["w_up"], approximate=True) @ params["w_down"]
+        act = jax.nn.gelu(matmul(x, params["w_gate"]), approximate=True)
+        return matmul(act * matmul(x, params["w_up"]), params["w_down"])
+    return matmul(jax.nn.gelu(matmul(x, params["w_up"]), approximate=True),
+                  params["w_down"])
 
 
 # --------------------------------------------------------------------------

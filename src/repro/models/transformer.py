@@ -578,8 +578,10 @@ def tree_verify_step(params, cfg: ModelConfig, node_tokens, node_positions,
 
 
 # distance of the cache "length" axis from the trailing axis, per buffer name
-# (buffers may carry an extra leading `reps` dim when stacked for scan)
-CACHE_LEN_AXIS_FROM_END = {"k": 3, "v": 3, "c_kv": 2, "k_rope": 2}
+# (buffers may carry an extra leading `reps` dim when stacked for scan);
+# k_scale/v_scale are the int8 layout's per-row scales [B, L, KV]
+CACHE_LEN_AXIS_FROM_END = {"k": 3, "v": 3, "c_kv": 2, "k_rope": 2,
+                           "k_scale": 2, "v_scale": 2}
 
 
 def cache_len_axis(name: str, arr) -> int:

@@ -114,6 +114,10 @@ class DBStats:
     ``tick_dispatches`` traces the overlapped backend's ring ticks per
     executed timestep — exactly 1 every timestep (the ring must advance
     even when no entry is pending); empty on the flush/local backends.
+    ``accepted`` / ``proposed`` count speculative verify decisions per
+    uid (a hit accepts the drafted node, a miss falls back to the target
+    token); their totals give the run's aggregate ``acceptance_rate`` —
+    the regression currency of the int8 serving path.
     """
     timesteps: int = 0
     total_commits: int = 0
@@ -121,6 +125,10 @@ class DBStats:
     occupancy: List[int] = dataclasses.field(default_factory=list)
     verify_dispatches: List[int] = dataclasses.field(default_factory=list)
     tick_dispatches: List[int] = dataclasses.field(default_factory=list)
+    accepted: Dict[int, int] = dataclasses.field(default_factory=dict)
+    proposed: Dict[int, int] = dataclasses.field(default_factory=dict)
+    total_accepted: int = 0
+    total_proposed: int = 0
 
     @property
     def tokens_per_timestep(self) -> float:
@@ -129,6 +137,24 @@ class DBStats:
     @property
     def peak_occupancy(self) -> int:
         return max(self.occupancy) if self.occupancy else 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Aggregate accepted/proposed over every retired request."""
+        return (self.total_accepted / self.total_proposed
+                if self.total_proposed else 0.0)
+
+    def acceptance_of(self, uid: int) -> float:
+        prop = self.proposed.get(uid, 0)
+        return self.accepted.get(uid, 0) / prop if prop else 0.0
+
+    def record_acceptance(self, uid: int, st: GenStats) -> None:
+        """Fold one request's verify decisions into the per-uid and
+        aggregate counters (called at retire)."""
+        self.accepted[uid] = st.hits
+        self.proposed[uid] = st.hits + st.misses
+        self.total_accepted += st.hits
+        self.total_proposed += st.hits + st.misses
 
 
 class SpecPipeDBEngine:
@@ -507,6 +533,7 @@ class SpecPipeDBEngine:
                     time.perf_counter() - a.t0, st.stats)
                 self.stats.per_request[a.req.uid] = st.stats
                 self.stats.total_commits += st.stats.commits
+                self.stats.record_acceptance(a.req.uid, st.stats)
                 self.trees.release_row(slot)
                 if self.overlapped:
                     # kill the retired request's in-flight ring layers and

@@ -115,6 +115,23 @@ class KVArena(SlotPool):
         self.max_len, self.tree_capacity = max_len, tree_capacity
         self._stacked: Optional[list] = None
 
+    def bytes_per_slot(self) -> int:
+        """KV bytes one slot pins across all four arenas (model + tree,
+        target + draft), computed from abstract shapes — no allocation.
+        This is the admission currency of the int8 serving path: the
+        quantized layout (int8 rows + one fp32 scale per kv-head row)
+        roughly quarters this, so the same byte budget admits ~4x the
+        slots (the CI gate requires >=1.9x)."""
+        total = 0
+        for fn, cap in ((self.target.init_cache, self.max_len),
+                        (self.draft.init_cache, self.max_len),
+                        (self.target.init_tree_caches, self.tree_capacity),
+                        (self.draft.init_tree_caches, self.tree_capacity)):
+            shapes = jax.eval_shape(lambda f=fn, c=cap: f(1, c))
+            total += sum(leaf.size * leaf.dtype.itemsize
+                         for leaf in jax.tree_util.tree_leaves(shapes))
+        return total
+
     def _ensure(self) -> None:
         if self._stacked is None:
             self._stacked = [

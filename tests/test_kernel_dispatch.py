@@ -1,9 +1,14 @@
 """REPRO_USE_PALLAS_ATTN=1 path: kernel-backed decode / tree-verify must
-match the jnp path exactly (the kernels run in interpret mode on CPU)."""
+match the jnp path exactly (the kernels run in interpret mode on CPU).
+Plus the dispatch-policy seams: per-call ``interpret=`` overrides resolved
+at call time (no reimport), and the ``USE_PALLAS_QUANT`` kernel-vs-oracle
+policy for the fused dequant-matmul."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.kernels import ops, ref
 from repro.models import attention as A
 from repro.models import transformer as tf
 
@@ -57,3 +62,107 @@ def test_kernel_tree_verify_matches_jnp(tiny_dense):
     finally:
         A.USE_PALLAS_ATTN = old
     np.testing.assert_allclose(got[:, 0], ref[:, 0], rtol=2e-4, atol=2e-4)
+
+
+def test_interpret_resolved_per_call_not_at_import():
+    """ops.INTERPRET is only the *default*: reassigning it (or passing
+    interpret=) takes effect without reimporting the module — the env var
+    must not be frozen into the dispatchers at import time."""
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 2, 1, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 16, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 16, 32)).astype(np.float32))
+    want = ref.decode_attention_ref(q, k, v, 12)
+
+    old = ops.INTERPRET
+    try:
+        # on CPU, interpret=False would fail inside pallas_call — the
+        # per-call override must rescue a flipped module default...
+        ops.INTERPRET = False
+        out = ops.decode_attention(q, k, v, 12, block_k=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        # ...and reassigning the module default (no reimport) must be
+        # honoured too
+        ops.INTERPRET = True
+        out = ops.decode_attention(q, k, v, 12, block_k=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+    finally:
+        ops.INTERPRET = old
+
+
+def test_quant_matmul_policy_kernel_vs_oracle():
+    """use_kernel=None follows USE_PALLAS_QUANT; both backends agree and
+    flipping the module flag needs no reimport."""
+    from repro.kernels.quant import quantize_weight
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(3, 5, 24)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(24, 10)).astype(np.float32))
+    wq = quantize_weight(w, 1)
+    want = ref.dequant_matmul_ref(x.reshape(-1, 24), wq["q8"],
+                                  wq["scale"]).reshape(3, 5, 10)
+
+    oracle = ops.quant_matmul(x, wq, use_kernel=False)
+    kernel = ops.quant_matmul(x, wq, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(oracle), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    old = ops.USE_PALLAS_QUANT
+    try:
+        ops.USE_PALLAS_QUANT = True
+        flagged = ops.quant_matmul(x, wq)      # default follows the flag
+        np.testing.assert_allclose(np.asarray(flagged), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+    finally:
+        ops.USE_PALLAS_QUANT = old
+
+
+def test_quant_matmul_higher_rank_contraction():
+    """Attention projections contract >1 axis (e.g. w_o [H, hd, D]): the
+    dict convention (first q8.ndim - scale.ndim axes contract) must
+    reproduce the einsum on the dequantized weight."""
+    from repro.kernels.quant import dequantize_weight, quantize_weight
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(2, 3, 4, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 8, 16)).astype(np.float32))
+    wq = quantize_weight(w, 2)
+    assert wq["scale"].shape == (16,)
+    got = ops.quant_matmul(x, wq, use_kernel=False)
+    want = jnp.einsum("bshd,hdo->bso", x, dequantize_weight(wq))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("use_pallas_attn", [False, True])
+def test_kernel_paths_match_on_quantized_model(tiny_dense, use_pallas_attn):
+    """Quantized tiny model: the Pallas-attention path (fused in-kernel KV
+    dequant) must match the jnp path (dense dequant) on decode."""
+    import dataclasses
+    cfg = dataclasses.replace(tiny_dense, quant="int8")
+    params = tf.init_model(jax.random.PRNGKey(0), tiny_dense)
+    from repro.core.speculative import ModelBundle
+    qb = ModelBundle(params, tiny_dense).quantize()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128)
+
+    def go(flag):
+        old = A.USE_PALLAS_ATTN
+        try:
+            A.USE_PALLAS_ATTN = flag
+            cache = tf.init_cache(cfg, 2, 16)
+            logits, cache = tf.prefill(qb.params, cfg, toks, cache)
+            assert cache["stack"][0]["k"].dtype == jnp.int8
+            tok = jnp.argmax(logits, -1)
+            out, _ = tf.decode_step(qb.params, cfg, tok, cache, 8)
+            return np.asarray(out)
+        finally:
+            A.USE_PALLAS_ATTN = old
+
+    ref_out = go(False)
+    if use_pallas_attn:
+        got = go(True)
+        np.testing.assert_allclose(got, ref_out, rtol=2e-4, atol=2e-4)
+    else:
+        assert np.isfinite(ref_out).all()

@@ -1,0 +1,216 @@
+"""Quantized serving path (int8 KV arena + int8 weights).
+
+Regression strategy: quantized outputs are NOT bitwise fp32 outputs (int8
+noise legitimately flips near-ties), so the pins are (a) *within-quant*
+bit-identity — the quant DB engine must bit-match the quant single-request
+engine, exactly like the fp32 equivalence pin, (b) the DBStats
+accepted/proposed acceptance counters, and (c) the arena-bytes contract:
+an int8 slot costs ≤0.55x the fp32 slot, i.e. ≥1.9x the slots at an equal
+byte budget (ISSUE 8 acceptance criteria; the measured ratio is 0.3125).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipedec import PipeDecConfig, PipeDecEngine
+from repro.core.speculative import QUANT_WEIGHTS, ModelBundle
+from repro.kernels.quant import dequantize_weight, is_quantized
+from repro.models import transformer as tf
+from repro.serving import KVArena, Request, SpecPipeDBEngine
+
+PCFG = PipeDecConfig(n_stages=3, width=4, branch=2)
+MAX_LEN = 128
+
+QUANT_BYTES_RATIO_MAX = 0.55
+QUANT_SLOTS_MULT_MIN = 1.9
+
+
+@pytest.fixture(scope="module")
+def bundles(tiny_dense, tiny_draft):
+    tp = tf.init_model(jax.random.PRNGKey(0), tiny_dense)
+    dp = tf.init_model(jax.random.PRNGKey(9), tiny_draft)
+    return ModelBundle(tp, tiny_dense), ModelBundle(dp, tiny_draft)
+
+
+@pytest.fixture(scope="module")
+def qbundles(bundles):
+    target, draft = bundles
+    return target.quantize(), draft.quantize()
+
+
+def _mk_reqs(seed, n, arrivals=None, max_new=None):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(0, 100, size=int(rng.integers(3, 8)))
+        reqs.append(Request(
+            i, prompt.astype(np.int32),
+            int(max_new[i]) if max_new else int(rng.integers(3, 7)),
+            arrival_t=int(arrivals[i]) if arrivals else 0))
+    return reqs
+
+
+def test_quantize_bundle_structure(bundles, qbundles):
+    """quantize() swaps exactly the projection weights for {"q8","scale"}
+    dicts (original shapes, per-out-channel scales), flips cfg.quant, and
+    leaves the fp32 bundle untouched."""
+    target, _ = bundles
+    q_target, _ = qbundles
+    assert q_target.cfg.quant == "int8" and target.cfg.quant == ""
+
+    flat = jax.tree_util.tree_leaves_with_path(
+        q_target.params, is_leaf=is_quantized)
+    n_quant = 0
+    for path, leaf in flat:
+        name = getattr(path[-1], "key", None)
+        if is_quantized(leaf):
+            n_quant += 1
+            assert name in QUANT_WEIGHTS
+            assert leaf["q8"].dtype == jnp.int8
+            assert leaf["scale"].dtype == jnp.float32
+            # dequantized view stays close to the fp32 original
+            orig = target.params
+            for p in path[:-1]:
+                orig = orig[p.key] if hasattr(p, "key") else orig[p.idx]
+            orig = orig[name]
+            assert leaf["q8"].shape == orig.shape
+            amax = np.max(np.abs(np.asarray(orig)))
+            # stacked leaves keep a leading reps dim on q8 AND scale
+            nin = leaf["q8"].ndim - leaf["scale"].ndim
+            stacked = leaf["scale"].shape != leaf["q8"].shape[nin:]
+            deq = jax.vmap(dequantize_weight)(leaf) if stacked \
+                else dequantize_weight(leaf)
+            np.testing.assert_allclose(np.asarray(deq), np.asarray(orig),
+                                       atol=amax / 254 + 1e-7)
+        else:
+            assert name not in QUANT_WEIGHTS, \
+                f"projection {name} left unquantized"
+    assert n_quant > 0
+    # the fp32 params were not mutated
+    assert not any(is_quantized(x) for x in
+                   jax.tree_util.tree_leaves(target.params,
+                                             is_leaf=is_quantized))
+
+
+def test_quant_cache_layout_int8(qbundles):
+    """The quantized bundle's caches carry int8 k/v plus f32 per-row
+    scales, and all name-driven slot helpers flow the scale leaves."""
+    q_target, _ = qbundles
+    cache = q_target.init_cache(1, 16)
+    sub = cache["stack"][0]
+    assert sub["k"].dtype == jnp.int8 and sub["v"].dtype == jnp.int8
+    assert sub["k_scale"].dtype == jnp.float32
+    assert sub["k_scale"].shape == sub["k"].shape[:-1]
+    assert set(tf.CACHE_LEN_AXIS_FROM_END) >= {"k_scale", "v_scale"}
+
+
+def test_quant_db_bitmatches_quant_single(qbundles):
+    """The strong pin: the quant DB engine (slot contention, staggered
+    arrivals, fused dispatch) bit-matches the quant single-request engine
+    per uid — quantization must not break the DB equivalence contract."""
+    q_target, q_draft = qbundles
+    reqs = _mk_reqs(3, 4, arrivals=[0, 1, 3, 5], max_new=[4, 5, 3, 4])
+    single = PipeDecEngine(q_target, q_draft, PCFG, max_len=MAX_LEN)
+    want = {r.uid: single.generate(r.prompt, r.max_new_tokens)[0]
+            for r in reqs}
+
+    eng = SpecPipeDBEngine(q_target, q_draft, PCFG, max_len=MAX_LEN,
+                           max_slots=2)
+    for r in reqs:
+        eng.submit(r)
+    res = eng.run()
+    assert set(res) == set(want)
+    for uid, tokens in want.items():
+        np.testing.assert_array_equal(res[uid].tokens, tokens,
+                                      err_msg=f"uid={uid}")
+    assert eng.stats.peak_occupancy == 2
+
+
+def test_quant_run_is_deterministic(qbundles):
+    q_target, q_draft = qbundles
+    reqs = _mk_reqs(4, 3)
+    outs = []
+    for _ in range(2):
+        eng = SpecPipeDBEngine(q_target, q_draft, PCFG, max_len=MAX_LEN,
+                               max_slots=2)
+        for r in reqs:
+            eng.submit(r)
+        outs.append(eng.run())
+    for uid in outs[0]:
+        np.testing.assert_array_equal(outs[0][uid].tokens,
+                                      outs[1][uid].tokens)
+
+
+def test_quant_arena_bytes_gates(bundles, qbundles):
+    """ISSUE 8 acceptance: an int8 slot ≤0.55x fp32 bytes, so an equal
+    byte budget admits ≥1.9x the slots."""
+    target, draft = bundles
+    q_target, q_draft = qbundles
+    fp32_b = KVArena(target, draft, slots=1, max_len=MAX_LEN,
+                     tree_capacity=16).bytes_per_slot()
+    int8_b = KVArena(q_target, q_draft, slots=1, max_len=MAX_LEN,
+                     tree_capacity=16).bytes_per_slot()
+    assert int8_b / fp32_b <= QUANT_BYTES_RATIO_MAX, (int8_b, fp32_b)
+    assert fp32_b // int8_b >= QUANT_SLOTS_MULT_MIN
+
+
+def test_dbstats_acceptance_counters(bundles):
+    """Per-request accepted/proposed counters on DBStats: every retired
+    uid records hits/(hits+misses) from its GenStats, and the aggregate
+    acceptance_rate is the ratio of the totals."""
+    target, draft = bundles
+    reqs = _mk_reqs(5, 3, max_new=[4, 5, 3])
+    eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                           max_slots=2)
+    for r in reqs:
+        eng.submit(r)
+    res = eng.run()
+
+    s = eng.stats
+    for r in reqs:
+        st = res[r.uid].stats
+        assert s.accepted[r.uid] == st.hits
+        assert s.proposed[r.uid] == st.hits + st.misses
+        if s.proposed[r.uid]:
+            assert s.acceptance_of(r.uid) == pytest.approx(
+                st.hits / (st.hits + st.misses))
+    assert s.total_accepted == sum(s.accepted.values())
+    assert s.total_proposed == sum(s.proposed.values())
+    assert 0.0 <= s.acceptance_rate <= 1.0
+    assert s.acceptance_rate == pytest.approx(
+        s.total_accepted / s.total_proposed)
+
+
+def test_quant_acceptance_tracks_fp32(bundles, qbundles):
+    """Acceptance-rate regression currency: on the same workload the quant
+    engine's aggregate acceptance stays within the committed tolerance of
+    fp32 (sharded_check --quant gates 0.15; random tiny models sit well
+    inside it)."""
+    rates = {}
+    for name, (t, d) in (("fp32", bundles), ("int8", qbundles)):
+        eng = SpecPipeDBEngine(t, d, PCFG, max_len=MAX_LEN, max_slots=2)
+        for r in _mk_reqs(6, 3, max_new=[5, 4, 5]):
+            eng.submit(r)
+        eng.run()
+        rates[name] = eng.stats.acceptance_rate
+    assert abs(rates["int8"] - rates["fp32"]) <= 0.15, rates
+
+
+def test_quantize_rejects_unsupported_arch(tiny_hybrid_ssm):
+    """int8 serving is dense-attention only: recurrent/MLA/MoE bundles
+    must fail loudly at quantize() time, not decode garbage."""
+    bundle = ModelBundle(tf.init_model(jax.random.PRNGKey(1),
+                                       tiny_hybrid_ssm), tiny_hybrid_ssm)
+    with pytest.raises(AssertionError, match="dense attention only"):
+        bundle.quantize()
+
+
+def test_quant_flag_on_config_is_plumbed(tiny_dense):
+    cfg = dataclasses.replace(tiny_dense, quant="int8")
+    cache = tf.init_cache(cfg, 1, 8)
+    assert cache["stack"][0]["k"].dtype == jnp.int8
+    assert tf.init_cache(tiny_dense, 1, 8)["stack"][0]["k"].dtype \
+        == jnp.float32
