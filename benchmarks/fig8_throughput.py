@@ -117,6 +117,12 @@ def measure_sharded_engines(w: int, c: int = 4, *, slots: int = 3,
         ("overlapped", OverlappedShardedExecutor, {}),
         ("overlapped_ungated", OverlappedShardedExecutor,
          {"gate_ctrl": False}),
+        # paged arenas + chunked prefill: the 32-token prompts exceed the
+        # 16-token prefill lane, so every admission streams through the
+        # ring in 2 chunks — still ONE tick per timestep, zero separate
+        # prefill dispatches, outputs bit-identical to the dense runs
+        ("overlapped_paged", OverlappedShardedExecutor,
+         {"paged": True, "page": 16, "prefill_cap": 16}),
     )
     for name, cls, kw in variants:
         ex = cls(target, draft, slots=slots, max_len=256,
@@ -161,13 +167,91 @@ def measure_sharded_engines(w: int, c: int = 4, *, slots: int = 3,
     assert all(
         np.array_equal(results["flush"][u].tokens, results[v][u].tokens)
         for u in results["flush"]
-        for v in ("overlapped", "overlapped_ungated")), \
+        for v in ("overlapped", "overlapped_ungated", "overlapped_paged")), \
         "schedules must agree token-for-token"
     assert out["overlapped"]["separate_prefill_dispatches"] == 0, \
         "overlapped admissions must prefill in-ring"
+    assert out["overlapped_paged"]["separate_prefill_dispatches"] == 0, \
+        "chunked prefill must keep long prompts in-ring"
+    assert out["overlapped_paged"]["dispatch_counts"]["prefill_chunks"] \
+        > len(prompts), "32-token prompts must chunk past the 16-token lane"
     assert out["overlapped_ungated"]["ctrl_active_rate"] == 1.0
     out["bit_identical"] = True
     return out
+
+
+def measure_paged_capacity(*, page: int = 16, max_len: int = 256,
+                           tree_capacity: int = 64, dense_slots: int = 3,
+                           prompt_len: int = 32, new_tokens: int = 24):
+    """Paged-vs-dense KV capacity at a FIXED HBM budget (the tentpole
+    claim of the paged arena): a dense slot pins ``max_len`` model rows
+    plus the full tree capacity no matter how short the request, while
+    the paged allocator backs only the request's *horizon*
+    (prompt + budget + tree slack) in ``page``-row blocks.  The budget is
+    ``dense_slots`` dense slots' worth of bytes; the paged count is
+    measured by ACTUALLY admitting requests through the real
+    ``PagedKVArena`` fit-check until its pools run dry.  CI bench-smoke
+    gates the slots ratio at >= 1.5x and the bytes-per-active-token
+    ratio below 1."""
+    import jax
+
+    from repro.models import transformer as tf
+    from repro.serving import KVArena, PagedKVArena, Request
+
+    target, draft = common.trained_pair()
+    dense_bps = KVArena(target, draft, slots=1, max_len=max_len,
+                        tree_capacity=tree_capacity).bytes_per_slot()
+    budget = dense_slots * dense_bps
+
+    def row_bytes(fn, rows):
+        """Bytes per length-row of one cache's paged (KV) leaves."""
+        shapes = jax.eval_shape(lambda: fn(1, rows))
+        leaves = jax.tree_util.tree_flatten_with_path(
+            shapes, is_leaf=lambda x: x is None)[0]
+        return sum(leaf.size * leaf.dtype.itemsize // rows
+                   for path, leaf in leaves
+                   if leaf is not None and getattr(path[-1], "key", None)
+                   in tf.CACHE_LEN_AXIS_FROM_END)
+
+    model_row_b = row_bytes(target.init_cache, max_len) \
+        + row_bytes(draft.init_cache, max_len)
+    tree_row_b = row_bytes(target.init_tree_caches, tree_capacity) \
+        + row_bytes(draft.init_tree_caches, tree_capacity)
+
+    horizon = min(max_len, prompt_len + new_tokens + tree_capacity)
+    bm = -(-horizon // page)
+    bt = -(-tree_capacity // page)
+    req_bytes = (bm * model_row_b + bt * tree_row_b) * page
+    # split the byte budget across the two pools in per-request proportion
+    model_share = bm * model_row_b / (bm * model_row_b + bt * tree_row_b)
+    model_blocks = int(budget * model_share // (model_row_b * page))
+    tree_blocks = int(budget * (1 - model_share) // (tree_row_b * page))
+
+    arena = PagedKVArena(target, draft, slots=8 * dense_slots,
+                         max_len=max_len, tree_capacity=tree_capacity,
+                         page=page, model_blocks=model_blocks,
+                         tree_blocks=tree_blocks)
+    req = Request(0, np.zeros(prompt_len, np.int32), new_tokens)
+    paged_slots = 0
+    while arena.fits(req):
+        arena.bind(arena.alloc(), req)
+        paged_slots += 1
+    return {
+        "page": page, "max_len": max_len, "tree_capacity": tree_capacity,
+        "prompt_len": prompt_len, "new_tokens": new_tokens,
+        "horizon_rows": horizon,
+        "budget_bytes": budget,
+        "dense_slots": dense_slots,
+        "dense_bytes_per_slot": dense_bps,
+        "paged_bytes_per_request": req_bytes,
+        "paged_slots": paged_slots,
+        "slots_ratio": round(paged_slots / dense_slots, 4),
+        # bytes the arena pins per token the request can actually use
+        "dense_bytes_per_active_token": round(dense_bps / horizon, 1),
+        "paged_bytes_per_active_token": round(req_bytes / horizon, 1),
+        "bytes_per_active_token_ratio": round(req_bytes / dense_bps, 4),
+        "page_counters": arena.pages.counters(),
+    }
 
 
 def measure_arena_bytes(*, max_len: int = 256, tree_capacity: int = 64):
@@ -218,6 +302,14 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
         print(f"  arena bytes/slot: int8 {arena['int8']} vs fp32 "
               f"{arena['fp32']} ({arena['ratio']:.3f}x -> "
               f"{arena['slots_multiplier']}x slots)")
+    paged_cap = measure_paged_capacity()
+    if verbose:
+        print(f"  paged capacity: {paged_cap['paged_slots']} slots vs "
+              f"{paged_cap['dense_slots']} dense at the same byte budget "
+              f"({paged_cap['slots_ratio']:.2f}x); "
+              f"{paged_cap['paged_bytes_per_active_token']:.0f} vs "
+              f"{paged_cap['dense_bytes_per_active_token']:.0f} "
+              f"bytes/active token")
     sharded = measure_sharded_engines(w)
     over, ung = sharded["overlapped"], sharded["overlapped_ungated"]
     if verbose:
@@ -233,6 +325,13 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
               f"{over['dispatch_counts'].get('prefill_in_ring', 0)} "
               f"prefills rode the ring "
               f"({over['separate_prefill_dispatches']} separate)")
+        pg = sharded["overlapped_paged"]
+        print(f"  paged overlapped: "
+              f"{pg['ticks_per_timestep']:.2f} ticks/timestep with "
+              f"{pg['dispatch_counts'].get('prefill_chunks', 0)} prefill "
+              f"chunks over "
+              f"{pg['dispatch_counts'].get('prefill_in_ring', 0)} "
+              f"admissions (chunked prefill), outputs bit-identical")
 
     # modelled curves.  The sim's ctrl term is priced with the MEASURED
     # active rate; t_ctrl is modelled as one stage's tree-buffer pass
@@ -299,6 +398,7 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
         "measured_engine": measured,
         "measured_engine_sharded": sharded,
         "arena_bytes_per_slot": arena,
+        "paged_capacity": paged_cap,
     }
     if out_json:
         with open(out_json, "w") as f:

@@ -19,10 +19,17 @@ re-inflates the tick:
     channel must keep closing on quiet ticks;
   * admission prefill must keep riding the tick —
     ``separate_prefill_dispatches == 0`` and ``prefill_in_ring`` > 0;
-  * the flush / overlapped / ungated schedules must stay token-for-token
-    ``bit_identical``;
+  * the flush / overlapped / ungated / paged schedules must stay
+    token-for-token ``bit_identical``;
   * the quantized KV arena must keep its capacity win — int8
-    bytes-per-slot ≤ 0.55x fp32 (≥1.9x slots at an equal byte budget).
+    bytes-per-slot ≤ 0.55x fp32 (≥1.9x slots at an equal byte budget);
+  * the paged overlapped schedule must keep ``ticks_per_timestep`` at
+    exactly 1.0 while its prompts stream through the ring in chunks
+    (``prefill_chunks`` > admissions, 0 separate prefill dispatches);
+  * the paged allocator must keep its fixed-HBM-budget capacity win —
+    ≥1.5x the dense slot count (measured through the real
+    ``PagedKVArena`` admission fit-check) and fewer bytes per active
+    token.
 
 Wall-clock numbers (``tick_cost_s``) are reported but never gated —
 runner noise is not a regression.  The regenerated JSON is written to
@@ -80,6 +87,31 @@ def check(baseline: dict, fresh: dict, rate_slack: float):
          f"(int8 {arena['int8']} vs fp32 {arena['fp32']})")
     gate(arena["slots_multiplier"] >= 1.9,
          f"int8 arena slots multiplier {arena['slots_multiplier']} >= 1.9")
+
+    # paged arena: chunked prefill keeps the one-tick schedule, and the
+    # block allocator's capacity win at a fixed HBM budget holds
+    paged = new["overlapped_paged"]
+    gate(paged["ticks_per_timestep"] == 1.0,
+         f"paged overlapped ticks_per_timestep == 1.0 with chunked "
+         f"prefill (got {paged['ticks_per_timestep']})")
+    gate(paged["separate_prefill_dispatches"] == 0,
+         "chunked prefill keeps long prompts in-ring (0 separate "
+         "prefill dispatches)")
+    gate(paged["dispatch_counts"].get("prefill_chunks", 0)
+         > paged["dispatch_counts"].get("prefill_in_ring", 0),
+         f"long prompts actually chunk "
+         f"({paged['dispatch_counts'].get('prefill_chunks', 0)} chunks "
+         f"over {paged['dispatch_counts'].get('prefill_in_ring', 0)} "
+         f"admissions)")
+    cap = fresh["paged_capacity"]
+    gate(cap["slots_ratio"] >= 1.5,
+         f"paged slots at a fixed byte budget {cap['paged_slots']} >= "
+         f"1.5x dense {cap['dense_slots']} "
+         f"(ratio {cap['slots_ratio']})")
+    gate(cap["paged_bytes_per_active_token"]
+         < cap["dense_bytes_per_active_token"],
+         f"paged bytes/active-token {cap['paged_bytes_per_active_token']} "
+         f"< dense {cap['dense_bytes_per_active_token']}")
 
     print(f"  info tick_cost_s gated={over_n.get('tick_cost_s')} "
           f"ungated={new['overlapped_ungated'].get('tick_cost_s')} "

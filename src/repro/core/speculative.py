@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tree as tree_lib
+from repro.models import paging
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 
@@ -69,13 +70,19 @@ def _tree_verify_rows_impl(params, node_tokens, node_positions, tree_mask,
     bucket size (power-of-two slot-count bucketing), never per step.
     """
     cache_b = tf.slice_cache_rows(cache, 0, bucket)
-    tc_b = tf.slice_cache_rows(tree_caches, 0, bucket)
+    tc_view = tf.slice_cache_rows(tree_caches, 0, bucket)
+    # paged arenas: gather dense views at dispatch entry (paged leaves
+    # cannot ride the layer scan) and scatter the updated tree rows back
+    # through the block tables at exit — still ONE dispatch per timestep
     logits, tc_b = tf.tree_verify_step(
         params, cfg=cfg, node_tokens=node_tokens,
-        node_positions=node_positions, tree_mask=tree_mask, cache=cache_b,
-        cache_len=cache_len, tree_caches=tc_b,
+        node_positions=node_positions, tree_mask=tree_mask,
+        cache=paging.densify(cache_b), cache_len=cache_len,
+        tree_caches=paging.densify(tc_view),
         tree_write_index=tree_write_index, enc_out=enc_out,
         window_override=window_override)
+    if paging.any_paged(tc_view):
+        tc_b = paging.repaginate(tc_view, tc_b)
     return logits, tf.update_cache_rows(tree_caches, tc_b, 0)
 
 
@@ -208,21 +215,29 @@ def remap_tree_caches(tree_caches, index_map, capacity: int):
     writes) and, when stacked for scan-over-layers, a leading reps dim — the
     length axis is resolved per buffer name.
     """
-    def gather(path, buf):
-        if buf is None:
-            return None
-        name = path[-1].key
-        ax = tf.cache_len_axis(name, buf)
-        cap = buf.shape[ax]
+    def perm(cap):
         im = jnp.concatenate([
             index_map,
             jnp.full((cap - index_map.shape[0],), -1, jnp.int32)])
         # inverse permutation: g[new] = old (dropped rows pushed to the end)
-        g = jnp.argsort(jnp.where(im >= 0, im, cap + jnp.arange(cap)))
-        return jnp.take(buf, g, axis=ax)
+        return jnp.argsort(jnp.where(im >= 0, im, cap + jnp.arange(cap)))
+
+    def gather(path, buf):
+        if buf is None:
+            return None
+        if paging.is_paged(buf):
+            # paged rows: gather the permuted dense rows through the block
+            # table and scatter them back — same permutation per slot
+            g = perm(buf.length)
+            idx = jnp.broadcast_to(g[None], (buf.slots, buf.length))
+            return paging.from_dense(buf, paging.take_len_rows(buf, idx))
+        name = path[-1].key
+        ax = tf.cache_len_axis(name, buf)
+        return jnp.take(buf, perm(buf.shape[ax]), axis=ax)
 
     return jax.tree_util.tree_map_with_path(
-        gather, tree_caches, is_leaf=lambda x: x is None)
+        gather, tree_caches,
+        is_leaf=lambda x: x is None or paging.is_paged(x))
 
 
 def draft_candidates(logits: jnp.ndarray, valid: jnp.ndarray, c: int):

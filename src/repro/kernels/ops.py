@@ -104,6 +104,62 @@ def tree_attention(q, k_past, v_past, k_tree, v_tree, tree_mask, past_len,
     return out.astype(q.dtype)
 
 
+def paged_tree_attention(q, k_pool, v_pool, table, kt_pool, vt_pool,
+                         t_table, tree_mask, past_len, *, scale=None,
+                         use_kernel: bool = True,
+                         interpret: Optional[bool] = None,
+                         k_scale=None, v_scale=None, kt_scale=None,
+                         vt_scale=None):
+    """Two-level tree attention over *paged* caches: K/V live in blocked
+    pools [Nb,KV,page,hd] indexed through per-slot block tables [B,mb]
+    (``models.paging``), gathered tile-by-tile inside the kernels via
+    scalar-prefetch table refs.  Same LSE combination as
+    ``tree_attention``; int8 pools pass blocked per-row scale pools
+    [Nb,KV,page]."""
+    if not use_kernel:
+        return ref.paged_tree_attention_ref(
+            q, k_pool, v_pool, table, kt_pool, vt_pool, t_table, tree_mask,
+            past_len, k_scale=k_scale, v_scale=v_scale, kt_scale=kt_scale,
+            vt_scale=vt_scale, scale=scale)
+    from repro.kernels.paged import (paged_flash_attention_lse,
+                                     paged_tree_block_attention)
+    it = _interp(interpret)
+    op, mp, lp = paged_flash_attention_lse(q, k_pool, v_pool, table,
+                                           past_len, k_scale=k_scale,
+                                           v_scale=v_scale, scale=scale,
+                                           interpret=it)
+    ot, mt, lt = paged_tree_block_attention(q, kt_pool, vt_pool, t_table,
+                                            tree_mask, k_scale=kt_scale,
+                                            v_scale=vt_scale, scale=scale,
+                                            interpret=it)
+    out = combine_lse([(op, mp, lp), (ot, mt, lt)])
+    return out.astype(q.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, table, kv_len, *, scale=None,
+                           window: int = 0, use_kernel: bool = True,
+                           interpret: Optional[bool] = None,
+                           k_scale=None, v_scale=None):
+    """Flash-decode over a paged KV cache: pools [Nb,KV,page,hd] +
+    block table [B,mb]; ``kv_len`` scalar or per-row [B]."""
+    if not use_kernel:
+        return ref.paged_decode_attention_ref(
+            q, k_pool, v_pool, table, kv_len, k_scale=k_scale,
+            v_scale=v_scale, window=window, scale=scale)
+    from repro.kernels.paged import paged_flash_attention_lse
+    n = q.shape[2]
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    qpos = jnp.broadcast_to((kv_len - 1).reshape(-1, 1)
+                            if kv_len.ndim else kv_len - 1,
+                            (q.shape[0], n))
+    o, _, _ = paged_flash_attention_lse(q, k_pool, v_pool, table, kv_len,
+                                        qpos, k_scale=k_scale,
+                                        v_scale=v_scale, scale=scale,
+                                        window=window,
+                                        interpret=_interp(interpret))
+    return o.astype(q.dtype)
+
+
 def prefill_attention(q, k, v, positions, *, scale=None, window: int = 0,
                       block_k: int = 512, block_q: int = 512,
                       interpret: Optional[bool] = None):

@@ -100,3 +100,57 @@ def decode_attention_quant_ref(q, k, v, kv_len, *, k_scale, v_scale,
     return decode_attention_ref(q, _dequant(k, k_scale),
                                 _dequant(v, v_scale), kv_len,
                                 window=window, scale=scale)
+
+
+def paged_gather_ref(pool, table, length):
+    """Dense view of a paged pool: pool [Nb, KV, page, hd] (or scales
+    [Nb, KV, page]) gathered through ``table`` [B, mb] into
+    [B, KV, length, ...] — the oracle form of the kernels' in-BlockSpec
+    table indirection (unallocated logical blocks read physical block 0,
+    the null block, whose rows every mask excludes)."""
+    page = pool.shape[2]
+    ls = jnp.arange(length)
+    blk = table[:, ls // page]                       # [B, L]
+    g = pool[blk]                                    # [B, L, KV, page, ...]
+    r = (ls % page).reshape(1, length, 1, 1, *([1] * (g.ndim - 4)))
+    r = jnp.broadcast_to(r, g.shape[:3] + (1,) + g.shape[4:])
+    g = jnp.take_along_axis(g, r, axis=3).squeeze(3)  # [B, L, KV, ...]
+    return jnp.moveaxis(g, 1, 2)                     # [B, KV, L, ...]
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, table, kv_len, *,
+                               k_scale=None, v_scale=None, window=0,
+                               scale=None):
+    """Paged flash-decode oracle: gather the dense view through the block
+    table, then the dense reference (quant oracle when scales ride)."""
+    length = table.shape[1] * k_pool.shape[2]
+    k = paged_gather_ref(k_pool, table, length)
+    v = paged_gather_ref(v_pool, table, length)
+    if k_scale is not None:
+        k = _dequant(k, paged_gather_ref(k_scale, table, length))
+        v = _dequant(v, paged_gather_ref(v_scale, table, length))
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.ndim:
+        kv_len = kv_len.reshape(-1, 1, 1, 1)         # per-row [B]
+    return decode_attention_ref(q, k, v, kv_len, window=window, scale=scale)
+
+
+def paged_tree_attention_ref(q, k_pool, v_pool, table, kt_pool, vt_pool,
+                             t_table, tree_mask, past_len, *, k_scale=None,
+                             v_scale=None, kt_scale=None, vt_scale=None,
+                             scale=None):
+    """Paged two-level tree attention oracle: both halves gathered dense
+    through their tables, then the joint-softmax reference."""
+    lp = table.shape[1] * k_pool.shape[2]
+    tcap = tree_mask.shape[-1]
+    kp = paged_gather_ref(k_pool, table, lp)
+    vp = paged_gather_ref(v_pool, table, lp)
+    kt = paged_gather_ref(kt_pool, t_table, tcap)
+    vt = paged_gather_ref(vt_pool, t_table, tcap)
+    if k_scale is not None:
+        kp = _dequant(kp, paged_gather_ref(k_scale, table, lp))
+        vp = _dequant(vp, paged_gather_ref(v_scale, table, lp))
+        kt = _dequant(kt, paged_gather_ref(kt_scale, t_table, tcap))
+        vt = _dequant(vt, paged_gather_ref(vt_scale, t_table, tcap))
+    return tree_attention_ref(q, kp, vp, kt, vt, tree_mask, past_len,
+                              scale=scale)

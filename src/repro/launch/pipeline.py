@@ -72,21 +72,31 @@ Two executor schedules drive this tick (``serving.executor``):
         resolved future belongs to the slot's *current* tree.
       - **prefill-in-ring** (overlapped admission): with
         ``prefill_cap > 0`` the ring carries a second lane
-        (``p_act [S, B, Pcap, d]`` + per-slot ``p_len``/``p_on``) for
-        admission prefills.  A joining request's padded prompt enters at
-        stage 0 as a special layer kind the same tick the in-flight tree
-        layers advance; each stage applies its layers in *full* (prefill)
-        mode to the lane — gated by ``jax.lax.cond`` on "any prefill at
-        this stage", so the empty lane that rides most ticks is free —
-        writing the slot's model-cache rows [0, Pcap) stage by stage.
-        The prompt's last-position hidden state exits ``n_stages - 1``
-        ticks later (``p_last``/``p_valid``; the lane never touches the
-        tree exit, so the prefill is a *dead exit* there), and admitting
-        a request no longer costs the ring a separate dispatch or an
-        idle timestep.  Pad rows beyond ``p_len`` are causally masked at
-        positions < len and only ever overwrite model rows that the
-        growing ``model_len`` overwrites again before reading — outputs
-        stay bit-identical to the separate-dispatch prefill.
+        (``p_act [S, B, Pcap, d]`` + per-slot ``p_len``/``p_on``/
+        ``p_off``) for admission prefills.  A joining request's padded
+        prompt *chunk* enters at stage 0 as a special layer kind the
+        same tick the in-flight tree layers advance; each stage applies
+        its layers in *chunk* (prefill) mode to the lane — gated by
+        ``jax.lax.cond`` on "any prefill at this stage", so the empty
+        lane that rides most ticks is free — writing the slot's
+        model-cache rows [p_off, p_off + Pcap) stage by stage.  The
+        chunk's last-position hidden state exits ``n_stages - 1`` ticks
+        later (``p_last``/``p_valid``; the lane never touches the tree
+        exit, so the prefill is a *dead exit* there), and admitting a
+        request no longer costs the ring a separate dispatch or an idle
+        timestep.  Prompts longer than ``prefill_cap`` stream through
+        the lane over several consecutive ticks (*chunked prefill*):
+        the executor feeds chunk c at tick t+c with its row offset
+        ``p_off = c * Pcap``, so stage k sees chunk c at tick t+c+k —
+        strictly after it wrote chunk c-1's rows — and each chunk
+        attends over every earlier chunk's cached rows, which makes the
+        cached K/V bit-identical to a one-shot prefill (row projections
+        are row-independent; see ``attention.attn_prefill_chunk``).
+        Pad rows beyond ``p_len`` are causally masked at positions <
+        len and only ever overwrite model rows that the growing
+        ``model_len`` (or the next chunk) overwrites again before
+        reading — outputs stay bit-identical to the separate-dispatch
+        prefill.
 
 Supports attention-family architectures (dense / VLM / MoE-with-attention);
 recurrent families use chain-mode speculative decoding instead (DESIGN.md
@@ -194,9 +204,10 @@ def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32,
     is the identity and the stage skips the whole application).
 
     ``prefill_cap > 0`` adds the prefill lane (overlapped admission):
-    per-stage padded prompt activations ``p_act`` with their
-    ``p_len``/``p_on`` metadata, advancing one stage per tick like the
-    tree layers."""
+    per-stage padded prompt-chunk activations ``p_act`` with their
+    ``p_len``/``p_on``/``p_off`` metadata (``p_off`` is the chunk's
+    absolute row offset — the per-slot chunk cursor of chunked
+    prefill), advancing one stage per tick like the tree layers."""
     s, w = pcfg.n_stages, pcfg.width
     ring = {
         "act": jnp.zeros((s, batch, w, cfg.d_model), dtype),
@@ -220,6 +231,7 @@ def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32,
                                   dtype)
         ring["p_len"] = jnp.zeros((s, batch), jnp.int32)
         ring["p_on"] = jnp.zeros((s, batch), bool)
+        ring["p_off"] = jnp.zeros((s, batch), jnp.int32)
     return ring
 
 
@@ -260,13 +272,19 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                   caches); a miss must NOT clear — the missed request's
                   earlier commits stay valid and must finish propagating.
       pentry:     (only when ``prefill_cap > 0``) {"act" [B, Pcap, d],
-                  "len" [B] i32, "on" [B] bool} — admission prefills
-                  entering the prefill lane at stage 0.  Each stage
-                  applies its layers in full (prefill) mode to the lane
-                  the tick it holds it — under ``jax.lax.cond`` on "any
-                  prefill at this stage", so the empty lane is free —
-                  writing the slot's model-cache rows [0, Pcap).  The
-                  lane's last-position hidden state is returned at exit
+                  "len" [B] i32, "on" [B] bool, "off" [B] i32} —
+                  admission prefill *chunks* entering the prefill lane
+                  at stage 0 (``off`` = the chunk's absolute row
+                  offset; 0 for a whole prompt that fits the lane).
+                  Each stage applies its layers in chunk (prefill) mode
+                  to the lane the tick it holds it — under
+                  ``jax.lax.cond`` on "any prefill at this stage", so
+                  the empty lane is free — writing the slot's
+                  model-cache rows [off, off + Pcap).  Chunks of one
+                  slot must be fed on consecutive ticks in order; each
+                  chunk's queries attend over the rows every earlier
+                  chunk already wrote at this stage.  The chunk's
+                  last-position hidden state is returned at exit
                   (``p_last [B, d]``, ``p_valid [B]``); the tree-layer
                   exit for those slots stays dead.
 
@@ -305,16 +323,17 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                 tc[0], ntc[0]))
         return xs, new_tkv
 
-    def prefill_stage(stage_p, valid_row, kv, x, on):
-        """Apply this stage's layers in FULL (prefill) mode over the
+    def prefill_stage(stage_p, valid_row, kv, x, on, off):
+        """Apply this stage's layers in CHUNK (prefill) mode over the
         padded prompt lane ([B, Pcap, d]), writing each participating
-        slot's model-cache rows [0, Pcap) — the same per-layer math
-        ``tf.prefill`` runs, partitioned stage by stage."""
-        b = x.shape[0]
-        positions = jnp.broadcast_to(
-            jnp.arange(prefill_cap, dtype=jnp.int32)[None],
-            (b, prefill_cap))
-        ctx = tf.Ctx(mode="full", positions=positions, cache_len=0)
+        slot's model-cache rows [off[b], off[b] + Pcap) — the same
+        per-layer math ``tf.prefill_chunk`` runs, partitioned stage by
+        stage.  A whole prompt that fits the lane is the off == 0
+        single-chunk case."""
+        off = jnp.asarray(off, jnp.int32)
+        positions = off[:, None] + jnp.arange(prefill_cap,
+                                              dtype=jnp.int32)[None]
+        ctx = tf.Ctx(mode="chunk", positions=positions, cache_len=off)
         xs = x
         new_kv = []
         for l in range(lps):
@@ -424,10 +443,12 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                 cur["p_act"] = pick(pentry["act"], ring["p_act"])
                 cur["p_len"] = pick(pentry["len"], ring["p_len"])
                 cur["p_on"] = pick(pentry["on"], p_on_r)
+                cur["p_off"] = pick(pentry["off"], ring["p_off"])
                 pon = cur["p_on"][0]
                 kv, p_x = jax.lax.cond(
                     jnp.any(pon),
-                    lambda kv_, px: prefill_stage(sp, sv, kv_, px, pon),
+                    lambda kv_, px: prefill_stage(sp, sv, kv_, px, pon,
+                                                  cur["p_off"][0]),
                     lambda kv_, px: (kv_, px),
                     kv, cur["p_act"][0])
 

@@ -74,6 +74,13 @@ def main(argv=None):
                          "(ModelBundle.quantize() — per-out-channel int8 "
                          "weights + int8 KV arena, ~3x the slots per byte "
                          "budget; dense attention architectures only)")
+    ap.add_argument("--paged", action="store_true",
+                    help="pipedec-db only: block-paged KV arenas "
+                         "(models.paging pools behind per-slot block "
+                         "tables; the local backend's PagedKVArena backs "
+                         "each request's horizon instead of max_len)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="rows per KV block under --paged (power of two)")
     args = ap.parse_args(argv)
 
     target = build_bundle(args.target_arch, smoke=args.smoke, seed=0)
@@ -97,7 +104,14 @@ def main(argv=None):
         executor = cls(
             target, draft, slots=args.slots, max_len=512,
             tree_capacity=pcfg.tree_buffer_capacity,
-            capacity=pcfg.capacity, n_stages=len(jax.devices()))
+            capacity=pcfg.capacity, n_stages=len(jax.devices()),
+            paged=args.paged, page=args.page_size)
+    elif args.mode == "pipedec-db" and args.paged:
+        from repro.serving import LocalFusedExecutor
+        executor = LocalFusedExecutor(
+            target, draft, slots=args.slots, max_len=512,
+            tree_capacity=pcfg.tree_buffer_capacity,
+            capacity=pcfg.capacity, paged=True, page=args.page_size)
     engine = ServingEngine(
         target, draft, mode=args.mode, max_batch=args.slots,
         pipedec=pcfg, executor=executor)

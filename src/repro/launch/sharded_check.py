@@ -30,6 +30,18 @@ global timestep, deferred exit logits, in-ring pruning propagation):
     dead, and the other slot's rows/exits are bit-identical to a run
     without the kill.
 
+``--paged`` reruns everything on block-paged KV arenas (``--page-size``
+rows per block): the local backend's ``PagedKVArena`` pools plus the
+sharded/overlapped stage arenas behind identity block tables.  The pin is
+unchanged — paged outputs must stay bit-identical to the single-request
+engine (the dense reference), with the same dispatch counts.  With
+``--overlap`` the workload set grows a *long-prompt* leg whose prompts all
+exceed the ring's ``--prefill-cap``, pinning chunked prefill-in-ring:
+every admission streams through the lane over several ticks
+(``prefill_chunks`` > requests) with exactly ONE tick per timestep and
+``separate_prefill_dispatches == 0`` at any prompt length, and the
+slot-recycle scenario reuses a slot under paging with a chunked prompt.
+
 ``--quant`` additionally runs the whole workload on int8 bundles
 (``ModelBundle.quantize()``: per-out-channel int8 weights + int8 KV
 arena).  The strong pin is the same as fp32's, *within* the quantized
@@ -179,6 +191,16 @@ def main(argv=None):
                          "(ModelBundle.quantize()): same bit-identity pin "
                          "within the quantized path, acceptance-delta and "
                          "arena-bytes gates against fp32")
+    ap.add_argument("--paged", action="store_true",
+                    help="run every executor on block-paged KV arenas "
+                         "(models.paging pools + block tables); outputs "
+                         "must stay bit-identical to the dense reference")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="rows per KV block under --paged (power of two)")
+    ap.add_argument("--prefill-cap", type=int, default=16,
+                    help="overlapped ring prefill-lane chunk size; prompts "
+                         "longer than this stream through the lane over "
+                         "several ticks (chunked prefill)")
     args = ap.parse_args(argv)
 
     if "--xla_force_host_platform_device_count" not in \
@@ -232,17 +254,21 @@ def main(argv=None):
         "local": lambda t, d: LocalFusedExecutor(
             t, d, slots=args.slots, max_len=max_len,
             tree_capacity=pcfg.tree_buffer_capacity,
-            capacity=pcfg.capacity),
+            capacity=pcfg.capacity, paged=args.paged,
+            page=args.page_size),
         "sharded": lambda t, d: ShardedPipelineExecutor(
             t, d, slots=args.slots, max_len=max_len,
             tree_capacity=pcfg.tree_buffer_capacity,
-            capacity=pcfg.capacity, n_stages=args.stages),
+            capacity=pcfg.capacity, n_stages=args.stages,
+            paged=args.paged, page=args.page_size),
     }
     if args.overlap:
         mk["sharded_overlapped"] = lambda t, d: OverlappedShardedExecutor(
             t, d, slots=args.slots, max_len=max_len,
             tree_capacity=pcfg.tree_buffer_capacity,
-            capacity=pcfg.capacity, n_stages=args.stages)
+            capacity=pcfg.capacity, n_stages=args.stages,
+            prefill_cap=args.prefill_cap, paged=args.paged,
+            page=args.page_size)
 
     def check_workload(tgt, drf, reqs):
         single = PipeDecEngine(tgt, drf, pcfg, max_len=max_len)
@@ -300,6 +326,9 @@ def main(argv=None):
                     "per-timestep ticks must resolve every live flight"
                 assert ex.calls["prefill_in_ring"] == len(reqs), \
                     "every admission must prefill in-ring"
+                assert eng.stats.separate_prefill_dispatches == 0, \
+                    "overlapped: no standalone executor.prefill at ANY " \
+                    "prompt length (chunked prefill streams long prompts)"
                 for m in (tgt, drf):
                     assert m.calls["prefill"] == \
                         before[m].get("prefill", 0), \
@@ -314,7 +343,9 @@ def main(argv=None):
 
     summary = {"stages": args.stages, "slots": args.slots,
                "requests": args.requests, "layers": layers,
-               "overlap": args.overlap}
+               "overlap": args.overlap, "paged": args.paged,
+               "page_size": args.page_size,
+               "prefill_cap": args.prefill_cap}
     def check_recycle():
         """Regression: a retired occupant's in-ring ctrl must not leak
         into the recycled slot's next occupant.  Short request A (tiny
@@ -331,7 +362,9 @@ def main(argv=None):
         ex = OverlappedShardedExecutor(
             target, target, slots=1, max_len=max_len,
             tree_capacity=pcfg.tree_buffer_capacity,
-            capacity=pcfg.capacity, n_stages=args.stages)
+            capacity=pcfg.capacity, n_stages=args.stages,
+            prefill_cap=args.prefill_cap, paged=args.paged,
+            page=args.page_size)
         eng = SpecPipeDBEngine(target, target, pcfg, max_len=max_len,
                                max_slots=1, executor=ex)
         eng.submit(a)
@@ -400,6 +433,26 @@ def main(argv=None):
             # in flight
             summary["self_draft"] = check_workload(target, target,
                                                    mk_reqs(8, 14))
+            # long prompts: every prompt exceeds the ring's prefill lane,
+            # so admission MUST stream chunk by chunk over several ticks
+            # (one tick per timestep throughout, zero separate prefill
+            # dispatches) and still bit-match the single-request engine
+            cap = args.prefill_cap
+            long_reqs = [
+                Request(i,
+                        rng.integers(0, 100,
+                                     size=int(rng.integers(cap + 4,
+                                                           2 * cap + 9)))
+                        .astype(np.int32),
+                        int(rng.integers(3, 6)),
+                        arrival_t=int(rng.integers(0, args.requests)))
+                for i in range(args.requests)]
+            summary["long_prompt"] = check_workload(target, draft,
+                                                    long_reqs)
+            lp_disp = summary["long_prompt"]["sharded_overlapped"][
+                "dispatches"]
+            assert lp_disp["prefill_chunks"] > args.requests, \
+                "long-prompt workload must actually chunk its prefills"
             summary["slot_recycle"] = check_recycle()
             assert summary["self_draft"]["acceptance_mean"] > 0.99
             assert summary["self_draft"]["sharded_overlapped"][
@@ -416,6 +469,7 @@ def main(argv=None):
         print(f"SHARDED_CHECK fail stages={args.stages} "
               f"slots={args.slots} requests={args.requests} "
               f"overlap={int(args.overlap)} quant={int(args.quant)} "
+              f"paged={int(args.paged)} "
               f"error={type(e).__name__}: {reason}")
         return 1
     summary["bit_identical"] = True
@@ -423,14 +477,20 @@ def main(argv=None):
     parts = [f"SHARDED_CHECK ok stages={args.stages}",
              f"slots={args.slots}", f"requests={args.requests}",
              f"overlap={int(args.overlap)}", f"quant={int(args.quant)}",
-             "bit_identical=1"]
+             f"paged={int(args.paged)}", "bit_identical=1"]
+    if args.paged:
+        parts += [f"page_size={args.page_size}"]
     if args.overlap:
         over = summary["independent_draft"]["sharded_overlapped"]
+        lp = summary["long_prompt"]["sharded_overlapped"]
         parts += [
             f"ticks_per_timestep="
             f"{over['dispatches']['pipeline_tick'] / over['timesteps']:.2f}",
             f"ctrl_active_rate={over['ctrl_active_rate']:.4f}",
             f"prefill_in_ring={over['dispatches']['prefill_in_ring']}",
+            f"prefill_chunks_long={lp['dispatches']['prefill_chunks']}",
+            f"long_ticks_per_timestep="
+            f"{lp['dispatches']['pipeline_tick'] / lp['timesteps']:.2f}",
         ]
     if args.quant:
         q = summary["quant_int8"]

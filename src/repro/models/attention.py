@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.quant import dequantize_rows, quantize_rows
+from repro.models import paging
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, dense_init
 
@@ -239,17 +240,35 @@ def _kv_updates(cache, k_new, v_new):
     return {"k": k_new, "v": v_new}
 
 
+def _raw(buf):
+    """Densify one cache leaf if it is block-paged (``models.paging``)."""
+    return paging.to_dense(buf) if paging.is_paged(buf) else buf
+
+
 def _kv_read(cache, name):
-    """Read K or V from a cache, dequantizing int8 layouts to fp32."""
+    """Read K or V from a cache, dequantizing int8 layouts to fp32.
+    Paged leaves are gathered to their dense view through the block
+    table (bit-exact round-trip; see ``models.paging``)."""
     if "k_scale" in cache:
-        return dequantize_rows(cache[name], cache[name + "_scale"])
-    return cache[name]
+        return dequantize_rows(_raw(cache[name]),
+                               _raw(cache[name + "_scale"]))
+    return _raw(cache[name])
+
+
+def _cache_max_len(cache, cfg: ModelConfig) -> int:
+    buf = cache["c_kv"] if cfg.mla is not None else cache["k"]
+    return buf.length if paging.is_paged(buf) else buf.shape[1]
 
 
 def _cache_write(cache, updates, index):
     out = {}
     for name, u in updates.items():
         buf = cache[name]
+        if paging.is_paged(buf):
+            starts = jnp.broadcast_to(
+                jnp.asarray(index, jnp.int32).reshape(()), (buf.slots,))
+            out[name] = paging.write_len_rows(buf, u, starts)
+            continue
         out[name] = jax.lax.dynamic_update_slice_in_dim(
             buf, u.astype(buf.dtype), index, axis=1)
     return out
@@ -263,6 +282,9 @@ def _cache_write_rows(cache, updates, indices):
     out = {}
     for name, u in updates.items():
         buf = cache[name]
+        if paging.is_paged(buf):
+            out[name] = paging.write_len_rows(buf, u, indices)
+            continue
 
         def write_row(b, u_row, i):
             return jax.lax.dynamic_update_slice_in_dim(
@@ -270,6 +292,47 @@ def _cache_write_rows(cache, updates, indices):
 
         out[name] = jax.vmap(write_row)(buf, u, indices)
     return out
+
+
+def _cache_write_rows_at(cache, updates, starts, *, on=None):
+    """Per-row contiguous cache write with DROP semantics at the buffer
+    edge: row b's ``n`` update rows land at positions
+    ``[starts[b], starts[b]+n)``; out-of-range positions — and whole rows
+    where ``on[b]`` is False — are dropped, never clamped.  This is the
+    chunked-prefill write: a final chunk whose fixed-width window overruns
+    ``max_len`` must not clobber live rows, which the clamping
+    ``dynamic_update_slice`` of ``_cache_write_rows`` would."""
+    starts = jnp.asarray(starts, jnp.int32).reshape(-1)
+    out = {}
+    for name, u in updates.items():
+        buf = cache[name]
+        if paging.is_paged(buf):
+            out[name] = paging.write_len_rows(buf, u, starts, on=on)
+            continue
+        b, max_len = buf.shape[0], buf.shape[1]
+        n = u.shape[1]
+        pos = starts[:, None] + jnp.arange(n, dtype=jnp.int32)[None]
+        if on is not None:
+            pos = jnp.where(jnp.asarray(on).reshape(-1, 1), pos, max_len)
+        out[name] = buf.at[jnp.arange(b)[:, None], pos].set(
+            u.astype(buf.dtype), mode="drop")
+    return out
+
+
+def _pool_kv(buf):
+    """Blocked kernel layout of a paged K/V leaf: pool rows
+    [N_rows, KV, hd] -> [Nb, KV, page, hd] so each grid step's BlockSpec
+    picks one physical block through the block-table prefetch ref."""
+    nb = buf.pages.shape[0] // buf.page
+    return buf.pages.reshape(nb, buf.page,
+                             *buf.pages.shape[1:]).swapaxes(1, 2)
+
+
+def _pool_scales(buf):
+    """Blocked kernel layout of a paged per-row scale leaf:
+    [N_rows, KV] -> [Nb, KV, page]."""
+    nb = buf.pages.shape[0] // buf.page
+    return buf.pages.reshape(nb, buf.page, -1).swapaxes(1, 2)
 
 
 # --------------------------------------------------------------------------
@@ -305,6 +368,14 @@ def attn_forward(params, cfg: ModelConfig, x, positions, *,
     new_cache = None
     if cache is not None:
         new_cache = _cache_write(cache, _kv_updates(cache, k, v), cache_index)
+        if "k_scale" in cache:
+            # int8 serving layout: attend over the same quantize ->
+            # dequantize round-trip the cache keeps.  Chunked
+            # prefill-in-ring can only read prompt rows back from the
+            # int8 cache, so one-shot prefill must see the identical
+            # (lossy) values for the two paths to stay bit-identical.
+            k = dequantize_rows(*quantize_rows(k))
+            v = dequantize_rows(*quantize_rows(v))
     if causal and s >= CHUNKED_ATTN_THRESHOLD:
         out = chunked_causal_attend(q, k, v, window=window)
     else:
@@ -333,16 +404,17 @@ def _mla_absorbed_attend(params, cfg: ModelConfig, q_nope, q_rope, cache,
     """q_*: [B,n,H,*]; cache holds c_kv [B,S,r] / k_rope [B,S,dr];
     valid: [B,1,n,S].  Returns attention output [B,n,H,dv]."""
     m = cfg.mla
+    c_kv, k_rope = _raw(cache["c_kv"]), _raw(cache["k_rope"])
     w_uk = params["w_ukv"][..., :m.qk_nope_head_dim]   # [r,H,dn]
     w_uv = params["w_ukv"][..., m.qk_nope_head_dim:]   # [r,H,dv]
     q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)  # absorb W_uk into q
-    lo = jnp.einsum("bqhr,bsr->bhqs", q_eff, cache["c_kv"]) + \
-        jnp.einsum("bqhd,bsd->bhqs", q_rope, cache["k_rope"])
+    lo = jnp.einsum("bqhr,bsr->bhqs", q_eff, c_kv) + \
+        jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope)
     scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     lo = lo.astype(jnp.float32) * scale
     lo = jnp.where(valid, lo, jnp.finfo(jnp.float32).min)
-    probs = jax.nn.softmax(lo, axis=-1).astype(cache["c_kv"].dtype)
-    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, cache["c_kv"])
+    probs = jax.nn.softmax(lo, axis=-1).astype(c_kv.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)
     return jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv)
 
 
@@ -353,7 +425,7 @@ def attn_decode(params, cfg: ModelConfig, x, position, cache, cache_len, *,
     ``cache_len``).  Returns (out [B,1,d], new_cache)."""
     b = x.shape[0]
     positions = position[:, None]  # [B,1]
-    max_len = (cache["c_kv"] if cfg.mla is not None else cache["k"]).shape[1]
+    max_len = _cache_max_len(cache, cfg)
     kpos = jnp.arange(max_len)[None, None, None, :]
     valid = kpos <= positions[:, None, None, :]
     if window:
@@ -380,7 +452,19 @@ def attn_decode(params, cfg: ModelConfig, x, position, cache, cache_len, *,
         q, k_new, v_new = _project_qkv(params, cfg, x, positions)
         cache = _cache_write(cache, _kv_updates(cache, k_new, v_new),
                              cache_len)
-        if USE_PALLAS_ATTN:
+        if USE_PALLAS_ATTN and paging.is_paged(cache["k"]):
+            # paged kernel: K/V stay in their block pools; the per-slot
+            # block table rides the kernel as a scalar-prefetch ref.
+            from repro.kernels import ops as kops
+            qkw = {}
+            if "k_scale" in cache:
+                qkw = dict(k_scale=_pool_scales(cache["k_scale"]),
+                           v_scale=_pool_scales(cache["v_scale"]))
+            out = kops.paged_decode_attention(
+                q.swapaxes(1, 2), _pool_kv(cache["k"]), _pool_kv(cache["v"]),
+                cache["k"].table, position + 1,
+                window=window, **qkw).swapaxes(1, 2)
+        elif USE_PALLAS_ATTN:
             from repro.kernels import ops as kops
             qkw = {}
             if "k_scale" in cache:
@@ -393,6 +477,52 @@ def attn_decode(params, cfg: ModelConfig, x, position, cache, cache_len, *,
         else:
             out = gqa_attend(q, _kv_read(cache, "k"), _kv_read(cache, "v"),
                              valid)
+    y = _proj(out, params["w_o"], "bqhk,hkd->bqd")
+    return y, cache
+
+
+def attn_prefill_chunk(params, cfg: ModelConfig, x, positions, cache,
+                       chunk_start, *, window: int = 0, on=None):
+    """One prefill *chunk* against the model cache (chunked prefill-in-ring).
+
+    x: [B, s, d] hidden states of chunk rows whose absolute positions are
+    ``positions[b, i] = chunk_start[b] + i``.  The chunk's K/V rows are
+    written into the cache FIRST (drop semantics at the ``max_len`` edge,
+    ``on[b]`` False rows untouched), then q attends decode-style over the
+    WHOLE cache with the per-query bound ``kpos <= position`` — so valid
+    keys are a contiguous prefix and everything past them is trailing
+    masked padding, the only padding placement the bit-identity pins
+    tolerate (head/middle insertion would change gemm reduction grouping).
+    Chunk c > 0 sees chunks [0, c)'s rows already in the cache from earlier
+    ticks; row projections are row-independent, so every cached row is
+    bit-identical to a full one-shot prefill's.  Returns (out, cache).
+    """
+    b, s, _ = x.shape
+    max_len = _cache_max_len(cache, cfg)
+    kpos = jnp.arange(max_len)[None, None, None, :]
+    valid = kpos <= positions[:, None, :, None]
+    if window:
+        valid &= kpos > positions[:, None, :, None] - window
+    if cfg.mla is not None:
+        q_nope, q_rope = _project_q_mla(params, cfg, x, positions)
+        c_kv, k_rope = _project_ckv_mla(params, cfg, x, positions)
+        cache = _cache_write_rows_at(cache, {"c_kv": c_kv, "k_rope": k_rope},
+                                     chunk_start, on=on)
+        k_nope, v = _expand_ckv(params, cfg, _raw(cache["c_kv"]))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kr = _raw(cache["k_rope"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                      (*k_nope.shape[:3], kr.shape[-1]))],
+            axis=-1)
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+        out = gqa_attend(q, k, v, valid, scale=scale)
+    else:
+        q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+        cache = _cache_write_rows_at(cache, _kv_updates(cache, k_new, v_new),
+                                     chunk_start, on=on)
+        out = gqa_attend(q, _kv_read(cache, "k"), _kv_read(cache, "v"),
+                         valid)
     y = _proj(out, params["w_o"], "bqhk,hkd->bqd")
     return y, cache
 
@@ -427,16 +557,14 @@ def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
     """
     b, n, _ = x.shape
     # -- past part: plain causal over committed tokens --------------------
-    max_len = (model_cache["c_kv"] if cfg.mla is not None
-               else model_cache["k"]).shape[1]
+    max_len = _cache_max_len(model_cache, cfg)
     kpos = jnp.arange(max_len)[None, None, None, :]
     mlen = jnp.asarray(model_len, jnp.int32).reshape(-1)
     # per-row bound: every committed token of THIS row is an ancestor
     past_valid = kpos < mlen[:, None, None, None]
     if window:
         past_valid = past_valid & (kpos > positions[:, None, :, None] - window)
-    tcap = (tree_cache["c_kv"] if cfg.mla is not None
-            else tree_cache["k"]).shape[1]
+    tcap = _cache_max_len(tree_cache, cfg)
     tmask = tree_mask[:, None]  # [B,1,n,Tcap]
 
     if cfg.mla is not None:
@@ -448,8 +576,8 @@ def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
 
         def expand(cache_part):
-            k_nope, v = _expand_ckv(params, cfg, cache_part["c_kv"])
-            kr = cache_part["k_rope"]
+            k_nope, v = _expand_ckv(params, cfg, _raw(cache_part["c_kv"]))
+            kr = _raw(cache_part["k_rope"])
             k = jnp.concatenate(
                 [k_nope, jnp.broadcast_to(kr[:, :, None, :],
                                           (*k_nope.shape[:3], kr.shape[-1]))],
@@ -468,6 +596,27 @@ def attn_tree_verify(params, cfg: ModelConfig, x, positions, *,
         k_tree, v_tree = _kv_read(tree_cache, "k"), _kv_read(tree_cache, "v")
         scale = None
 
+    if USE_PALLAS_ATTN and cfg.mla is None and window == 0 and \
+            paging.is_paged(model_cache["k"]):
+        # paged two-kernel path: both halves gather K/V tiles through
+        # their block tables (scalar-prefetch side refs), LSE-combined —
+        # identical math to the joint softmax below, zero densification.
+        from repro.kernels import ops as kops
+        qkw = {}
+        if "k_scale" in tree_cache:
+            qkw = dict(k_scale=_pool_scales(model_cache["k_scale"]),
+                       v_scale=_pool_scales(model_cache["v_scale"]),
+                       kt_scale=_pool_scales(tree_cache["k_scale"]),
+                       vt_scale=_pool_scales(tree_cache["v_scale"]))
+        out = kops.paged_tree_attention(
+            q.swapaxes(1, 2),
+            _pool_kv(model_cache["k"]), _pool_kv(model_cache["v"]),
+            model_cache["k"].table,
+            _pool_kv(tree_cache["k"]), _pool_kv(tree_cache["v"]),
+            tree_cache["k"].table,
+            tree_mask, mlen, **qkw).swapaxes(1, 2)
+        y = _proj(out, params["w_o"], "bqhk,hkd->bqd")
+        return y, tree_cache
     if USE_PALLAS_ATTN and cfg.mla is None and window == 0:
         # two-kernel path: flash over past + tree-block, LSE-combined
         # (kernels/ops.py) — identical math to the joint softmax below.

@@ -1,0 +1,250 @@
+"""Block-paged KV storage (vLLM-class) for the serving arenas.
+
+A paged buffer replaces a dense slot-stacked cache leaf
+
+    dense: [*pre, B, L, *post]          (slot axis immediately before the
+                                         length axis, as everywhere in
+                                         ``models.transformer``)
+
+with a physical row pool plus a per-slot block table:
+
+    pages: [n_blocks * page, *pre, *post]   flat physical rows
+    table: [B, ceil(L / page)] int32        logical block -> physical block
+
+Physical block 0 is the reserved *null block*: every unallocated logical
+block of every slot aliases it, so gathers of not-yet-allocated regions
+are well-defined (they read don't-care rows that every attention mask —
+``model_len`` bounds, ancestor masks — already excludes, exactly the
+invariant that makes dense slot recycling safe) and masked writes can be
+redirected into it.  The host-side free-block pool / allocation policy
+lives in ``serving.scheduler`` (``PagePool``/``PageAllocator``); this
+module is the pure device-side indirection: gather a dense view, scatter
+rows back, slice/adopt slot views, per-row bounded writes.
+
+Everything here is jit-traceable; ``Paged`` is a registered pytree whose
+children are (pages, table) and whose static aux data is
+(page, length, n_pre), so paged caches flow through the existing jitted
+dispatches, donation, and ``jax.tree`` plumbing unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Paged:
+    """One paged cache leaf: flat physical row pool + per-slot block table.
+
+    ``pages``  [n_phys_rows, *row_shape]  — row r of physical block p is
+               pool row ``p * page + r``; row_shape is the dense leaf's
+               shape with the slot and length axes removed.
+    ``table``  [B, n_logical_blocks] int32 — 0 (the null block) marks an
+               unallocated logical block.
+    ``page``   rows per block (power of two).
+    ``length`` logical rows per slot (the dense leaf's length-axis size).
+    ``n_pre``  dense axes before the slot axis (1 for stacked "reps"
+               buffers and stage-stacked pipeline buffers, else 0).
+    """
+    pages: Any
+    table: Any
+    page: int
+    length: int
+    n_pre: int = 0
+
+    def tree_flatten(self):
+        return (self.pages, self.table), (self.page, self.length, self.n_pre)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        pages, table = children
+        return cls(pages, table, *aux)
+
+    @property
+    def slots(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def dtype(self):
+        return self.pages.dtype
+
+    def astype(self, dtype):
+        return Paged(self.pages.astype(dtype), self.table, self.page,
+                     self.length, self.n_pre)
+
+
+def is_paged(x) -> bool:
+    return isinstance(x, Paged)
+
+
+def n_blocks(length: int, page: int) -> int:
+    return -(-length // page)
+
+
+def dense_shape(p: Paged) -> tuple:
+    """The dense leaf shape this paged buffer stands in for."""
+    row = p.pages.shape[1:]
+    pre, post = row[:p.n_pre], row[p.n_pre:]
+    return (*pre, p.slots, p.length, *post)
+
+
+def make_paged(dense, table, page: int, n_pre: int = 0,
+               *, null_block: bool = True) -> Paged:
+    """Build a paged buffer from a dense leaf with an identity-style
+    ``table`` [B, mb] (testing / migration helper).  ``null_block``
+    prepends one physical null block (id 0) so the table ids can start
+    at 1."""
+    table = jnp.asarray(table, jnp.int32)
+    b, mb = table.shape
+    length = dense.shape[n_pre + 1]
+    rows = jnp.moveaxis(dense, tuple(range(n_pre)),
+                        tuple(range(2, 2 + n_pre)))        # [B, L, *row]
+    row_shape = rows.shape[2:]
+    pad = mb * page - length
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad)) + ((0, 0),) * len(row_shape))
+    blocked = rows.reshape(b * mb, page, *row_shape)
+    nb_total = int(jnp.max(table)) + 1 if table.size else 1
+    pool = jnp.zeros((max(nb_total, 1) * page, *row_shape), dense.dtype)
+    pool = pool.at[(table.reshape(-1)[:, None] * page
+                    + jnp.arange(page)[None]).reshape(-1)].set(
+        blocked.reshape(b * mb * page, *row_shape))
+    return Paged(pool, table, page, length, n_pre)
+
+
+def _row_ids(p: Paged):
+    """Physical pool row id for every (slot, logical row): [B, L] int32."""
+    ls = jnp.arange(p.length, dtype=jnp.int32)
+    return p.table[:, ls // p.page] * p.page + (ls % p.page)[None]
+
+
+def to_dense(p: Paged):
+    """Gather the dense [*pre, B, L, *post] view (unallocated logical rows
+    read the null block — don't-care values the masks exclude)."""
+    g = p.pages[_row_ids(p)]                               # [B, L, *row]
+    return jnp.moveaxis(g, tuple(range(2, 2 + p.n_pre)),
+                        tuple(range(p.n_pre)))
+
+
+def from_dense(p: Paged, dense) -> Paged:
+    """Scatter a full dense view back into the pool through the table.
+    Rows of unallocated logical blocks collapse onto the null block
+    (duplicate scatter indices — last-writer-wins garbage that is never
+    read meaningfully)."""
+    rows = jnp.moveaxis(dense, tuple(range(p.n_pre)),
+                        tuple(range(2, 2 + p.n_pre)))      # [B, L, *row]
+    idx = _row_ids(p).reshape(-1)
+    pages = p.pages.at[idx].set(
+        rows.reshape(-1, *rows.shape[2:]).astype(p.pages.dtype))
+    return Paged(pages, p.table, p.page, p.length, p.n_pre)
+
+
+def slice_slots(p: Paged, start: int, size: int) -> Paged:
+    """Slot-row view: the table is sliced, the pool is shared — bucketed
+    dispatches get O(1) views instead of gather/copy."""
+    return Paged(p.pages, jax.lax.slice_in_dim(p.table, start, start + size,
+                                               axis=0),
+                 p.page, p.length, p.n_pre)
+
+
+def adopt_pool(full: Paged, part: Paged) -> Paged:
+    """Merge a bucketed view's (functionally updated) pool back into the
+    full paged buffer: the pool is shared storage, so the part's pages ARE
+    the updated arena; only the full table is kept."""
+    assert part.pages.shape == full.pages.shape, \
+        "adopt_pool: bucketed view must share the full pool"
+    return Paged(part.pages, full.table, full.page, full.length, full.n_pre)
+
+
+def write_slot_rows(p: Paged, rows_dense, start: int) -> Paged:
+    """Write dense rows for slots [start, start+size) (dense layout
+    [*pre, size, L, *post]) into the pool through the table — the paged
+    ``update_cache_rows``."""
+    size = rows_dense.shape[p.n_pre]
+    view = slice_slots(p, start, start + size - start)
+    rows = jnp.moveaxis(rows_dense, tuple(range(p.n_pre)),
+                        tuple(range(2, 2 + p.n_pre)))      # [size, L, *row]
+    idx = _row_ids(view).reshape(-1)
+    pages = p.pages.at[idx].set(
+        rows.reshape(-1, *rows.shape[2:]).astype(p.pages.dtype))
+    return Paged(pages, p.table, p.page, p.length, p.n_pre)
+
+
+def write_len_rows(p: Paged, u, starts, *, on=None) -> Paged:
+    """Per-slot contiguous length-row write: slot b's rows
+    [starts[b], starts[b]+n) take ``u`` (dense layout [*pre, B, n, *post]).
+    Out-of-range logical rows and rows of slots with ``on[b]`` False are
+    redirected into the null block (physical row 0) — the paged
+    ``_cache_write_rows`` with drop semantics at the buffer edge."""
+    starts = jnp.asarray(starts, jnp.int32).reshape(-1)
+    n = u.shape[p.n_pre + 1]
+    ls = starts[:, None] + jnp.arange(n, dtype=jnp.int32)[None]  # [B, n]
+    inb = ls < p.length
+    lb = jnp.clip(ls, 0, p.length - 1)
+    phys = p.table[jnp.arange(p.table.shape[0])[:, None], lb // p.page] \
+        * p.page + (lb % p.page)
+    phys = jnp.where(inb, phys, 0)
+    if on is not None:
+        on = jnp.asarray(on).reshape(-1, 1)
+        phys = jnp.where(on, phys, 0)
+    rows = jnp.moveaxis(u, tuple(range(p.n_pre)),
+                        tuple(range(2, 2 + p.n_pre)))      # [B, n, *row]
+    pages = p.pages.at[phys.reshape(-1)].set(
+        rows.reshape(-1, *rows.shape[2:]).astype(p.pages.dtype))
+    return Paged(pages, p.table, p.page, p.length, p.n_pre)
+
+
+def take_len_rows(p: Paged, idx):
+    """Per-slot length-row gather: rows [B, n, *pre, *post] moved back to
+    the dense layout [*pre, B, n, *post]; ``idx`` [B, n] logical rows."""
+    idx = jnp.asarray(idx, jnp.int32)
+    lb = jnp.clip(idx, 0, p.length - 1)
+    phys = p.table[jnp.arange(p.table.shape[0])[:, None], lb // p.page] \
+        * p.page + (lb % p.page)
+    g = p.pages[phys]                                      # [B, n, *row]
+    return jnp.moveaxis(g, tuple(range(2, 2 + p.n_pre)),
+                        tuple(range(p.n_pre)))
+
+
+def where_slots(on, new: Paged, old: Paged) -> Paged:
+    """Per-slot select between two paged buffers sharing one table: slot
+    b's blocks take ``new`` where ``on[b]``.  Ownership is resolved at
+    block granularity through the table (the null block's winner is
+    arbitrary — its content is never read meaningfully)."""
+    on = jnp.asarray(on).reshape(-1)
+    nb_phys = new.pages.shape[0] // new.page
+    mb = new.table.shape[1]
+    owned = jnp.zeros((nb_phys,), bool).at[new.table.reshape(-1)].set(
+        jnp.repeat(on, mb))
+    sel = jnp.repeat(owned, new.page)
+    sel = sel.reshape((-1,) + (1,) * (new.pages.ndim - 1))
+    return Paged(jnp.where(sel, new.pages, old.pages), old.table,
+                 old.page, old.length, old.n_pre)
+
+
+def densify(tree):
+    """Replace every Paged leaf of a cache pytree with its dense gather
+    (entry side of a paged jitted dispatch)."""
+    return jax.tree_util.tree_map(
+        lambda x: to_dense(x) if is_paged(x) else x, tree,
+        is_leaf=lambda x: x is None or is_paged(x))
+
+
+def repaginate(paged_tree, dense_tree):
+    """Scatter a dense cache pytree back through the paged tree's tables
+    (exit side of a paged jitted dispatch); non-paged leaves pass the
+    dense value through."""
+    return jax.tree_util.tree_map(
+        lambda p, d: from_dense(p, d) if is_paged(p) else d,
+        paged_tree, dense_tree,
+        is_leaf=lambda x: x is None or is_paged(x))
+
+
+def any_paged(tree) -> bool:
+    return any(is_paged(leaf) for leaf in jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: x is None or is_paged(x))
+        if leaf is not None)

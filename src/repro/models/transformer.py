@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.models import attention as attn
 from repro.models import config as config_mod
+from repro.models import paging
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
@@ -276,10 +277,11 @@ def _constrain(x):
 @dataclasses.dataclass(frozen=True)
 class Ctx:
     """Static + traced context threaded through the layers."""
-    mode: str                       # full | decode | tree
+    mode: str                       # full | decode | tree | chunk
     positions: Any                  # [B,S] absolute positions
     cache_len: Any = None           # committed tokens: scalar (decode) or
-                                    # per-row [B] (tree mode)
+                                    # per-row [B] (tree mode); in chunk
+                                    # mode the per-row chunk start offsets
     tree_write_index: Any = None    # [B] per-row tree buffer write offsets
     tree_mask: Any = None           # [B, n, Tcap] per-row ancestor masks
     enc_kv: Any = None              # per-layer (k, v) list for cross-attn
@@ -312,6 +314,10 @@ def _apply_sublayer(p, cfg: ModelConfig, kind: str, x, cache, tree_cache,
             y, cache = attn.attn_decode(
                 p["mixer"], cfg, h, ctx.positions[:, 0], cache, ctx.cache_len,
                 window=win)
+        elif ctx.mode == "chunk":
+            y, cache = attn.attn_prefill_chunk(
+                p["mixer"], cfg, h, ctx.positions, cache, ctx.cache_len,
+                window=win)
         else:  # tree
             y, tree_cache = attn.attn_tree_verify(
                 p["mixer"], cfg, h, ctx.positions, model_cache=cache,
@@ -320,6 +326,11 @@ def _apply_sublayer(p, cfg: ModelConfig, kind: str, x, cache, tree_cache,
                 tree_mask=ctx.tree_mask, window=win)
             cache = None  # model cache is read-only here; don't re-emit it
     elif kind == "ssm":
+        if ctx.mode == "chunk":
+            raise NotImplementedError(
+                "chunked prefill through an ssm sub-layer is undefined "
+                "(no mid-sequence recurrent re-entry); recurrent "
+                "architectures keep the whole-prompt prefill path")
         if ctx.mode == "tree":
             # a width-w tree layer has no single recurrent successor state;
             # recurrent architectures speculate in chain-mode instead
@@ -339,6 +350,11 @@ def _apply_sublayer(p, cfg: ModelConfig, kind: str, x, cache, tree_cache,
         else:  # decode
             y, cache = ssm_mod.ssm_decode(p["mixer"], cfg, h, cache)
     elif kind == "rglru":
+        if ctx.mode == "chunk":
+            raise NotImplementedError(
+                "chunked prefill through an rglru sub-layer is undefined "
+                "(no mid-sequence recurrent re-entry); recurrent "
+                "architectures keep the whole-prompt prefill path")
         if ctx.mode == "tree":
             raise NotImplementedError(
                 "tree-verify through an rglru sub-layer is undefined; use "
@@ -528,6 +544,28 @@ def prefill(params, cfg: ModelConfig, tokens, cache, *, prefix_embeds=None,
     return _logits(params, cfg, x[:, -1]), cache
 
 
+def prefill_chunk(params, cfg: ModelConfig, tokens, cache, chunk_start, *,
+                  window_override: int = -1):
+    """Fill the model cache with ONE chunk of a longer prompt (chunked
+    prefill-in-ring): row b's ``tokens[b]`` occupy absolute positions
+    ``[chunk_start[b], chunk_start[b] + s)``.  Chunks must be fed in
+    order; each chunk attends over the cache rows earlier chunks already
+    wrote (bit-identical to a one-shot ``prefill`` — see
+    ``attention.attn_prefill_chunk``).  Returns (logits [B, s, V], cache)
+    — ALL chunk positions' logits, so the caller picks the last valid
+    prompt position of the final chunk for the next-token prediction.
+    """
+    x = embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    chunk_start = jnp.broadcast_to(
+        jnp.asarray(chunk_start, jnp.int32).reshape(-1), (b,))
+    positions = chunk_start[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+    ctx = Ctx(mode="chunk", positions=positions, cache_len=chunk_start,
+              window_override=window_override)
+    x, cache, _, _ = _run_layers(params, cfg, x, cache, None, ctx)
+    return _logits(params, cfg, x), cache
+
+
 def decode_step(params, cfg: ModelConfig, token, cache, cache_len, *,
                 enc_out=None, window_override: int = -1):
     """token [B] -> (logits [B,V], cache). Writes at position cache_len."""
@@ -606,11 +644,14 @@ def slice_cache_rows(cache, start: int, size: int):
     def f(path, buf):
         if buf is None:
             return None
+        if paging.is_paged(buf):
+            # table slice, shared pool — O(1) view, no row gather
+            return paging.slice_slots(buf, start, size)
         return jax.lax.slice_in_dim(buf, start, start + size,
                                     axis=_slot_axis(path))
 
-    return jax.tree_util.tree_map_with_path(f, cache,
-                                            is_leaf=lambda x: x is None)
+    return jax.tree_util.tree_map_with_path(
+        f, cache, is_leaf=lambda x: x is None or paging.is_paged(x))
 
 
 def update_cache_rows(cache, rows, start: int = 0):
@@ -620,11 +661,17 @@ def update_cache_rows(cache, rows, start: int = 0):
     def f(path, buf, upd):
         if buf is None:
             return None
+        if paging.is_paged(buf):
+            if paging.is_paged(upd):
+                # a slice_slots view shares the full pool: its updated
+                # pages ARE the updated arena — keep the full table
+                return paging.adopt_pool(buf, upd)
+            return paging.write_slot_rows(buf, upd, start)
         return jax.lax.dynamic_update_slice_in_dim(
             buf, upd.astype(buf.dtype), start, axis=_slot_axis(path))
 
-    return jax.tree_util.tree_map_with_path(f, cache, rows,
-                                            is_leaf=lambda x: x is None)
+    return jax.tree_util.tree_map_with_path(
+        f, cache, rows, is_leaf=lambda x: x is None or paging.is_paged(x))
 
 
 def where_cache_rows(on, new, old):
@@ -639,12 +686,15 @@ def where_cache_rows(on, new, old):
     def f(path, o, n):
         if o is None:
             return None
+        if paging.is_paged(o):
+            # block-granularity select through the shared table
+            return paging.where_slots(on, n, o)
         shape = [1] * o.ndim
         shape[_slot_axis(path)] = on.shape[0]
         return jnp.where(on.reshape(shape), n.astype(o.dtype), o)
 
-    return jax.tree_util.tree_map_with_path(f, old, new,
-                                            is_leaf=lambda x: x is None)
+    return jax.tree_util.tree_map_with_path(
+        f, old, new, is_leaf=lambda x: x is None or paging.is_paged(x))
 
 
 def commit_tree_node(cfg: ModelConfig, cache, tree_caches, node_idx,
@@ -670,6 +720,16 @@ def commit_tree_node(cfg: ModelConfig, cache, tree_caches, node_idx,
         merge, tree_caches, cache, is_leaf=lambda x: x is None)
 
 
+def _dense_node_rows(name, tree_buf, node_idx):
+    """Per-row single-node gather from a dense tree buffer: row b takes its
+    row ``node_idx[b]``, keeping the dense layout [*pre, B, 1, *post]."""
+    ax = cache_len_axis(name, tree_buf)
+    bx = ax - 1
+    return jax.vmap(
+        lambda tb, ni: jax.lax.dynamic_slice_in_dim(tb, ni, 1, axis=ax - 1),
+        in_axes=(bx, 0), out_axes=bx)(tree_buf, node_idx)
+
+
 def commit_tree_nodes(cfg: ModelConfig, cache, tree_caches, node_idx,
                       model_len, commit_mask=None):
     """Batched per-row two-level cache sync (SpecPipe-DB exit phase).
@@ -688,6 +748,17 @@ def commit_tree_nodes(cfg: ModelConfig, cache, tree_caches, node_idx,
         if tree_buf is None:
             return model_buf
         name = path[-1].key
+        if paging.is_paged(model_buf):
+            # paged commit: gather each row's verified node from the tree
+            # pool, scatter it at ``model_len[b]`` through the model block
+            # table — no dense materialisation of either buffer.
+            row = (paging.take_len_rows(tree_buf, node_idx[:, None])
+                   if paging.is_paged(tree_buf)
+                   else _dense_node_rows(name, tree_buf, node_idx))
+            return paging.write_len_rows(model_buf, row, model_len,
+                                         on=commit_mask)
+        if paging.is_paged(tree_buf):
+            tree_buf = paging.to_dense(tree_buf)
         ax = cache_len_axis(name, model_buf)
         bx = ax - 1                    # batch axis precedes the length axis
         inner = ax - 1                 # length axis once batch is vmapped out
@@ -707,7 +778,8 @@ def commit_tree_nodes(cfg: ModelConfig, cache, tree_caches, node_idx,
         return upd
 
     return jax.tree_util.tree_map_with_path(
-        merge, tree_caches, cache, is_leaf=lambda x: x is None)
+        merge, tree_caches, cache,
+        is_leaf=lambda x: x is None or paging.is_paged(x))
 
 
 def remap_tree_cache_rows(tree_caches, index_maps):
@@ -729,9 +801,8 @@ def remap_tree_cache_rows(tree_caches, index_maps):
         if buf is None:
             return None
         name = path[-1].key
-        ax = cache_len_axis(name, buf)
-        bx = ax - 1                    # slot axis precedes the length axis
-        cap = buf.shape[ax]
+        cap = buf.length if paging.is_paged(buf) else \
+            buf.shape[cache_len_axis(name, buf)]
         im = jnp.concatenate([
             index_maps,
             jnp.full((index_maps.shape[0], cap - index_maps.shape[1]), -1,
@@ -739,11 +810,18 @@ def remap_tree_cache_rows(tree_caches, index_maps):
         # inverse permutation per row: g[b, new] = old (dropped → the end)
         g = jnp.argsort(jnp.where(im >= 0, im, cap + jnp.arange(cap)[None]),
                         axis=1)
+        if paging.is_paged(buf):
+            # gather the permuted rows through the table, scatter them back
+            # through the same table (the logical buffer is small — cap+w
+            # rows — so the round-trip is the whole compaction)
+            return paging.from_dense(buf, paging.take_len_rows(buf, g))
+        ax = cache_len_axis(name, buf)
+        bx = ax - 1                    # slot axis precedes the length axis
         return jax.vmap(lambda b, gi: jnp.take(b, gi, axis=ax - 1),
                         in_axes=(bx, 0), out_axes=bx)(buf, g)
 
     return jax.tree_util.tree_map_with_path(
-        gather, tree_caches, is_leaf=lambda x: x is None)
+        gather, tree_caches, is_leaf=lambda x: x is None or paging.is_paged(x))
 
 
 def _hidden(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,

@@ -7,11 +7,11 @@ from repro.serving.executor import (DeferredLogits, DeferredPrefill,
                                     PipelineExecutor,
                                     ShardedPipelineExecutor)
 from repro.serving.scheduler import (DynamicBatchScheduler, KVArena,
-                                     SchedulerStats, SlotPool)
+                                     PagedKVArena, SchedulerStats, SlotPool)
 
 __all__ = ["DBStats", "DeferredLogits", "DeferredPrefill",
            "DynamicBatchScheduler", "KVArena",
            "LocalFusedExecutor", "OverlappedShardedExecutor",
-           "PipelineExecutor", "Request", "Result", "SchedulerStats",
-           "ServingEngine", "ShardedPipelineExecutor", "SlotPool",
-           "SpecPipeDBEngine", "generate_with_executor"]
+           "PagedKVArena", "PipelineExecutor", "Request", "Result",
+           "SchedulerStats", "ServingEngine", "ShardedPipelineExecutor",
+           "SlotPool", "SpecPipeDBEngine", "generate_with_executor"]

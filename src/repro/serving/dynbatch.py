@@ -118,6 +118,13 @@ class DBStats:
     uid (a hit accepts the drafted node, a miss falls back to the target
     token); their totals give the run's aggregate ``acceptance_rate`` —
     the regression currency of the int8 serving path.
+    ``separate_prefill_dispatches`` counts admissions that ran a
+    standalone ``executor.prefill`` dispatch instead of riding the ring's
+    (chunked) prefill lane — exactly 0 on the overlapped backend at ANY
+    prompt length unless the lane is disabled.  ``page_counters`` traces
+    the paged arena's pool counters per executed timestep (blocks in
+    use/total/peak, fragmentation %, swaps, preemptions, copy-on-expand
+    events); empty on dense arenas.
     """
     timesteps: int = 0
     total_commits: int = 0
@@ -129,6 +136,8 @@ class DBStats:
     proposed: Dict[int, int] = dataclasses.field(default_factory=dict)
     total_accepted: int = 0
     total_proposed: int = 0
+    separate_prefill_dispatches: int = 0
+    page_counters: List[Dict] = dataclasses.field(default_factory=list)
 
     @property
     def tokens_per_timestep(self) -> float:
@@ -206,10 +215,16 @@ class SpecPipeDBEngine:
     # ------------------------------------------------------------------
     def _timestep_guard(self) -> int:
         # prefill-in-ring adds an n_stages pipeline-fill delay between a
-        # request's admission and its first entry — budget it per request
+        # request's admission and its first entry — budget it per request,
+        # plus one tick per extra prompt chunk when the prompt streams
+        # through the lane over several ticks (chunked prefill)
+        cap = getattr(self.executor, "prefill_cap", 0)
+        chunks = lambda r: (
+            max(-(-int(np.asarray(r.prompt).size) // cap), 1) - 1
+            if cap else 0)
         per_req = sum(
             r.max_new_tokens * (self.pcfg.n_stages + 2) + 17
-            + self.pcfg.n_stages + 1
+            + self.pcfg.n_stages + 1 + chunks(r)
             for r in self.sched.queue)
         arrivals = max((getattr(r, "arrival_t", 0)
                         for r in self.sched.queue), default=0)
@@ -490,6 +505,7 @@ class SpecPipeDBEngine:
                                                  time.perf_counter())
                         continue
                 if self.fused:
+                    self.stats.separate_prefill_dispatches += 1
                     st = self.inner.init_state(
                         req.prompt, req.max_new_tokens, key=rkey,
                         eos=self.eos_token, sampling=sampling,
@@ -546,6 +562,9 @@ class SpecPipeDBEngine:
             occ = len(active)
             self.stats.occupancy.append(occ)
             self.sched.stats.occupancy.append(occ)
+            pages = getattr(self.arena, "pages", None)
+            if pages is not None:
+                self.stats.page_counters.append(pages.counters())
             if now > guard:
                 raise RuntimeError(
                     f"SpecPipeDBEngine exceeded timestep guard ({guard}); "

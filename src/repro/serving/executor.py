@@ -69,9 +69,39 @@ import numpy as np
 
 from repro.core.speculative import ModelBundle, remap_tree_caches
 from repro.launch import pipeline as pl
+from repro.models import paging
 from repro.models import transformer as tf
 from repro.models.layers import embed
-from repro.serving.scheduler import KVArena, SlotPool
+from repro.serving.scheduler import KVArena, PagedKVArena, SlotPool
+
+
+def _full_table(slots: int, rows: int, page: int):
+    """Fully-backed identity block table: slot ``b``'s logical block ``j``
+    is physical block ``1 + b * mb + j`` (block 0 stays the null block).
+    The sharded backends page their stage/draft arenas statically — the
+    dynamic allocation/swap policies live in ``scheduler.PagedKVArena``
+    behind the local backend."""
+    mb = paging.n_blocks(rows, page)
+    return jnp.asarray(
+        1 + np.arange(slots * mb, dtype=np.int32).reshape(slots, mb))
+
+
+def _paginate_full(cache, table, page: int):
+    """Convert every KV leaf of a cache pytree (the
+    ``CACHE_LEN_AXIS_FROM_END`` names, incl. int8 scales) to a
+    fully-backed ``models.paging.Paged`` buffer sharing ``table``;
+    recurrent state and other non-length leaves stay dense."""
+    def conv(path, leaf):
+        if leaf is None:
+            return None
+        name = getattr(path[-1], "key", None) if path else None
+        if name not in tf.CACHE_LEN_AXIS_FROM_END:
+            return leaf
+        n_pre = tf.cache_len_axis(name, leaf) - 1
+        return paging.make_paged(leaf, table, page, n_pre)
+
+    return jax.tree_util.tree_map_with_path(
+        conv, cache, is_leaf=lambda x: x is None)
 
 
 class PipelineExecutor:
@@ -153,16 +183,34 @@ class PipelineExecutor:
 class LocalFusedExecutor(PipelineExecutor):
     """PR-2's fused single-device path behind the executor seam: the
     slot-stacked ``KVArena`` is the storage, ``ModelBundle``'s jitted
-    ``tree_verify_rows`` / ``commit_rows`` closures are the dispatches."""
+    ``tree_verify_rows`` / ``commit_rows`` closures are the dispatches.
+
+    ``paged=True`` swaps the arena for a ``PagedKVArena``: every KV leaf
+    becomes a block pool + per-slot table (``models.paging``), the
+    scheduler allocates/swaps/preempts blocks, and the jitted dispatches
+    are unchanged — they densify the bucketed views at entry and scatter
+    the updated tree rows back through the tables at exit."""
 
     def __init__(self, target: ModelBundle, draft: ModelBundle, *,
                  slots: int, max_len: int, tree_capacity: int,
-                 capacity: int):
+                 capacity: int, paged: bool = False, page: int = 16,
+                 model_blocks: Optional[int] = None,
+                 tree_blocks: Optional[int] = None,
+                 lazy_tree: bool = False):
         super().__init__(slots)
         self.target, self.draft = target, draft
         self.capacity = capacity
-        self.arena = KVArena(target, draft, slots=slots, max_len=max_len,
-                             tree_capacity=tree_capacity)
+        self.paged = bool(paged)
+        if self.paged:
+            self.arena = PagedKVArena(
+                target, draft, slots=slots, max_len=max_len,
+                tree_capacity=tree_capacity, page=page,
+                model_blocks=model_blocks, tree_blocks=tree_blocks,
+                lazy_tree=lazy_tree)
+        else:
+            self.arena = KVArena(target, draft, slots=slots,
+                                 max_len=max_len,
+                                 tree_capacity=tree_capacity)
 
     def prefill(self, slot: int, prompt):
         t_cache, d_cache, t_tree, d_tree = self.arena.caches(slot)
@@ -234,11 +282,24 @@ def _sharded_verify_impl(params, stage_p, stage_valid, model_kv, tree_kv,
     through every pipeline stage (``make_pipeline_verify``), unembed the
     exiting activations, scatter the updated tree-cache rows back.
     ``params`` carries only the embed/final-norm/unembed leaves (the layer
-    stack already rides in ``stage_p``)."""
+    stack already rides in ``stage_p``).
+
+    Paged stage arenas gather their bucketed dense views HERE — inside
+    this one compiled dispatch but outside the shard_map'd flush (a
+    ``Paged`` leaf's pool/table axes do not line up with the tree-mapped
+    ``P(stage_axis)`` specs) — and the updated tree rows scatter back
+    through the block tables at exit."""
     sl = lambda a: a[:bucket]
-    rows = lambda c: jax.tree.map(lambda t: t[:, :bucket], c)
-    mkv_b = [rows(c) for c in model_kv]
-    tkv_b = [rows(c) for c in tree_kv]
+
+    def rows(c):
+        return jax.tree_util.tree_map(
+            lambda t: (paging.slice_slots(t, 0, bucket)
+                       if paging.is_paged(t) else
+                       None if t is None else t[:, :bucket]),
+            c, is_leaf=lambda x: x is None or paging.is_paged(x))
+
+    mkv_v = [rows(c) for c in model_kv]
+    tkv_v = [rows(c) for c in tree_kv]
     entry = {
         "act": embed(params["embed"], sl(node_tokens)),
         "positions": sl(node_positions),
@@ -247,14 +308,25 @@ def _sharded_verify_impl(params, stage_p, stage_valid, model_kv, tree_kv,
         "model_len": sl(model_len),
         "valid": sl(row_on),
     }
-    exit_act, _, tkv_b = verify_pass(stage_p, stage_valid, mkv_b, tkv_b,
-                                     entry)
+    exit_act, _, tkv_b = verify_pass(
+        stage_p, stage_valid, [paging.densify(c) for c in mkv_v],
+        [paging.densify(c) for c in tkv_v], entry)
     logits = tf._logits(params, cfg, exit_act)
-    new_tree_kv = [
-        jax.tree.map(
-            lambda full, upd: jax.lax.dynamic_update_slice_in_dim(
-                full, upd.astype(full.dtype), 0, axis=1), full_c, upd_c)
-        for full_c, upd_c in zip(tree_kv, tkv_b)]
+
+    def put_back(full_c, view_c, upd_c):
+        def f(full, view, upd):
+            if full is None:
+                return None
+            if paging.is_paged(full):
+                return paging.adopt_pool(full, paging.from_dense(view, upd))
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, upd.astype(full.dtype), 0, axis=1)
+        return jax.tree_util.tree_map(
+            f, full_c, view_c, upd_c,
+            is_leaf=lambda x: x is None or paging.is_paged(x))
+
+    new_tree_kv = [put_back(f, v, u)
+                   for f, v, u in zip(tree_kv, tkv_v, tkv_b)]
     return logits, new_tree_kv
 
 
@@ -277,11 +349,12 @@ class ShardedPipelineExecutor(PipelineExecutor):
     def __init__(self, target: ModelBundle, draft: ModelBundle, *,
                  slots: int, max_len: int, tree_capacity: int,
                  capacity: int, n_stages: Optional[int] = None, mesh=None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, paged: bool = False, page: int = 16):
         super().__init__(slots)
         self.target, self.draft = target, draft
         self.capacity, self.max_len = capacity, max_len
         self.dtype = dtype
+        self.paged, self.page = bool(paged), int(page)
         width = tree_capacity - capacity
         assert width >= 1, "tree_capacity must include the width-w slack"
         if mesh is None:
@@ -301,6 +374,22 @@ class ShardedPipelineExecutor(PipelineExecutor):
             target.cfg, self.plcfg, dtype, batch=slots)
         self._d_cache = draft.init_cache(slots, max_len)
         self._d_tree = draft.init_tree_caches(slots, tree_capacity)
+        if self.paged:
+            # the sharded backends page their arenas *statically*: every
+            # slot is fully backed through an identity table (the dynamic
+            # block allocation/swap policies live behind the local
+            # backend's PagedKVArena), so the sharded paths exercise the
+            # same pool/table indirection end to end with unchanged
+            # schedules.  One table per row geometry, shared by every
+            # leaf of that geometry across stage layers + the draft.
+            mt = _full_table(slots, max_len, self.page)
+            tt = _full_table(slots, tree_capacity, self.page)
+            self.model_kv = [_paginate_full(c, mt, self.page)
+                             for c in self.model_kv]
+            self.tree_kv = [_paginate_full(c, tt, self.page)
+                            for c in self.tree_kv]
+            self._d_cache = _paginate_full(self._d_cache, mt, self.page)
+            self._d_tree = _paginate_full(self._d_tree, tt, self.page)
         self.arena = SlotPool(slots)
 
         # only the embed table + final norm + unembed head ride the
@@ -341,6 +430,8 @@ class ShardedPipelineExecutor(PipelineExecutor):
 
         def scatter(l):
             def f(dst, src):
+                if dst is None:
+                    return None
                 src = src[:, 0]                       # [reps, rows, ...]
                 if pad:
                     src = jnp.concatenate(
@@ -348,9 +439,13 @@ class ShardedPipelineExecutor(PipelineExecutor):
                         0)
                 src = src.reshape(self.n_stages, self.lps,
                                   *src.shape[1:])[:, l]  # [S, rows, ...]
+                if paging.is_paged(dst):
+                    return paging.write_slot_rows(dst, src[:, None], slot)
                 return jax.lax.dynamic_update_slice_in_dim(
                     dst, src[:, None].astype(dst.dtype), slot, axis=1)
-            return jax.tree.map(f, self.model_kv[l], stacked_cache)
+            return jax.tree_util.tree_map(
+                f, self.model_kv[l], stacked_cache,
+                is_leaf=lambda x: x is None or paging.is_paged(x))
 
         self.model_kv = [scatter(l) for l in range(self.lps)]
 
@@ -360,8 +455,10 @@ class ShardedPipelineExecutor(PipelineExecutor):
         t_logits, t_cache = self.target.prefill(prompt, t_cache)
         # the pure-stack arch has exactly one attention sub-layer per unit
         self._scatter_prefill(t_cache["stack"][0], slot)
-        d_row = tf.slice_cache_rows(self._d_cache, slot, 1)
-        _, d_row = self.draft.prefill(prompt, d_row)
+        d_view = tf.slice_cache_rows(self._d_cache, slot, 1)
+        _, d_row = self.draft.prefill(prompt, paging.densify(d_view))
+        if paging.any_paged(d_view):
+            d_row = paging.repaginate(d_view, d_row)
         self._d_cache = tf.update_cache_rows(self._d_cache, d_row, slot)
         return t_logits
 
@@ -388,12 +485,25 @@ class ShardedPipelineExecutor(PipelineExecutor):
         self.calls["commit_rows"] += 1
 
     def remap_row(self, slot: int, index_map) -> None:
+        is_leaf = lambda x: x is None or paging.is_paged(x)
+
         def one(c):
-            row = jax.tree.map(lambda t: t[:, slot:slot + 1], c)
+            row = jax.tree_util.tree_map(
+                lambda t: (paging.slice_slots(t, slot, 1)
+                           if paging.is_paged(t) else
+                           None if t is None else t[:, slot:slot + 1]),
+                c, is_leaf=is_leaf)
             row = remap_tree_caches(row, index_map, self.capacity)
-            return jax.tree.map(
-                lambda full, r: full.at[:, slot:slot + 1].set(
-                    r.astype(full.dtype)), c, row)
+
+            def put(full, r):
+                if full is None:
+                    return None
+                if paging.is_paged(full):
+                    # the remapped view's pool IS the updated arena
+                    return paging.adopt_pool(full, r)
+                return full.at[:, slot:slot + 1].set(r.astype(full.dtype))
+
+            return jax.tree_util.tree_map(put, c, row, is_leaf=is_leaf)
 
         self.tree_kv = [one(c) for c in self.tree_kv]
         self._d_tree = self._draft_remap_row(slot, index_map)
@@ -419,9 +529,9 @@ class ShardedPipelineExecutor(PipelineExecutor):
 def _overlap_tick_impl(params, d_params, stage_p, stage_valid, model_kv,
                        tree_kv, ring, d_cache, node_tokens, node_positions,
                        tree_mask, write_idx, model_len, entry_on,
-                       entry_version, p_tokens, p_len, p_on, ctrl_commit,
-                       ctrl_len, ctrl_imap, ctrl_clear, ctrl_active, kill,
-                       *, cfg, d_cfg, tick, prefill_cap):
+                       entry_version, p_tokens, p_len, p_on, p_off,
+                       ctrl_commit, ctrl_len, ctrl_imap, ctrl_clear,
+                       ctrl_active, kill, *, cfg, d_cfg, tick, prefill_cap):
     """ONE steady-state ring tick: ingest the batched entry layer into
     stage 0, apply the (gated) pruning-propagation ctrl at whichever
     stage it reached this tick, advance every in-flight layer — and the
@@ -429,13 +539,29 @@ def _overlap_tick_impl(params, d_params, stage_p, stage_valid, model_kv,
     verify logits.  ``params`` carries only the embed/final-norm/unembed
     leaves (the layer stack already rides in ``stage_p``).
 
-    Admission prefill rides the SAME dispatch: the target's prompt lane
-    enters the ring (``p_tokens``/``p_len``/``p_on``) and the replicated
-    draft's prefill runs here beside the sharded tick (gated on "any
-    prefill entering"), so admitting a request costs zero extra
-    dispatches.  The whole pytree state (``model_kv``/``tree_kv``/
-    ``ring``/``d_cache``) is donated by the caller so XLA updates the
-    buffers in place."""
+    Admission prefill rides the SAME dispatch: ONE prompt chunk (up to
+    ``prefill_cap`` tokens, written at per-slot cache offset ``p_off``)
+    enters the ring's prefill lane and the replicated draft's matching
+    chunk prefill runs here beside the sharded tick (gated on "any
+    prefill entering"), so admitting a request of ANY prompt length
+    costs zero extra dispatches — long prompts stream chunk by chunk
+    over consecutive ticks.  The whole pytree state (``model_kv``/
+    ``tree_kv``/``ring``/``d_cache``) is donated by the caller so XLA
+    updates the buffers in place.
+
+    Paged arenas gather dense views here — inside this one compiled
+    dispatch but outside the shard_map'd tick (``Paged`` pool/table axes
+    do not line up with the tree-mapped stage specs) — and scatter every
+    updated row back through the block tables before returning."""
+    paged_t = paging.any_paged(model_kv)
+    if paged_t:
+        mkv_v, tkv_v = model_kv, tree_kv
+        model_kv = [paging.densify(c) for c in model_kv]
+        tree_kv = [paging.densify(c) for c in tree_kv]
+    paged_d = paging.any_paged(d_cache)
+    if paged_d:
+        dc_v = d_cache
+        d_cache = paging.densify(d_cache)
     entry = {
         "act": embed(params["embed"], node_tokens),
         "positions": node_positions,
@@ -451,7 +577,7 @@ def _overlap_tick_impl(params, d_params, stage_p, stage_valid, model_kv,
     pentry = None
     if prefill_cap:
         pentry = {"act": embed(params["embed"], p_tokens), "len": p_len,
-                  "on": p_on}
+                  "on": p_on, "off": p_off}
     model_kv, tree_kv, ring, exit_out = tick(
         stage_p, stage_valid, model_kv, tree_kv, ring, entry, kill, ctrl,
         pentry)
@@ -468,17 +594,26 @@ def _overlap_tick_impl(params, d_params, stage_p, stage_valid, model_kv,
             lambda x: jnp.zeros(
                 (x.shape[0], cfg.vocab_size), x.dtype),
             exit_out["p_last"])
-        # the replicated draft prefills the entering prompts inside this
-        # same compiled dispatch (its caches are slot-stacked, so one
-        # batched full-mode pass covers every joining slot; rows beyond
+        # the replicated draft prefills the entering prompt chunks inside
+        # this same compiled dispatch (its caches are slot-stacked, so
+        # one batched chunk pass covers every joining slot; the chunk
+        # writes land at each slot's own ``p_off`` offset, rows beyond
         # the prompt length are never attended, and non-entering slots
         # keep their buffers bit-unchanged)
         d_cache = jax.lax.cond(
             jnp.any(p_on),
             lambda dc: tf.where_cache_rows(
-                p_on, tf.prefill(d_params, d_cfg, p_tokens, dc)[1], dc),
+                p_on,
+                tf.prefill_chunk(d_params, d_cfg, p_tokens, dc, p_off)[1],
+                dc),
             lambda dc: dc,
             d_cache)
+    if paged_t:
+        model_kv = [paging.repaginate(v, c)
+                    for v, c in zip(mkv_v, model_kv)]
+        tree_kv = [paging.repaginate(v, c) for v, c in zip(tkv_v, tree_kv)]
+    if paged_d:
+        d_cache = paging.repaginate(dc_v, d_cache)
     return (model_kv, tree_kv, ring, d_cache, logits, exit_out["valid"],
             exit_out["version"], p_logits, p_valid)
 
@@ -566,15 +701,18 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
         commit-scatter + prune-gather (``calls["ctrl_active_ticks"]`` /
         ``calls["pipeline_tick"]`` is the measured ctrl-active rate).
       * ``begin_prefill(slot, prompt)`` (``prefill_cap > 0``) overlaps
-        admission prefill with the ring: the padded prompt enters the
-        tick's prefill lane as a special layer kind (version-bumped
-        slot, dead tree exit) and BOTH models' prefills ride the same
-        compiled dispatch — the target stage by stage around the ring,
-        the replicated draft beside it — so admission issues no separate
-        prefill dispatch and never idles the ring.  Returns a
-        ``DeferredPrefill`` future resolved at the lane's exit tick, or
-        ``None`` when the prompt exceeds ``prefill_cap`` (the caller
-        falls back to the parent's separate-dispatch ``prefill``).
+        admission prefill with the ring: the prompt is split into
+        ``prefill_cap``-token chunks that enter the tick's prefill lane
+        on consecutive ticks as a special layer kind (version-bumped
+        slot, dead tree exit), each chunk writing the stage caches at
+        its own per-slot offset (``p_off`` ring metadata), and BOTH
+        models' chunk prefills ride the same compiled dispatch — the
+        target stage by stage around the ring, the replicated draft
+        beside it — so admission at ANY prompt length issues no
+        separate prefill dispatch and never idles the ring.  Returns a
+        ``DeferredPrefill`` future resolved at the FINAL chunk's exit
+        tick; ``None`` only when the lane is disabled
+        (``prefill_cap == 0``).
       * ``kill(slot)`` invalidates the slot's in-flight layers in-ring
         (miss / retire) and bumps its tree version; ``drain()`` advances
         the ring with dead entries until every outstanding future
@@ -596,11 +734,18 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
                  slots: int, max_len: int, tree_capacity: int,
                  capacity: int, n_stages: Optional[int] = None, mesh=None,
                  dtype=jnp.float32, gate_ctrl: bool = True,
-                 donate: bool = True, prefill_cap: int = 64):
+                 donate: bool = True, prefill_cap: int = 64,
+                 paged: bool = False, page: int = 16):
         super().__init__(target, draft, slots=slots, max_len=max_len,
                          tree_capacity=tree_capacity, capacity=capacity,
-                         n_stages=n_stages, mesh=mesh, dtype=dtype)
+                         n_stages=n_stages, mesh=mesh, dtype=dtype,
+                         paged=paged, page=page)
         self.gate_ctrl, self.donate = bool(gate_ctrl), bool(donate)
+        if self.paged:
+            # paged leaves share ONE block-table array per row geometry
+            # across stage layers + the draft — XLA rejects donating the
+            # same buffer twice, so the paged tick runs undonated
+            self.donate = False
         # the draft is attention-family by construction (it tree-verifies
         # through the same per-row API), so its padded in-tick prefill is
         # causally invisible beyond each prompt's length — a recurrent
@@ -630,6 +775,11 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
         self._versions = np.zeros((slots,), np.int32)
         self._handles = [collections.deque() for _ in range(slots)]
         self._p_handles: dict = {}
+        # chunked prefill bookkeeping: queued (chunk, offset) pairs not
+        # yet entered, and outstanding lane exits per slot — the
+        # DeferredPrefill resolves when the LAST chunk exits
+        self._p_queue: dict = {}
+        self._p_exits: dict = {}
         self._identity_imap = np.tile(
             np.arange(capacity, dtype=np.int32), (slots, 1))
         self._kill_mask = np.zeros((slots,), bool)
@@ -657,29 +807,47 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
         self._p_tokens = np.zeros((self.slots, cap), np.int32)
         self._p_len = np.zeros((self.slots,), np.int32)
         self._p_on = np.zeros((self.slots,), bool)
+        self._p_off = np.zeros((self.slots,), np.int32)
+
+    def _stage_chunk(self, slot: int, chunk, off: int) -> None:
+        """Load one prompt chunk into the slot's prefill-lane entry row
+        for the next tick (tokens + per-slot cache offset)."""
+        self._p_tokens[slot] = 0
+        self._p_tokens[slot, :len(chunk)] = chunk
+        self._p_len[slot] = len(chunk)
+        self._p_off[slot] = off
+        self._p_on[slot] = True
 
     # -- prefill-in-ring ------------------------------------------------
     def begin_prefill(self, slot: int, prompt):
-        """Queue ``slot``'s admission prefill into the NEXT ring tick
-        (the prompt rides the prefill lane; both models' prefills run
-        inside that tick's single dispatch).  Returns a
-        ``DeferredPrefill`` future resolved at the lane's exit tick, or
-        ``None`` when the prompt does not fit ``prefill_cap`` (caller
-        falls back to the separate-dispatch ``prefill``)."""
+        """Queue ``slot``'s admission prefill into the ring: the prompt
+        is split into ``prefill_cap``-token chunks that enter the
+        prefill lane on consecutive ticks (each chunk written at its
+        own cache offset), so prompts of ANY length stream through the
+        ring with zero separate prefill dispatches.  Both models'
+        chunk prefills run inside each tick's single dispatch.  Returns
+        a ``DeferredPrefill`` future resolved at the FINAL chunk's exit
+        tick, or ``None`` only when the lane is disabled
+        (``prefill_cap == 0`` — caller falls back to the
+        separate-dispatch ``prefill``)."""
         pr = np.asarray(prompt).reshape(-1).astype(np.int32)
-        if not self.prefill_cap or len(pr) > self.prefill_cap:
+        if not self.prefill_cap:
             return None
         if self._handles[slot] or slot in self._p_handles:
             raise RuntimeError(
                 f"slot {slot} still has outstanding futures at admission")
+        cap = self.prefill_cap
+        chunks = [(pr[i:i + cap], i)
+                  for i in range(0, len(pr), cap)] or [(pr, 0)]
         self._versions[slot] += 1        # version-bumped slot
-        self._p_tokens[slot] = 0
-        self._p_tokens[slot, :len(pr)] = pr
-        self._p_len[slot] = len(pr)
-        self._p_on[slot] = True
+        self._stage_chunk(slot, *chunks[0])
+        if chunks[1:]:
+            self._p_queue[slot] = collections.deque(chunks[1:])
+        self._p_exits[slot] = len(chunks)
         h = DeferredPrefill(slot)
         self._p_handles[slot] = h
         self.calls["prefill_in_ring"] += 1
+        self.calls["prefill_chunks"] += len(chunks)
         return h
 
     # -- the per-timestep ring tick -------------------------------------
@@ -697,7 +865,7 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
             self._d_cache, tokens, positions, masks, write_idx, model_len,
             jnp.asarray(np.asarray(row_on)), jnp.asarray(self._versions),
             jnp.asarray(self._p_tokens), jnp.asarray(self._p_len),
-            jnp.asarray(self._p_on),
+            jnp.asarray(self._p_on), jnp.asarray(self._p_off),
             jnp.asarray(self._ctrl_commit), jnp.asarray(self._ctrl_len),
             jnp.asarray(self._ctrl_imap), jnp.asarray(self._ctrl_clear),
             jnp.asarray(ctrl_active), jnp.asarray(self._kill_mask))
@@ -708,6 +876,14 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
         self._reset_ctrl()
         self._reset_prefill()
         self._kill_mask[:] = False
+        # the lane is free again — feed each streaming prompt's next
+        # queued chunk so it enters with the NEXT tick (chunk c+1 reaches
+        # every stage exactly one tick behind chunk c's writes there)
+        for slot in list(self._p_queue):
+            q = self._p_queue[slot]
+            self._stage_chunk(slot, *q.popleft())
+            if not q:
+                del self._p_queue[slot]
         self.calls[counter] += 1
 
         ev, evers = np.asarray(exit_valid), np.asarray(exit_version)
@@ -726,12 +902,18 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
 
         if self.prefill_cap:
             for slot in np.nonzero(np.asarray(p_valid))[0]:
-                h = self._p_handles.pop(int(slot), None)
-                if h is None:
+                s = int(slot)
+                if s not in self._p_exits:
                     raise RuntimeError(
-                        f"prefill exit for slot {slot} with no "
+                        f"prefill exit for slot {s} with no "
                         f"outstanding prefill future")
-                h._value = p_logits[int(slot):int(slot) + 1]
+                self._p_exits[s] -= 1
+                if self._p_exits[s] == 0:
+                    # the FINAL chunk's exit carries the prompt's
+                    # last-position logits — earlier chunk exits only
+                    # mark ring progress
+                    del self._p_exits[s]
+                    self._p_handles.pop(s)._value = p_logits[s:s + 1]
 
     def tick_rows(self, tokens, positions, masks, model_len, write_idx,
                   row_on):
@@ -828,7 +1010,10 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
         if self.prefill_cap:
             self._p_on[slot] = False
             self._p_len[slot] = 0
+            self._p_off[slot] = 0
             self._p_tokens[slot] = 0
+            self._p_queue.pop(slot, None)
+            self._p_exits.pop(slot, None)
         if drop_ctrl:
             self._ctrl_commit[slot] = False
             self._ctrl_len[slot] = 0
@@ -839,14 +1024,17 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
     def drain(self) -> int:
         """Advance the ring with dead entries until every outstanding
         future — verify AND prefill — has resolved (at most
-        ``n_stages - 1`` ticks).  The engine's per-timestep ticks already
-        resolve every live flight, so this is a shutdown/test helper,
-        counted separately from the steady-state dispatches."""
+        ``n_stages - 1`` ticks, plus one tick per still-queued prompt
+        chunk of a streaming prefill).  The engine's per-timestep ticks
+        already resolve every live flight, so this is a shutdown/test
+        helper, counted separately from the steady-state dispatches."""
         tokens, positions, masks, model_len, write_idx = self.dead_entry
         row_on = np.zeros((self.slots,), bool)
+        limit = self.n_stages + max(
+            [len(q) for q in self._p_queue.values()], default=0)
         n = 0
         while any(self._handles) or self._p_handles:
-            assert n < self.n_stages, "ring failed to drain"
+            assert n < limit, "ring failed to drain"
             self._dispatch_tick(tokens, positions, masks, model_len,
                                 write_idx, row_on, "drain_tick")
             n += 1

@@ -49,7 +49,10 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.models import paging
 from repro.models import transformer as tf
 
 # Row write-back donates the full arena buffer so XLA can update the slot
@@ -57,6 +60,9 @@ from repro.models import transformer as tf
 # same result, just not O(1)).  ``start`` is static: one compile per slot.
 _store_rows = jax.jit(tf.update_cache_rows, static_argnames=("start",),
                       donate_argnums=(0,))
+# paged variant: leaves share one table array, which cannot be donated twice
+_store_rows_nodonate = jax.jit(tf.update_cache_rows,
+                               static_argnames=("start",))
 
 
 class SlotPool:
@@ -173,6 +179,383 @@ class KVArena(SlotPool):
         self._stacked[2], self._stacked[3] = t_tree, d_tree
 
 
+class PagePool:
+    """Free-list of physical KV blocks for one block kind (model or tree).
+
+    Block ids run 1..n_blocks; physical block 0 is the reserved *null
+    block* (see ``models.paging``) and is never handed out.  Tracks peak
+    occupancy for the DBStats page counters."""
+
+    def __init__(self, n_blocks: int):
+        assert n_blocks >= 1
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks, 0, -1))  # pop -> 1..
+        self.in_use = 0
+        self.peak = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """All-or-nothing allocation of ``n`` block ids (None if the pool
+        cannot satisfy it — the caller requeues or swaps out a victim)."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self.in_use += n
+        self.peak = max(self.peak, self.in_use)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        for i in ids:
+            assert i != 0, "null block cannot be freed"
+            self._free.append(i)
+        self.in_use -= len(ids)
+
+
+class PageAllocator:
+    """Host-side block tables + free pools for a paged KV arena.
+
+    Keeps one numpy ``[slots, blocks_per_slot]`` table per block kind —
+    "model" rows (length ``max_len``) and "tree" rows (length
+    ``tree_capacity``) — shared by the target and the draft (their leaves
+    have different row widths but identical row *counts*, so one logical
+    block id backs the same rows of every leaf of that kind).  Entry 0
+    means unallocated (the null block).  ``PagedKVArena`` mirrors these
+    tables to device after every mutation.
+
+    Policy knobs: ``page`` is the power-of-two block size in rows;
+    ``model_blocks``/``tree_blocks`` cap the physical pools (defaults back
+    every slot fully — set lower to oversubscribe, which is the whole
+    point: admission then fit-checks against the *request's* horizon, not
+    ``max_len``)."""
+
+    def __init__(self, *, slots: int, page: int, max_len: int,
+                 tree_capacity: int, model_blocks: Optional[int] = None,
+                 tree_blocks: Optional[int] = None):
+        assert page >= 1 and (page & (page - 1)) == 0, \
+            f"page size must be a power of two, got {page}"
+        self.page = page
+        self.slots = slots
+        self.nb_model_slot = paging.n_blocks(max_len, page)
+        self.nb_tree_slot = paging.n_blocks(tree_capacity, page)
+        self.model = PagePool(model_blocks or slots * self.nb_model_slot)
+        self.tree = PagePool(tree_blocks or slots * self.nb_tree_slot)
+        self.model_table = np.zeros((slots, self.nb_model_slot), np.int32)
+        self.tree_table = np.zeros((slots, self.nb_tree_slot), np.int32)
+        self._rows = {"model": np.zeros(slots, np.int64),
+                      "tree": np.zeros(slots, np.int64)}
+        self.swaps = 0
+        self.preemptions = 0
+        self.expand_copies = 0
+
+    def _of(self, kind: str) -> Tuple[PagePool, np.ndarray]:
+        return ((self.model, self.model_table) if kind == "model"
+                else (self.tree, self.tree_table))
+
+    def blocks_of(self, kind: str, slot: int) -> int:
+        _, table = self._of(kind)
+        return int(np.count_nonzero(table[slot]))
+
+    def ensure(self, kind: str, slot: int, rows: int) -> bool:
+        """Back logical rows [0, rows) of ``slot``, growing by whole
+        blocks.  Growth past the currently-backed region is the
+        copy-on-expand event for tree slack: the new block replaces the
+        null-block alias, making previously-virtual slack real."""
+        pool, table = self._of(kind)
+        need = paging.n_blocks(rows, self.page)
+        have = self.blocks_of(kind, slot)
+        if need > have:
+            ids = pool.alloc(need - have)
+            if ids is None:
+                return False
+            table[slot, have:need] = ids
+            if have > 0:
+                self.expand_copies += need - have
+        self._rows[kind][slot] = max(self._rows[kind][slot], rows)
+        return True
+
+    def release(self, kind: str, slot: int) -> List[int]:
+        pool, table = self._of(kind)
+        ids = [int(i) for i in table[slot] if i]
+        pool.free(ids)
+        table[slot] = 0
+        self._rows[kind][slot] = 0
+        return ids
+
+    def release_slot(self, slot: int) -> None:
+        self.release("model", slot)
+        self.release("tree", slot)
+
+    def counters(self) -> Dict[str, float]:
+        """The DBStats page-pool counters: occupancy, peak, internal
+        fragmentation (allocated-but-unused rows inside backed blocks),
+        swap/preemption/expand traffic."""
+        in_use = self.model.in_use + self.tree.in_use
+        used_rows = int(self._rows["model"].sum() + self._rows["tree"].sum())
+        frag = (100.0 * (1.0 - used_rows / (in_use * self.page))
+                if in_use else 0.0)
+        return {"blocks_in_use": in_use,
+                "blocks_total": self.model.n_blocks + self.tree.n_blocks,
+                "peak_blocks": self.model.peak + self.tree.peak,
+                "frag_pct": frag,
+                "swaps": self.swaps,
+                "preemptions": self.preemptions,
+                "expand_copies": self.expand_copies}
+
+
+class PagedKVArena(KVArena):
+    """Block-paged KV cache arenas behind the same ``KVArena`` interface.
+
+    Every KV buffer (the ``CACHE_LEN_AXIS_FROM_END`` names, including the
+    int8 per-row scales) becomes a ``models.paging.Paged`` leaf — a flat
+    physical row pool plus the allocator's per-slot block table — while
+    recurrent state and other non-length buffers stay dense.  The whole
+    executor tower reads/writes these through the paged-aware cache
+    helpers; jitted dispatches densify at entry and repaginate at exit,
+    so schedules and dispatch counts are unchanged.
+
+    On top of the base arena this adds the production memory policies:
+
+      * **admission fit-check** — ``fits(req)``/``bind(slot, req)`` back a
+        request's *horizon* (prompt + token budget + tree slack, capped at
+        ``max_len``) instead of ``max_len`` rows, so short requests pin
+        proportionally few blocks and a fixed byte budget admits more
+        concurrent slots (the fig8 paged capacity claim);
+      * **LRU swap-to-host** — ``swap_out(slot)`` gathers the slot's rows
+        to host numpy, frees its blocks, and zeroes its table rows;
+        ``swap_in(slot)`` re-allocates (possibly different) blocks and
+        scatters the rows back — resumed requests are bit-identical
+        because attention only ever sees the table-indirected dense view;
+      * **preemption of parked slots** — ``park(slot)`` marks a slot
+        preemptible; when admission cannot fit a request,
+        ``swap_out_lru()`` evicts the least-recently-``touch``ed parked
+        slot to make room.
+    """
+
+    def __init__(self, target, draft, *, slots: int, max_len: int,
+                 tree_capacity: int, page: int = 16,
+                 model_blocks: Optional[int] = None,
+                 tree_blocks: Optional[int] = None,
+                 lazy_tree: bool = False):
+        super().__init__(target, draft, slots=slots, max_len=max_len,
+                         tree_capacity=tree_capacity)
+        self.pages = PageAllocator(slots=slots, page=page, max_len=max_len,
+                                   tree_capacity=tree_capacity,
+                                   model_blocks=model_blocks,
+                                   tree_blocks=tree_blocks)
+        self.page = page
+        # lazy_tree backs only the busy tree region at bind and relies on
+        # ensure_tree() growth calls before expansion (copy-on-expand);
+        # the default backs the full tree capacity at admission.
+        self.lazy_tree = lazy_tree
+        self._tables: Dict[str, jax.Array] = {}
+        self._swapped: Dict[int, list] = {}
+        self._swap_blocks: Dict[int, Tuple[int, int]] = {}
+        self._parked: set = set()
+        self._stamp: Dict[int, int] = {}
+        self._clock = 0
+
+    # -- arena construction --------------------------------------------
+    def _paginate(self, cache, kind: str):
+        pool = self.pages.model if kind == "model" else self.pages.tree
+        table = self._tables[kind]
+
+        def conv(path, leaf):
+            if leaf is None:
+                return None
+            name = getattr(path[-1], "key", None) if path else None
+            if name not in tf.CACHE_LEN_AXIS_FROM_END:
+                return leaf          # recurrent state etc. stays dense
+            ax = tf.cache_len_axis(name, leaf)
+            n_pre = ax - 1
+            assert leaf.shape[n_pre] == self.slots
+            row = leaf.shape[:n_pre] + leaf.shape[ax + 1:]
+            pages = jnp.zeros(((pool.n_blocks + 1) * self.page, *row),
+                              leaf.dtype)
+            return paging.Paged(pages, table, self.page, leaf.shape[ax],
+                                n_pre)
+
+        return jax.tree_util.tree_map_with_path(
+            conv, cache, is_leaf=lambda x: x is None)
+
+    def _ensure(self) -> None:
+        if self._stacked is not None:
+            return
+        self._tables = {"model": jnp.asarray(self.pages.model_table),
+                        "tree": jnp.asarray(self.pages.tree_table)}
+        dense = [self.target.init_cache(self.slots, self.max_len),
+                 self.draft.init_cache(self.slots, self.max_len),
+                 self.target.init_tree_caches(self.slots,
+                                              self.tree_capacity),
+                 self.draft.init_tree_caches(self.slots,
+                                             self.tree_capacity)]
+        kinds = ["model", "model", "tree", "tree"]
+        self._stacked = [self._paginate(c, k) for c, k in zip(dense, kinds)]
+
+    def _sync_tables(self) -> None:
+        """Mirror the host block tables to device and re-thread them into
+        every paged leaf (pools are untouched — tables are tiny)."""
+        self._tables = {"model": jnp.asarray(self.pages.model_table),
+                        "tree": jnp.asarray(self.pages.tree_table)}
+
+        def retab(cache, table):
+            return jax.tree_util.tree_map(
+                lambda x: paging.Paged(x.pages, table, x.page, x.length,
+                                       x.n_pre)
+                if paging.is_paged(x) else x,
+                cache, is_leaf=lambda x: x is None or paging.is_paged(x))
+
+        tm, tt = self._tables["model"], self._tables["tree"]
+        self._stacked = [retab(self._stacked[0], tm),
+                         retab(self._stacked[1], tm),
+                         retab(self._stacked[2], tt),
+                         retab(self._stacked[3], tt)]
+
+    def pool_bytes(self) -> int:
+        """Actual bytes the arena pins: physical pools for paged leaves
+        plus any dense (state) leaves — the fixed-HBM-budget currency of
+        the fig8 paged-capacity bench."""
+        self._ensure()
+        total = 0
+        for cache in self._stacked:
+            for leaf in jax.tree_util.tree_leaves(
+                    cache, is_leaf=lambda x: x is None or paging.is_paged(x)):
+                if leaf is None:
+                    continue
+                arr = leaf.pages if paging.is_paged(leaf) else leaf
+                total += arr.size * arr.dtype.itemsize
+        return total
+
+    # -- per-slot views -------------------------------------------------
+    def caches(self, slot: int) -> tuple:
+        """Per-slot row views, densified: paged leaves cannot ride the
+        layer scan inside ``ModelBundle`` dispatches, so the per-request
+        path (admission prefill, engine state machines) sees plain dense
+        batch-1 caches; ``store`` scatters them back through the block
+        table."""
+        return tuple(paging.densify(c) for c in super().caches(slot))
+
+    def store(self, slot: int, caches: tuple) -> None:
+        """Scatter a request's dense row views back through the block
+        tables.  No donation here: every paged leaf of a cache shares ONE
+        table array, and donating the same buffer twice is an XLA error —
+        the pools themselves still update functionally."""
+        assert slot in self._in_use, f"slot {slot} not allocated"
+        self._stacked = [_store_rows_nodonate(full, row, start=slot)
+                         for full, row in zip(self._stacked, caches)]
+
+    # -- admission policy ----------------------------------------------
+    def _horizon(self, req) -> int:
+        prompt = getattr(req, "prompt", None)
+        plen = len(prompt) if prompt is not None else self.max_len
+        budget = getattr(req, "max_new_tokens", None)
+        if budget is None:
+            budget = self.max_len
+        # + tree_capacity: a final verify may commit a whole tree past the
+        # budget boundary before retire truncates the tokens
+        return min(self.max_len, plen + budget + self.tree_capacity)
+
+    def _tree_rows(self, req) -> int:
+        return 1 if self.lazy_tree else self.tree_capacity
+
+    def fits(self, req) -> bool:
+        nm = paging.n_blocks(self._horizon(req), self.page)
+        nt = paging.n_blocks(max(self._tree_rows(req), 1), self.page)
+        return (self.n_free > 0 and self.pages.model.n_free >= nm
+                and self.pages.tree.n_free >= nt)
+
+    def bind(self, slot: int, req) -> None:
+        """Back the admitted request's pages (called right after
+        ``alloc()``; ``fits`` made this infallible)."""
+        ok = self.pages.ensure("model", slot, self._horizon(req))
+        ok = ok and self.pages.ensure("tree", slot, self._tree_rows(req))
+        assert ok, "bind() without a passing fits() check"
+        self.touch(slot)
+        self._sync_tables()
+
+    def ensure_tree(self, slot: int, rows: int) -> None:
+        """Copy-on-expand growth of the tree slack region (lazy_tree
+        mode): back tree rows [0, rows) before an expansion writes
+        them."""
+        if not self.lazy_tree:
+            return
+        if not self.pages.ensure("tree", slot, min(rows,
+                                                   self.tree_capacity)):
+            raise RuntimeError("tree page pool exhausted on expand")
+        self._sync_tables()
+
+    def free(self, slot: int) -> None:
+        super().free(slot)
+        self.pages.release_slot(slot)
+        self._swapped.pop(slot, None)
+        self._parked.discard(slot)
+        self._stamp.pop(slot, None)
+        self._sync_tables()
+
+    # -- LRU swap-to-host / preemption ---------------------------------
+    def touch(self, slot: int) -> None:
+        self._clock += 1
+        self._stamp[slot] = self._clock
+
+    def park(self, slot: int) -> None:
+        """Mark an in-use slot preemptible (its request is idle: paused
+        stream, awaiting client, ...)."""
+        assert slot in self._in_use
+        self._parked.add(slot)
+
+    def unpark(self, slot: int) -> None:
+        self._parked.discard(slot)
+
+    def swap_out(self, slot: int) -> None:
+        """Swap a slot's KV rows to host and free its pages.  The dense
+        row view (model + tree, target + draft — including any dense
+        state leaves, which a preempting occupant would overwrite) is the
+        swap image."""
+        assert slot in self._in_use and slot not in self._swapped
+        rows = [paging.densify(tf.slice_cache_rows(c, slot, 1))
+                for c in self._stacked]
+        self._swapped[slot] = jax.tree_util.tree_map(np.asarray, rows)
+        nm = self.pages.blocks_of("model", slot)
+        nt = self.pages.blocks_of("tree", slot)
+        self._swap_blocks[slot] = (nm, nt)
+        self.pages.release_slot(slot)
+        self.pages.swaps += 1
+        self._sync_tables()
+
+    def swap_in(self, slot: int) -> bool:
+        """Restore a swapped-out slot: re-allocate its block counts
+        (physical ids may differ — the table indirection makes that
+        invisible) and scatter the host rows back.  False if the pools
+        cannot fit it yet."""
+        assert slot in self._swapped
+        nm, nt = self._swap_blocks[slot]
+        if self.pages.model.n_free < nm or self.pages.tree.n_free < nt:
+            return False
+        ok = self.pages.ensure("model", slot, nm * self.page)
+        ok = ok and self.pages.ensure("tree", slot, nt * self.page)
+        assert ok
+        self._sync_tables()
+        rows = jax.tree_util.tree_map(jnp.asarray, self._swapped.pop(slot))
+        del self._swap_blocks[slot]
+        self._stacked = [tf.update_cache_rows(full, row, start=slot)
+                         for full, row in zip(self._stacked, rows)]
+        self.touch(slot)
+        return True
+
+    def swap_out_lru(self) -> Optional[int]:
+        """Evict the least-recently-touched parked slot (admission's
+        make-room path).  None when nothing is preemptible."""
+        victims = [s for s in self._parked if s not in self._swapped]
+        if not victims:
+            return None
+        slot = min(victims, key=lambda s: self._stamp.get(s, 0))
+        self.swap_out(slot)
+        self.pages.preemptions += 1
+        return slot
+
+
 @dataclasses.dataclass
 class SchedulerStats:
     """Per-uid lifecycle timestamps (in global pipeline timesteps) plus an
@@ -238,29 +621,53 @@ class DynamicBatchScheduler:
             eff += 1
         return eff
 
-    def _pop_best(self, now: int):
+    def _pop_best_entry(self, now: int):
         """Highest effective priority among arrived requests; ties go to
         the earliest submission (exact FIFO when priorities are equal)."""
         arrived = [(seq, r) for seq, r in self._entries
                    if getattr(r, "arrival_t", 0) <= now]
         if not arrived:
             return None
-        seq, best = max(arrived,
-                        key=lambda e: (self.effective_priority(e[1], now),
-                                       -e[0]))
-        self._entries.remove((seq, best))
-        return best
+        entry = max(arrived,
+                    key=lambda e: (self.effective_priority(e[1], now),
+                                   -e[0]))
+        self._entries.remove(entry)
+        return entry
+
+    def _pop_best(self, now: int):
+        entry = self._pop_best_entry(now)
+        return entry[1] if entry is not None else None
 
     def admit(self, now: int) -> List[Tuple[object, int]]:
         """Admit arrived requests (best-effective-priority first) while
         slots are free.  Returns [(request, slot)] for this timestep's
-        joins."""
+        joins.
+
+        Page-aware arenas add a fit-check: a request whose page horizon
+        does not fit first tries to make room by preempting (LRU
+        swap-to-host) parked slots; failing that it is requeued with its
+        original submission seq, so aging keeps raising its effective
+        priority while it waits for pages (the anti-starvation bound
+        holds under page pressure exactly as under slot pressure)."""
         admitted: List[Tuple[object, int]] = []
         while self.arena.n_free:
-            req = self._pop_best(now)
-            if req is None:
+            entry = self._pop_best_entry(now)
+            if entry is None:
                 break
+            seq, req = entry
+            fits = getattr(self.arena, "fits", None)
+            if fits is not None and not fits(req):
+                swap_lru = getattr(self.arena, "swap_out_lru", None)
+                while (swap_lru is not None and not fits(req)
+                       and swap_lru() is not None):
+                    pass
+                if not fits(req):
+                    self._entries.append(entry)   # requeue, seq preserved
+                    break
             slot = self.arena.alloc()
+            bind = getattr(self.arena, "bind", None)
+            if bind is not None:
+                bind(slot, req)
             self.stats.admitted_t[req.uid] = now
             admitted.append((req, slot))
         return admitted

@@ -112,10 +112,12 @@ def test_prefill_rides_the_tick_dispatch(bundles):
     assert ex.calls["ctrl_active_ticks"] <= ex.calls["pipeline_tick"]
 
 
-def test_long_prompt_falls_back_to_separate_prefill(bundles):
-    """A prompt longer than the ring's prefill lane falls back to the
-    parent's separate-dispatch prefill — tokens still bit-match the
-    single-request engine."""
+def test_long_prompt_streams_through_ring_in_chunks(bundles):
+    """A prompt longer than the ring's prefill lane no longer falls back
+    to a separate dispatch: it streams through the lane in
+    ``prefill_cap``-token chunks over consecutive ticks — tokens still
+    bit-match the single-request engine, with zero ``ModelBundle``
+    prefill calls and one tick per timestep throughout."""
     target, draft = bundles
     rng = np.random.default_rng(14)
     long_prompt = rng.integers(0, 100, size=12).astype(np.int32)
@@ -125,14 +127,18 @@ def test_long_prompt_falls_back_to_separate_prefill(bundles):
     single = PipeDecEngine(target, draft, PCFG1, max_len=MAX_LEN)
     want = {r.uid: single.generate(r.prompt, r.max_new_tokens)[0]
             for r in reqs}
-    before = dict(target.calls)
+    before = {b: dict(b.calls) for b in (target, draft)}
     eng, ex, res = _run(bundles, reqs, prefill_cap=8)
     for uid, tokens in want.items():
         np.testing.assert_array_equal(res[uid].tokens, tokens,
                                       err_msg=f"uid={uid}")
-    assert ex.calls["prefill_in_ring"] == 1, "short prompt rides the ring"
-    assert target.calls["prefill"] == before.get("prefill", 0) + 1, \
-        "long prompt takes the separate-dispatch fallback"
+    assert ex.calls["prefill_in_ring"] == 2, "both prompts ride the ring"
+    assert ex.calls["prefill_chunks"] == 3, \
+        "12-token prompt = 2 chunks at cap 8, short prompt = 1"
+    for b in (target, draft):
+        assert b.calls["prefill"] == before[b].get("prefill", 0), \
+            "no separate-dispatch prefill at any prompt length"
+    assert eng.stats.separate_prefill_dispatches == 0
     assert ex.calls["pipeline_tick"] == eng.stats.timesteps
 
 

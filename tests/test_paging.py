@@ -1,0 +1,358 @@
+"""Block-paged KV storage: ``models.paging`` pool/table ops, the Pallas
+paged attention kernels vs their jnp oracles, and end-to-end bit-identity
+of the paged serving executors (chunked prefill past ``prefill_cap``
+included).
+
+The paged invariant mirrors dense slot recycling: unallocated logical
+blocks alias physical block 0 (the null block), whose rows every
+attention mask already excludes — so gathers are well-defined and writes
+at the buffer edge collapse harmlessly onto block 0.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipedec import PipeDecConfig, PipeDecEngine
+from repro.core.speculative import ModelBundle
+from repro.kernels import ops, ref
+from repro.models import paging
+from repro.models import transformer as tf
+from repro.serving import (LocalFusedExecutor, OverlappedShardedExecutor,
+                           Request, ShardedPipelineExecutor,
+                           SpecPipeDBEngine)
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# models.paging unit ops
+# --------------------------------------------------------------------------
+def _dense(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def test_make_paged_round_trip_shuffled_table():
+    """Dense -> pool+table -> dense is the identity for ANY block
+    permutation: the table indirection hides physical placement."""
+    rng = np.random.default_rng(0)
+    b, length, d, page = 3, 20, 5, 8
+    mb = paging.n_blocks(length, page)
+    dense = _dense(rng, (b, length, d))
+    table = 1 + rng.permutation(b * mb).reshape(b, mb).astype(np.int32)
+    p = paging.make_paged(dense, table, page)
+    assert paging.is_paged(p) and p.slots == b and p.length == length
+    assert paging.dense_shape(p) == dense.shape
+    np.testing.assert_array_equal(paging.to_dense(p), dense)
+
+
+def test_round_trip_stacked_layout_n_pre():
+    """Stacked buffers ([reps, B, L, ...]) page the same way with the
+    leading dims folded into the physical row."""
+    rng = np.random.default_rng(1)
+    reps, b, length, d, page = 2, 2, 16, 4, 8
+    dense = _dense(rng, (reps, b, length, d))
+    table = 1 + np.arange(b * 2, dtype=np.int32).reshape(b, 2)
+    p = paging.make_paged(dense, table, page, n_pre=1)
+    np.testing.assert_array_equal(paging.to_dense(p), dense)
+    upd = _dense(rng, dense.shape)
+    np.testing.assert_array_equal(
+        paging.to_dense(paging.from_dense(p, upd)), upd)
+
+
+def test_null_block_aliasing_and_write_drop():
+    """Unallocated logical blocks (table entry 0) alias ONE shared null
+    block (don't-care rows every mask excludes); out-of-range and
+    masked-off ``write_len_rows`` writes are redirected into it without
+    corrupting any backed row of any slot."""
+    rng = np.random.default_rng(2)
+    b, length, d, page = 2, 16, 3, 8
+    dense = _dense(rng, (b, length, d))
+    # each slot's SECOND logical block is unallocated
+    table = np.asarray([[1, 0], [2, 0]], np.int32)
+    p = paging.make_paged(dense, table, page)
+    got = np.asarray(paging.to_dense(p))
+    np.testing.assert_array_equal(got[0, :page], dense[0, :page])
+    np.testing.assert_array_equal(got[1, :page], dense[1, :page])
+    # both unbacked regions read the SAME physical null block
+    np.testing.assert_array_equal(got[0, page:], got[1, page:])
+
+    before = got
+    u = _dense(rng, (b, 4, d))
+    # slot 0 masked off, slot 1 writes past the buffer edge: both are
+    # redirected into the null block — every BACKED row stays bit-intact
+    p2 = paging.write_len_rows(p, u, starts=[4, length],
+                               on=[False, True])
+    after = np.asarray(paging.to_dense(p2))
+    np.testing.assert_array_equal(after[0, :page], before[0, :page])
+    np.testing.assert_array_equal(after[1, :page], before[1, :page])
+
+
+def test_write_len_rows_and_take_len_rows():
+    rng = np.random.default_rng(3)
+    b, length, d, page = 2, 24, 4, 8
+    dense = _dense(rng, (b, length, d))
+    table = 1 + np.arange(b * 3, dtype=np.int32).reshape(b, 3)
+    p = paging.make_paged(dense, table, page)
+    u = _dense(rng, (b, 5, d))
+    starts = np.asarray([2, 13], np.int32)
+    p2 = paging.write_len_rows(p, u, starts)
+    want = np.asarray(dense).copy()
+    for i in range(b):
+        want[i, starts[i]:starts[i] + 5] = u[i]
+    np.testing.assert_array_equal(paging.to_dense(p2), want)
+    idx = np.asarray([[2, 3, 4], [13, 14, 15]], np.int32)
+    np.testing.assert_array_equal(
+        paging.take_len_rows(p2, idx),
+        np.stack([want[i, idx[i]] for i in range(b)]))
+
+
+def test_slice_slots_adopt_pool_and_write_slot_rows():
+    """Bucketed-dispatch plumbing: a slot-row view shares the pool, its
+    functional update is adopted back, and untouched slots are
+    bit-unchanged."""
+    rng = np.random.default_rng(4)
+    b, length, d, page = 3, 16, 4, 8
+    dense = _dense(rng, (b, length, d))
+    table = 1 + np.arange(b * 2, dtype=np.int32).reshape(b, 2)
+    p = paging.make_paged(dense, table, page)
+    view = paging.slice_slots(p, 1, 2)
+    np.testing.assert_array_equal(paging.to_dense(view),
+                                  np.asarray(dense)[1:3])
+    upd = _dense(rng, (2, length, d))
+    merged = paging.adopt_pool(p, paging.from_dense(view, upd))
+    got = np.asarray(paging.to_dense(merged))
+    np.testing.assert_array_equal(got[0], dense[0])
+    np.testing.assert_array_equal(got[1:], upd)
+
+    upd2 = _dense(rng, (1, length, d))
+    got2 = paging.to_dense(paging.write_slot_rows(p, upd2, 2))
+    np.testing.assert_array_equal(got2[:2], np.asarray(dense)[:2])
+    np.testing.assert_array_equal(got2[2], upd2[0])
+
+
+def test_where_slots_selects_blocks_per_slot():
+    rng = np.random.default_rng(5)
+    b, length, d, page = 3, 16, 4, 8
+    table = 1 + np.arange(b * 2, dtype=np.int32).reshape(b, 2)
+    old = paging.make_paged(_dense(rng, (b, length, d)), table, page)
+    new = paging.from_dense(old, _dense(rng, (b, length, d)))
+    on = np.asarray([True, False, True])
+    got = np.asarray(paging.to_dense(paging.where_slots(on, new, old)))
+    want_new = np.asarray(paging.to_dense(new))
+    want_old = np.asarray(paging.to_dense(old))
+    for i in range(b):
+        np.testing.assert_array_equal(got[i],
+                                      want_new[i] if on[i] else want_old[i])
+
+
+def test_densify_repaginate_tree():
+    rng = np.random.default_rng(6)
+    table = 1 + np.arange(4, dtype=np.int32).reshape(2, 2)
+    p = paging.make_paged(_dense(rng, (2, 16, 4)), table, 8)
+    tree = {"k": p, "state": _dense(rng, (2, 3)), "none": None}
+    assert paging.any_paged(tree)
+    d = paging.densify(tree)
+    assert not paging.any_paged(d)
+    upd = jax.tree.map(lambda x: x + 1.0, d)
+    back = paging.repaginate(tree, upd)
+    assert paging.is_paged(back["k"])
+    np.testing.assert_array_equal(paging.to_dense(back["k"]), upd["k"])
+    np.testing.assert_array_equal(back["state"], upd["state"])
+
+
+# --------------------------------------------------------------------------
+# paged Pallas kernels vs oracles (interpret mode, like test_kernels.py)
+# --------------------------------------------------------------------------
+def _blocked(dense, page, rng):
+    """[B,KV,L,hd] -> shuffled ([Nb,KV,page,hd] pool, [B,mb] table)."""
+    b, kvh, length, hd = dense.shape
+    mb = -(-length // page)
+    pad = mb * page - length
+    if pad:
+        dense = np.pad(np.asarray(dense), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    dense = np.asarray(dense)
+    ids = 1 + rng.permutation(b * mb)
+    pool = np.zeros((1 + b * mb, kvh, page) + dense.shape[3:],
+                    dense.dtype)
+    table = np.zeros((b, mb), np.int32)
+    i = 0
+    for bb in range(b):
+        for j in range(mb):
+            pool[ids[i]] = dense[bb, :, j * page:(j + 1) * page]
+            table[bb, j] = ids[i]
+            i += 1
+    return jnp.asarray(pool), jnp.asarray(table)
+
+
+def test_paged_gather_ref_is_table_indirection():
+    rng = np.random.default_rng(7)
+    dense = _dense(rng, (2, 3, 32, 8))
+    pool, table = _blocked(dense, 8, rng)
+    np.testing.assert_array_equal(ref.paged_gather_ref(pool, table, 32),
+                                  dense)
+
+
+@pytest.mark.parametrize("b,h,kv,hd,page,mbl", [
+    (2, 4, 2, 64, 16, 4),
+    (1, 2, 1, 32, 8, 6),
+])
+def test_paged_decode_attention_kernel_vs_oracle_vs_dense(b, h, kv, hd,
+                                                          page, mbl):
+    """Paged flash-decode == paged oracle == dense reference on the
+    gathered view — per-row kv_len, shuffled physical blocks."""
+    rng = np.random.default_rng(hash((b, h, hd)) % 2 ** 31)
+    lmax = page * mbl
+    q = _dense(rng, (b, h, 1, hd))
+    k = _dense(rng, (b, kv, lmax, hd))
+    v = _dense(rng, (b, kv, lmax, hd))
+    # k and v ride ONE table — block both with the same permutation
+    k_pool, table = _blocked(k, page, np.random.default_rng(42))
+    v_pool, vtab = _blocked(v, page, np.random.default_rng(42))
+    np.testing.assert_array_equal(table, vtab)
+    kv_len = jnp.asarray(rng.integers(1, lmax, size=b), jnp.int32)
+    out = ops.paged_decode_attention(q, k_pool, v_pool, table, kv_len)
+    want = ref.paged_decode_attention_ref(q, k_pool, v_pool, table, kv_len)
+    dense_want = ref.decode_attention_ref(
+        q, k, v, kv_len.reshape(-1, 1, 1, 1))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(dense_want),
+                               **TOL)
+
+
+def test_paged_tree_attention_kernel_vs_oracle_with_ragged_tree():
+    """Two-level paged tree attention vs its oracle and the dense
+    two-level reference; the tree capacity is NOT a multiple of the page
+    (the last block's tail must be force-masked)."""
+    rng = np.random.default_rng(11)
+    b, h, kv, n, hd, page = 2, 4, 2, 4, 32, 8
+    lmax, t = 32, 13
+    q = _dense(rng, (b, h, n, hd))
+    kp = _dense(rng, (b, kv, lmax, hd))
+    vp = _dense(rng, (b, kv, lmax, hd))
+    kt = _dense(rng, (b, kv, t, hd))
+    vt = _dense(rng, (b, kv, t, hd))
+    k_pool, table = _blocked(kp, page, np.random.default_rng(42))
+    v_pool, _ = _blocked(vp, page, np.random.default_rng(42))
+    kt_pool, t_table = _blocked(kt, page, np.random.default_rng(43))
+    vt_pool, _ = _blocked(vt, page, np.random.default_rng(43))
+    mask = jnp.asarray(rng.random((b, n, t)) > 0.4).at[:, :, 0].set(True)
+    plen = jnp.asarray(rng.integers(1, lmax, size=b), jnp.int32)
+    out = ops.paged_tree_attention(q, k_pool, v_pool, table, kt_pool,
+                                   vt_pool, t_table, mask, plen)
+    want = ref.paged_tree_attention_ref(q, k_pool, v_pool, table, kt_pool,
+                                        vt_pool, t_table, mask, plen)
+    dense_want = ref.tree_attention_ref(q, kp, vp, kt, vt, mask, plen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(dense_want),
+                               **TOL)
+
+
+def test_paged_decode_attention_quant_vs_oracle():
+    """Int8 pools with blocked per-row scales ride the same table maps."""
+    rng = np.random.default_rng(13)
+    b, h, kv, hd, page, lmax = 1, 2, 1, 32, 8, 32
+    q = _dense(rng, (b, h, 1, hd))
+    k8 = rng.integers(-127, 128, size=(b, kv, lmax, hd)).astype(np.int8)
+    v8 = rng.integers(-127, 128, size=(b, kv, lmax, hd)).astype(np.int8)
+    ks = rng.random((b, kv, lmax)).astype(np.float32) * 0.02 + 0.001
+    vs = rng.random((b, kv, lmax)).astype(np.float32) * 0.02 + 0.001
+    k_pool, table = _blocked(jnp.asarray(k8), page,
+                             np.random.default_rng(42))
+    v_pool, _ = _blocked(jnp.asarray(v8), page, np.random.default_rng(42))
+    ks_pool, _ = _blocked(jnp.asarray(ks)[..., None], page,
+                          np.random.default_rng(42))
+    vs_pool, _ = _blocked(jnp.asarray(vs)[..., None], page,
+                          np.random.default_rng(42))
+    ks_pool, vs_pool = ks_pool[..., 0], vs_pool[..., 0]
+    kv_len = lmax - 5
+    out = ops.paged_decode_attention(q, k_pool, v_pool, table, kv_len,
+                                     k_scale=ks_pool, v_scale=vs_pool)
+    want = ref.paged_decode_attention_ref(q, k_pool, v_pool, table, kv_len,
+                                          k_scale=ks_pool, v_scale=vs_pool)
+    dense_want = ref.decode_attention_quant_ref(
+        q, jnp.asarray(k8), jnp.asarray(v8), kv_len,
+        k_scale=jnp.asarray(ks), v_scale=jnp.asarray(vs))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(dense_want),
+                               **TOL)
+
+
+# --------------------------------------------------------------------------
+# paged serving executors: bit-identity + chunked prefill
+# --------------------------------------------------------------------------
+PCFG = PipeDecConfig(n_stages=3, width=4, branch=2)
+# the overlapped ring length equals pcfg.n_stages, and in-process tests
+# only have a 1-device mesh — multi-stage paged overlap runs via the
+# subprocess sharded_check --paged CI legs
+PCFG1 = PipeDecConfig(n_stages=1, width=4, branch=2)
+MAX_LEN = 128
+
+
+@pytest.fixture(scope="module")
+def bundles(tiny_dense, tiny_draft):
+    tp = tf.init_model(jax.random.PRNGKey(0), tiny_dense)
+    dp = tf.init_model(jax.random.PRNGKey(9), tiny_draft)
+    return ModelBundle(tp, tiny_dense), ModelBundle(dp, tiny_draft)
+
+
+def _reqs():
+    rng = np.random.default_rng(21)
+    lens = [4, 21, 6]          # 21 > prefill_cap: chunked on overlapped
+    return [Request(i, rng.integers(0, 100, size=n).astype(np.int32),
+                    3 + i % 2, arrival_t=i)
+            for i, n in enumerate(lens)]
+
+
+def test_paged_executors_bit_identical_to_dense(bundles):
+    """Every paged backend must reproduce the dense single-request
+    outputs bit-for-bit; the overlapped backend additionally streams the
+    long prompt through the ring in prefill_cap chunks with exactly one
+    tick per timestep and no standalone prefill dispatch."""
+    target, draft = bundles
+    reqs = _reqs()
+    want = {
+        pcfg.n_stages: {r.uid: PipeDecEngine(target, draft, pcfg,
+                                             max_len=MAX_LEN)
+                              .generate(r.prompt, r.max_new_tokens)[0]
+                        for r in reqs}
+        for pcfg in (PCFG, PCFG1)}
+    cap = 8
+    mk = {
+        "local": (PCFG, lambda: LocalFusedExecutor(
+            target, draft, slots=2, max_len=MAX_LEN,
+            tree_capacity=PCFG.tree_buffer_capacity,
+            capacity=PCFG.capacity, paged=True, page=16)),
+        "sharded": (PCFG1, lambda: ShardedPipelineExecutor(
+            target, draft, slots=2, max_len=MAX_LEN,
+            tree_capacity=PCFG1.tree_buffer_capacity,
+            capacity=PCFG1.capacity, n_stages=1, paged=True, page=16)),
+        "overlapped": (PCFG1, lambda: OverlappedShardedExecutor(
+            target, draft, slots=2, max_len=MAX_LEN,
+            tree_capacity=PCFG1.tree_buffer_capacity,
+            capacity=PCFG1.capacity, n_stages=1, prefill_cap=cap,
+            paged=True, page=16)),
+    }
+    for name, (pcfg, make) in mk.items():
+        ex = make()
+        eng = SpecPipeDBEngine(target, draft, pcfg, max_len=MAX_LEN,
+                               max_slots=2, executor=ex)
+        before = {m: dict(m.calls) for m in (target, draft)}
+        for r in reqs:
+            eng.submit(r)
+        res = eng.run()
+        for uid, tokens in want[pcfg.n_stages].items():
+            np.testing.assert_array_equal(res[uid].tokens, tokens,
+                                          err_msg=f"paged {name} uid={uid}")
+        if name == "overlapped":
+            assert ex.calls["pipeline_tick"] == eng.stats.timesteps
+            assert ex.calls["prefill_in_ring"] == len(reqs)
+            chunks = sum(-(-len(r.prompt) // cap) for r in reqs)
+            assert ex.calls["prefill_chunks"] == chunks
+            assert eng.stats.separate_prefill_dispatches == 0
+            for m in (target, draft):
+                assert m.calls["prefill"] == before[m].get("prefill", 0)
+        if name == "local":
+            ctrs = eng.stats.page_counters
+            assert ctrs and ctrs[-1]["blocks_in_use"] >= 0
+            assert max(c["peak_blocks"] for c in ctrs) > 0

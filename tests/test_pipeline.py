@@ -302,7 +302,8 @@ def test_tick_prefill_lane_matches_prefill(tiny_dense):
     ptok[0, :len(prompt)] = prompt
     pentry = {"act": embed(params["embed"], jnp.asarray(ptok)),
               "len": jnp.asarray([len(prompt), 0], jnp.int32),
-              "on": jnp.asarray([True, False])}
+              "on": jnp.asarray([True, False]),
+              "off": jnp.zeros((2,), jnp.int32)}
     w = pcfg.width
     dead_entry = {
         "act": jnp.zeros((2, w, cfg.d_model)),

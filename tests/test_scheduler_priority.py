@@ -6,14 +6,15 @@ effective priority eventually outranks any bounded-priority fresh
 traffic, and all-default-priority traffic stays exact FIFO (the
 equivalence tests elsewhere depend on that)."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.pipedec import PipeDecConfig, PipeDecEngine
 from repro.core.speculative import ModelBundle
 from repro.models import transformer as tf
-from repro.serving import (DynamicBatchScheduler, Request, SlotPool,
-                           SpecPipeDBEngine)
+from repro.serving import (DynamicBatchScheduler, PagedKVArena, Request,
+                           SlotPool, SpecPipeDBEngine)
 
 PCFG = PipeDecConfig(n_stages=3, width=4, branch=2)
 
@@ -110,6 +111,108 @@ def bundles(tiny_dense, tiny_draft):
     tp = tf.init_model(jax.random.PRNGKey(0), tiny_dense)
     dp = tf.init_model(jax.random.PRNGKey(9), tiny_draft)
     return ModelBundle(tp, tiny_dense), ModelBundle(dp, tiny_draft)
+
+
+# -- paged-arena preemption: swap-to-host + admission under page pressure --
+
+def _paged_arena(bundles, **kw):
+    """Tight paged arena: page=8, 32 model rows / 12 tree rows per slot.
+    With model_blocks=3, tree_blocks=2 exactly ONE default request
+    (horizon 3+4+12=19 -> 3 model blocks, full 12-row tree -> 2 blocks)
+    fits at a time, regardless of free slots — page pressure, not slot
+    pressure."""
+    target, draft = bundles
+    kw.setdefault("slots", 2)
+    return PagedKVArena(target, draft, max_len=32, tree_capacity=12,
+                        page=8, **kw)
+
+
+def _fill(rows, seed):
+    def leaf(x):
+        v = jnp.arange(x.size, dtype=jnp.float32) % 7 + seed
+        return v.reshape(x.shape).astype(x.dtype)
+    return jax.tree.map(leaf, rows)
+
+
+def test_swap_out_swap_in_resume_bit_identical(bundles):
+    """Swap a slot's KV image to host, let ANOTHER request take its
+    physical blocks, swap it back in (different block ids) — the dense
+    row view the attention path reads must be bit-identical.  The table
+    indirection makes the physical relocation invisible."""
+    arena = _paged_arena(bundles, model_blocks=3, tree_blocks=2)
+    r0 = _req(0)
+    assert arena.fits(r0)
+    s0 = arena.alloc()
+    arena.bind(s0, r0)
+    arena.store(s0, _fill(arena.caches(s0), seed=3))
+    before = jax.tree.map(np.asarray, arena.caches(s0))
+
+    blocks_before = arena.pages.model.in_use + arena.pages.tree.in_use
+    arena.swap_out(s0)
+    assert arena.pages.swaps == 1
+    assert arena.pages.model.in_use + arena.pages.tree.in_use == 0, \
+        "swap-out must release every physical block"
+
+    # a second occupant claims the freed blocks and scribbles over them
+    r1 = _req(1)
+    assert arena.fits(r1)
+    s1 = arena.alloc()
+    arena.bind(s1, r1)
+    arena.store(s1, _fill(arena.caches(s1), seed=11))
+    assert not arena.swap_in(s0), "pool exhausted: swap-in must refuse"
+
+    arena.free(s1)
+    assert arena.swap_in(s0)
+    assert arena.pages.model.in_use + arena.pages.tree.in_use == \
+        blocks_before
+    after = jax.tree.map(np.asarray, arena.caches(s0))
+    jax.tree.map(np.testing.assert_array_equal, before, after)
+
+
+def test_admission_preempts_lru_parked_slot(bundles):
+    """When a request's page horizon does not fit, admission evicts the
+    least-recently-touched *parked* slot (LRU swap-to-host) to make room
+    — busy slots are never preempted."""
+    arena = _paged_arena(bundles, slots=3, model_blocks=6, tree_blocks=4)
+    sched = DynamicBatchScheduler(arena)
+    sched.submit(_req(0))
+    sched.submit(_req(1))
+    admitted = sched.admit(now=0)
+    assert [r.uid for r, _ in admitted] == [0, 1]
+    slots = {r.uid: s for r, s in admitted}
+    arena.park(slots[0])
+    arena.park(slots[1])
+    arena.touch(slots[0])          # slot of uid 1 is now the LRU victim
+
+    sched.submit(_req(2))
+    admitted = sched.admit(now=1)
+    assert [r.uid for r, _ in admitted] == [2]
+    assert arena.pages.preemptions == 1
+    assert slots[1] in arena._swapped, "LRU parked slot must be the victim"
+    assert slots[0] not in arena._swapped
+
+
+def test_aging_bounds_starvation_under_page_pressure(bundles):
+    """The anti-starvation bound must hold when the bottleneck is pages,
+    not slots: a default-priority request that could not fit is requeued
+    with its submission seq, keeps aging, and once its effective priority
+    ties fresher priority-1 traffic it wins on submission order."""
+    arena = _paged_arena(bundles, model_blocks=3, tree_blocks=2)
+    sched = DynamicBatchScheduler(arena, aging=4)
+    sched.submit(_req(0))
+    pool_req = sched.admit(now=0)
+    assert [r.uid for r, _ in pool_req] == [0]
+
+    # free slots remain, but no pages: the queued request is NOT admitted
+    sched.submit(_req(1, arrival=0))
+    assert sched.admit(now=1) == []
+    assert sched.pending == 1, "unfittable request must be requeued"
+
+    # uid 0 retires; a fresh priority-1 request contends at now=4 — by
+    # then uid 1 has waited aging*1 timesteps and ties, winning FIFO
+    sched.retire(0, pool_req[0][1], now=3)
+    sched.submit(_req(2, arrival=4, priority=1))
+    assert [r.uid for r, _ in sched.admit(now=4)] == [1]
 
 
 def test_priorities_never_deadlock_or_starve_in_engine(bundles):
