@@ -100,7 +100,8 @@ def measure_sharded_engines(w: int, c: int = 4, *, slots: int = 3,
     import jax
 
     from repro.core.pipedec import PipeDecConfig
-    from repro.serving import (OverlappedShardedExecutor, Request,
+    from repro.serving import (AsyncPipelineExecutor,
+                               OverlappedShardedExecutor, Request,
                                ShardedPipelineExecutor, SpecPipeDBEngine)
 
     n_stages = len(jax.devices())
@@ -123,6 +124,10 @@ def measure_sharded_engines(w: int, c: int = 4, *, slots: int = 3,
         # prefill dispatches, outputs bit-identical to the dense runs
         ("overlapped_paged", OverlappedShardedExecutor,
          {"paged": True, "page": 16, "prefill_cap": 16}),
+        # the async free-running schedule: per-stage actor threads + a
+        # disaggregated draft actor — no host lockstep at all, measured
+        # by the same workload and pinned bit-identical to the flush
+        ("async", AsyncPipelineExecutor, {}),
     )
     for name, cls, kw in variants:
         ex = cls(target, draft, slots=slots, max_len=256,
@@ -130,7 +135,7 @@ def measure_sharded_engines(w: int, c: int = 4, *, slots: int = 3,
                  capacity=pcfg.capacity, n_stages=n_stages, **kw)
         eng = SpecPipeDBEngine(target, draft, pcfg, max_len=256,
                                max_slots=slots, executor=ex)
-        if name.startswith("overlapped"):
+        if name.startswith("overlapped") or name == "async":
             # warm-up run so the timed pass prices the steady-state tick,
             # not its one-off jit compile
             for uid, p in enumerate(prompts):
@@ -144,7 +149,7 @@ def measure_sharded_engines(w: int, c: int = 4, *, slots: int = 3,
         results[name] = eng.run()
         run_s = time.perf_counter() - t0
         steps = max(eng.stats.timesteps, 1)
-        if name.startswith("overlapped"):
+        if name.startswith("overlapped") or name == "async":
             ticks = ex.calls["pipeline_tick"]
             hops = ticks                       # one stage-hop per tick
         else:
@@ -164,11 +169,32 @@ def measure_sharded_engines(w: int, c: int = 4, *, slots: int = 3,
             out[name]["separate_prefill_dispatches"] = (
                 target.calls["prefill"] + draft.calls["prefill"]
                 - prefill_before)
+        elif name == "async":
+            ctr = ex.counters()
+            out[name]["timestep_cost_s"] = round(run_s / steps, 6)
+            # entry messages < timesteps: empty timesteps push NOTHING
+            # (the async pipe has no dead ticks); per-stage layer steps
+            # account for every entry at every stage
+            out[name]["entry_msgs"] = ex.calls["entry_msgs"]
+            out[name]["ctrl_msgs"] = ex.calls["ctrl_msgs"]
+            out[name]["stage_steps"] = ex.calls["stage_steps"]
+            out[name]["max_draft_lead"] = ctr["max_draft_lead"]
+            out[name]["max_inbox_depth"] = max(
+                s["max_depth"] for s in ctr["stages"])
+            out[name]["stage_busy_s"] = [round(s["busy_s"], 4)
+                                         for s in ctr["stages"]]
+            out[name]["stage_idle_s"] = [round(s["idle_s"], 4)
+                                         for s in ctr["stages"]]
+            ex.shutdown()
     assert all(
         np.array_equal(results["flush"][u].tokens, results[v][u].tokens)
         for u in results["flush"]
-        for v in ("overlapped", "overlapped_ungated", "overlapped_paged")), \
+        for v in ("overlapped", "overlapped_ungated", "overlapped_paged",
+                  "async")), \
         "schedules must agree token-for-token"
+    assert out["async"]["stage_steps"] == \
+        out["async"]["entry_msgs"] * n_stages, \
+        "every entry message must step every stage exactly once"
     assert out["overlapped"]["separate_prefill_dispatches"] == 0, \
         "overlapped admissions must prefill in-ring"
     assert out["overlapped_paged"]["separate_prefill_dispatches"] == 0, \
@@ -332,6 +358,13 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
               f"chunks over "
               f"{pg['dispatch_counts'].get('prefill_in_ring', 0)} "
               f"admissions (chunked prefill), outputs bit-identical")
+        asy = sharded["async"]
+        print(f"  async free-running: {asy['entry_msgs']} entry msgs over "
+              f"{asy['timesteps']} timesteps "
+              f"({asy['timestep_cost_s']*1e3:.2f} ms/timestep vs "
+              f"{over['tick_cost_s']*1e3:.2f} lockstep), draft lead up to "
+              f"{asy['max_draft_lead']}, max inbox depth "
+              f"{asy['max_inbox_depth']}, outputs bit-identical")
 
     # modelled curves.  The sim's ctrl term is priced with the MEASURED
     # active rate; t_ctrl is modelled as one stage's tree-buffer pass
@@ -365,6 +398,12 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
             hw, batch, tps, batch_scale=scale, flush=True)
         tbt_sh = sim.specpipe_db_sharded_tbt(hw, batch, tps,
                                              batch_scale=scale)
+        thr_async = sim.specpipe_db_async_throughput(
+            hw, batch, tps, batch_scale=scale,
+            ctrl_rate=ctrl_rate, t_ctrl=t_ctrl)
+        tbt_async = sim.specpipe_db_async_tbt(
+            hw, batch, tps, batch_scale=scale,
+            ctrl_rate=ctrl_rate, t_ctrl=t_ctrl)
         curves.append({
             "batch": batch, "pp": thr_pp, "stpp": thr_st,
             "pipedec": thr_pd, "specpipe_db": thr_db,
@@ -374,6 +413,8 @@ def run(verbose: bool = True, n_stages: int = 14, w: int = 16,
             "specpipe_db_sharded_ungated_ctrl": thr_ungated,
             "specpipe_db_sharded_flush": thr_fl,
             "specpipe_db_sharded_tbt_s": tbt_sh,
+            "specpipe_db_async": thr_async,
+            "specpipe_db_async_tbt_s": tbt_async,
         })
         rows.append((f"fig8_batch{batch}",
                      (time.perf_counter() - t0) * 1e6,

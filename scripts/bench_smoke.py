@@ -29,7 +29,14 @@ re-inflates the tick:
   * the paged allocator must keep its fixed-HBM-budget capacity win —
     ≥1.5x the dense slot count (measured through the real
     ``PagedKVArena`` admission fit-check) and fewer bytes per active
-    token.
+    token;
+  * the async free-running schedule must keep its message accounting
+    exact — every entry message steps every stage exactly once
+    (``stage_steps == entry_msgs * mesh_stages``), empty timesteps push
+    nothing (``entry_msgs <= timesteps``), and the disaggregated draft
+    actor actually runs ahead of commits (``max_draft_lead >= 1``); its
+    tokens are covered by the same ``bit_identical`` gate as the
+    lockstep schedules.
 
 Wall-clock numbers (``tick_cost_s``) are reported but never gated —
 runner noise is not a regression.  The regenerated JSON is written to
@@ -113,8 +120,23 @@ def check(baseline: dict, fresh: dict, rate_slack: float):
          f"paged bytes/active-token {cap['paged_bytes_per_active_token']} "
          f"< dense {cap['dense_bytes_per_active_token']}")
 
+    # async free-running schedule: gate only the deterministic message
+    # accounting — wall-clock (timestep_cost_s) stays informational
+    asy = new["async"]
+    gate(asy["stage_steps"] == asy["entry_msgs"] * new["mesh_stages"],
+         f"async: every entry message steps every stage exactly once "
+         f"({asy['stage_steps']} stage steps == {asy['entry_msgs']} "
+         f"entries x {new['mesh_stages']} stages)")
+    gate(asy["ticks_per_timestep"] <= 1.0 + 1e-9,
+         f"async: empty timesteps push nothing "
+         f"(ticks_per_timestep {asy['ticks_per_timestep']} <= 1.0)")
+    gate(asy["max_draft_lead"] >= 1,
+         f"async: disaggregated draft runs ahead of commits "
+         f"(max_draft_lead {asy['max_draft_lead']})")
+
     print(f"  info tick_cost_s gated={over_n.get('tick_cost_s')} "
           f"ungated={new['overlapped_ungated'].get('tick_cost_s')} "
+          f"async_timestep={asy.get('timestep_cost_s')} "
           f"(not gated: wall-clock noise)")
     return errors
 

@@ -1,3 +1,8 @@
+"""Algorithmic core of the reproduction: the dynamic token tree
+(``tree``), the single-request SpecPipe engine (``pipedec``), chain/STPP
+baselines, the fused-batch model seam (``speculative.ModelBundle``) and
+the analytic latency/throughput models (``sim``).
+"""
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.

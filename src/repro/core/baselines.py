@@ -27,6 +27,9 @@ def generate_autoregressive(target: ModelBundle, prompt: np.ndarray,
                             sampling: SamplingParams = SamplingParams(),
                             max_len: int = 512,
                             key: Optional[jax.Array] = None) -> np.ndarray:
+    """Plain autoregressive decode (the paper's PP baseline): one token
+    per full pipeline pass.
+    """
     key = key if key is not None else jax.random.PRNGKey(0)
     cache = target.init_cache(1, max_len)
     logits, cache = target.prefill(jnp.asarray(prompt, jnp.int32)[None], cache)
@@ -51,6 +54,9 @@ def generate_autoregressive(target: ModelBundle, prompt: np.ndarray,
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class STPPConfig:
+    """Static-tree speculative decoding config: fixed depth/width/branch
+    per round (contrast: ``PipeDecConfig``'s dynamic tree).
+    """
     depth: int = 4            # static tree depth per round
     width: int = 8
     branch: int = 4
@@ -63,6 +69,7 @@ class STPPConfig:
 
 @dataclasses.dataclass
 class STPPStats:
+    """Per-request STPP counters (rounds, accepted tokens)."""
     rounds: int = 0
     commits: int = 0
     draft_steps: int = 0
@@ -74,6 +81,9 @@ class STPPStats:
 
 
 class STPPEngine:
+    """STPP baseline: draft a static tree, verify it in one batched
+    target pass, accept the longest matching path, repeat.
+    """
     def __init__(self, target: ModelBundle, draft: ModelBundle,
                  scfg: STPPConfig, max_len: int = 512):
         assert target.cfg.vocab_size == draft.cfg.vocab_size

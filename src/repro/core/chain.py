@@ -28,6 +28,9 @@ from repro.core.speculative import ModelBundle, SamplingParams, select_token
 
 @dataclasses.dataclass
 class ChainConfig:
+    """Chain (width-1 tree) speculative pipeline config — the PipeInfer-
+    style ablation of the dynamic tree.
+    """
     n_stages: int = 4
     max_chain: int = 0  # 0 => n_stages + 4
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)

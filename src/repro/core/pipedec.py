@@ -50,6 +50,9 @@ from repro.core.speculative import (ModelBundle, SamplingParams,
 
 @dataclasses.dataclass
 class PipeDecConfig:
+    """Dynamic-tree SpecPipe config: stage count, max tree layer width
+    w, max children per node c, tree depth cap and sampling.
+    """
     n_stages: int = 4
     width: int = 8            # max tree layer width w
     branch: int = 4           # max children per node c
@@ -113,6 +116,9 @@ def remap_flight_indices(node_idx: np.ndarray, index_map) -> np.ndarray:
 
 @dataclasses.dataclass
 class GenStats:
+    """Per-request SpecPipe counters: timesteps, commits, hit/miss
+    verifications and ring entries.
+    """
     timesteps: int = 0
     commits: int = 0
     hits: int = 0
@@ -166,6 +172,10 @@ class DecodeState:
 
 
 class PipeDecEngine:
+    """Single-request SpecPipe engine: drives the dynamic token tree
+    through the stage ring one timestep at a time (entry at t exits
+    at t + n_stages - 1) and commits on the hit path.
+    """
     def __init__(self, target: ModelBundle, draft: ModelBundle,
                  pcfg: PipeDecConfig, max_len: int = 512):
         assert target.cfg.vocab_size == draft.cfg.vocab_size
@@ -307,6 +317,10 @@ class PipeDecEngine:
         rows_valid = nidx >= 0
         if not rows_valid.any():
             return
+        if hasattr(dlog, "resolve"):
+            # async backend: the draft actor's verify is a lazy future —
+            # block here (expansion is the first consumer of the logits)
+            dlog = dlog.resolve()
         # surviving rows, in (compacted) index order, align with the
         # deepest layer's slots
         order = np.argsort(np.where(rows_valid, nidx,

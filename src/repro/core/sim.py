@@ -34,17 +34,24 @@ class StageHardware:
 
 
 def pp_latency_per_token(hw: StageHardware) -> float:
+    """Seconds/token for plain PP: one full ring traversal per token."""
     return hw.n_stages * hw.t_stage_one + (hw.n_stages - 1) * hw.t_comm
 
 
 def pipedec_latency_per_token(hw: StageHardware,
                               tokens_per_timestep: float) -> float:
+    """Seconds/token for single-request SpecPipe: one timestep
+    (max(draft, hop) + sync) amortised over tokens/timestep.
+    """
     timestep = max(hw.t_draft, hw.t_stage_width + hw.t_comm) + hw.t_sync
     return timestep / max(tokens_per_timestep, 1e-9)
 
 
 def stpp_latency_per_token(hw: StageHardware, depth: int,
                            mean_accepted: float) -> float:
+    """Seconds/token for STPP: a serial draft+full-verify round
+    amortised over the mean accepted path.
+    """
     t_round = depth * hw.t_draft \
         + hw.n_stages * hw.t_stage_width + (hw.n_stages - 1) * hw.t_comm
     return t_round / (mean_accepted + 1.0)
@@ -97,6 +104,9 @@ def pipedec_throughput(hw: StageHardware, batch: int,
 def stpp_throughput(hw: StageHardware, batch: int, depth: int,
                     mean_accepted: float,
                     batch_scale: Callable[[int], float] = None) -> float:
+    """Tokens/s for STPP with ``batch`` tasks overlapping their verify
+    passes across stages.
+    """
     s = batch_scale(batch) if batch_scale else 1.0
     stage = hw.t_stage_width * s + hw.t_comm
     # with k≥1 concurrent tasks the pipeline overlaps different tasks'
@@ -180,6 +190,10 @@ def specpipe_db_sharded_timestep(hw: StageHardware, batch: int,
                                  t_ctrl: float = 0.0,
                                  prefill_rate: float = 0.0,
                                  t_prefill: float = 0.0) -> float:
+    """Per-timestep cost of the sharded deployment: flush pays
+    n_stages hops + separate ctrl/prefill dispatches; overlapped
+    pays ONE hop with gated ctrl riding it.
+    """
     s = batch_scale(batch) if batch_scale else 1.0
     hop = hw.t_stage_width * s + hw.t_comm
     if flush:
@@ -200,6 +214,7 @@ def specpipe_db_sharded_throughput(hw: StageHardware, batch: int,
                                    batch_scale: Callable[[int], float]
                                    = None, flush: bool = False,
                                    **cost_terms) -> float:
+    """Tokens/s = batch * tokens_per_timestep / sharded timestep."""
     ts = specpipe_db_sharded_timestep(hw, batch, batch_scale, flush,
                                       **cost_terms)
     return batch * tokens_per_timestep / ts
@@ -209,6 +224,48 @@ def specpipe_db_sharded_tbt(hw: StageHardware, batch: int,
                             tokens_per_timestep: float,
                             batch_scale: Callable[[int], float] = None,
                             flush: bool = False, **cost_terms) -> float:
+    """Time-between-tokens = sharded timestep / tokens_per_timestep."""
     ts = specpipe_db_sharded_timestep(hw, batch, batch_scale, flush,
                                       **cost_terms)
+    return ts / max(tokens_per_timestep, 1e-9)
+
+
+# --------------------------------------------------------------------------
+# Async free-running stages + disaggregated draft
+# (``AsyncPipelineExecutor``): no host lockstep, so the per-timestep host
+# synchronisation term ``t_sync`` — the barrier the overlapped schedule
+# still pays to dispatch its one tick and broadcast hit indices — drops
+# out entirely.  The draft term leaves the max() too: the disaggregated
+# draft actor speculates on its own device concurrently with the target
+# hops, so steady-state throughput is gated by the slowest stage hop (plus
+# the gated ctrl share), with the draft only binding if it is slower than
+# the whole target pipe — the PipeInfer/PipeSpec regime.
+# --------------------------------------------------------------------------
+def specpipe_db_async_timestep(hw: StageHardware, batch: int,
+                               batch_scale: Callable[[int], float] = None,
+                               ctrl_rate: float = 0.0,
+                               t_ctrl: float = 0.0) -> float:
+    """Steady-state per-timestep cost of the async free-running schedule:
+    ``max(draft, hop + ctrl_rate * t_ctrl)`` with NO ``t_sync`` — the
+    lockstep barrier is gone, and per-stage inbox queues absorb jitter."""
+    s = batch_scale(batch) if batch_scale else 1.0
+    hop = hw.t_stage_width * s + hw.t_comm
+    return max(hw.t_draft * s, hop + ctrl_rate * t_ctrl)
+
+
+def specpipe_db_async_throughput(hw: StageHardware, batch: int,
+                                 tokens_per_timestep: float,
+                                 batch_scale: Callable[[int], float]
+                                 = None, **cost_terms) -> float:
+    """Tokens/s = batch * tokens_per_timestep / async timestep."""
+    ts = specpipe_db_async_timestep(hw, batch, batch_scale, **cost_terms)
+    return batch * tokens_per_timestep / ts
+
+
+def specpipe_db_async_tbt(hw: StageHardware, batch: int,
+                          tokens_per_timestep: float,
+                          batch_scale: Callable[[int], float] = None,
+                          **cost_terms) -> float:
+    """Time-between-tokens = async timestep / tokens_per_timestep."""
+    ts = specpipe_db_async_timestep(hw, batch, batch_scale, **cost_terms)
     return ts / max(tokens_per_timestep, 1e-9)

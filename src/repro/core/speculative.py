@@ -28,6 +28,7 @@ from repro.models.config import ModelConfig
 
 @dataclasses.dataclass
 class SamplingParams:
+    """Sampling controls: temperature (0 => greedy), top-k, top-p."""
     temperature: float = 0.0  # 0 => greedy
     top_k: int = 0
     top_p: float = 1.0

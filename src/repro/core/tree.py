@@ -35,6 +35,10 @@ NEG_INF = jnp.float32(-1e30)
 
 
 class Tree(NamedTuple):
+    """The dynamic prediction tree, packed into fixed-capacity arrays:
+    per-node token/logprob/parent/depth, the ancestor-or-self
+    attention mask and the packed prefix/deepest-layer bounds.
+    """
     tokens: jnp.ndarray       # [N] int32
     logprob: jnp.ndarray      # [N] f32 cumulative log-prob from root (root=0)
     parent: jnp.ndarray       # [N] int32, -1 for root / invalid
@@ -53,6 +57,7 @@ class Tree(NamedTuple):
 
 
 def tree_init(capacity: int, root_token) -> Tree:
+    """Fresh single-node tree holding ``root_token`` at index 0."""
     tokens = jnp.zeros((capacity,), jnp.int32).at[0].set(
         jnp.asarray(root_token, jnp.int32))
     logprob = jnp.full((capacity,), NEG_INF).at[0].set(0.0)

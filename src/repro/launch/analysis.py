@@ -68,6 +68,10 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
 
 @dataclasses.dataclass
 class Roofline:
+    """Roofline cost terms for one compiled (arch, shape, mesh) combo:
+    HLO flops/bytes vs per-chip peaks, collective bytes vs ICI, and
+    the resulting bottleneck / useful-flops ratio.
+    """
     arch: str
     shape: str
     mesh: str
@@ -134,6 +138,9 @@ def model_flops_estimate(cfg, shape, kind: str) -> float:
 
 def analyze_compiled(arch: str, shape_name: str, mesh_desc: str, chips: int,
                      lowered, compiled, cfg, shape, kind: str) -> Roofline:
+    """Build the ``Roofline`` row from a lowered+compiled function
+    (``cost_analysis`` flops/bytes, HLO-text collective bytes).
+    """
     cost = compiled.cost_analysis()
     if isinstance(cost, list):  # older API returns [dict]
         cost = cost[0]

@@ -1,16 +1,18 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape)
+combination on the production meshes and extract roofline terms.
+
+The XLA_FLAGS line below MUST stay the first executable statement in
+this module (jax locks the device count at first init).  Do not import
+this module from tests that expect a single device — run
+``python -m repro.launch.dryrun``.
+
+Usage::
+
+  python -m repro.launch.dryrun --arch qwen2.5-32b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
-# Multi-pod dry-run: lower + compile every (arch × input-shape) combination
-# on the production meshes and extract roofline terms.
-#
-# The two lines above MUST stay the first statements in this module (jax
-# locks the device count at first init).  Do not import this module from
-# tests that expect a single device — run ``python -m repro.launch.dryrun``.
-#
-# Usage:
-#   python -m repro.launch.dryrun --arch qwen2.5-32b --shape decode_32k
-#   python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
 
 import argparse
 import json
@@ -40,6 +42,8 @@ def _opt_specs(param_specs_tree):
 
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               verbose: bool = True):
+    """Lower + compile one (arch, input-shape) combination on its
+    production mesh and return the roofline row."""
     cfg = cfg_reg.get_config(arch)
     shape = specs.SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -252,6 +256,7 @@ def lower_pipeline_tick(arch: str, *, n_stages: int = 16, width: int = 32,
 
 
 def tf_init_specs(cfg):
+    """Shape-only (eval_shape) bf16 param specs for ``cfg``."""
     import repro.models.transformer as tf
     return jax.eval_shape(
         lambda: tf.init_model(jax.random.PRNGKey(0), cfg,
@@ -259,6 +264,7 @@ def tf_init_specs(cfg):
 
 
 def main(argv=None):
+    """CLI entry: dry-run one combination, or ``--all`` of them."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None,

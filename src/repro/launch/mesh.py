@@ -10,6 +10,9 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The paper-scale mesh: (data=16, model=16), or
+    (pod=2, data=16, model=16) with ``multi_pod``.
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
@@ -24,6 +27,7 @@ def make_host_mesh(model: int = 1, data: int = 1):
 
 
 def data_axes(mesh) -> tuple:
+    """Mesh axes usable for batch sharding (('pod',) 'data')."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 

@@ -29,7 +29,17 @@ SpecPipe-DB rides the same ring *batched*: every ring/entry leaf and every
 stage cache carries a leading slot axis (``batch`` = KV slots), so one tick
 moves EVERY in-flight request's tree layer one stage forward.
 
-Two executor schedules drive this tick (``serving.executor``):
+The per-stage math itself (layer application, ctrl commit+compact, chunk
+prefill) is factored into ``make_stage_fns`` so it has exactly ONE
+definition: the lockstep tick below composes those functions inside a
+``shard_map`` body, and the free-running async executor
+(``serving.executor.AsyncPipelineExecutor``) jits the *same* functions
+per stage actor — which is how the async schedule stays bit-identical to
+the lockstep references by construction.
+
+Two lockstep executor schedules drive this tick (``serving.executor``);
+a third (async) backend replaces the tick with free-running per-stage
+actors over the same stage functions:
 
   * **flush** (``ShardedPipelineExecutor`` via ``make_pipeline_verify``):
     each global timestep pushes the batched entry layer through all
@@ -121,6 +131,9 @@ _SHARD_MAP_KW = inspect.signature(_shard_map).parameters
 
 
 def shard_map(f, **kwargs):
+    """``jax.shard_map`` wrapper translating check_vma/check_rep across
+    jax versions.
+    """
     # jax renamed check_rep -> check_vma; translate for older versions
     if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_KW:
         kwargs["check_rep"] = kwargs.pop("check_vma")
@@ -134,6 +147,10 @@ from repro.models.layers import embed, rmsnorm, unembed
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
+    """Static shape of the pipelined deployment: stage count, tree layer
+    width w (rows per ring entry), tree KV capacity and model KV
+    length.
+    """
     n_stages: int
     width: int            # w (tree layer width)
     tree_capacity: int    # tree KV buffer rows
@@ -235,9 +252,108 @@ def init_ring(cfg: ModelConfig, pcfg: PipelineConfig, dtype=jnp.float32,
     return ring
 
 
+def make_stage_fns(cfg: ModelConfig, pcfg: PipelineConfig):
+    """The per-stage compute, defined ONCE for every pipeline schedule.
+
+    Returns ``(stage_apply, stage_ctrl, stage_prefill)``:
+
+      * ``stage_apply(stage_p, valid_row, kv, tkv, x, positions, mask,
+        write_idx, model_len, in_valid) -> (x_out, new_tkv)`` — apply one
+        stage's layer block to its in-flight batched tree layer
+        ([B, w, d]; per-row metadata frozen at that layer's ring entry).
+        Invalid rows (``in_valid`` or a padded ``valid_row`` layer) pass
+        activations through untouched and leave the tree cache unwritten.
+      * ``stage_ctrl(kv, tkv, commit_on, commit_len, index_map) ->
+        (kv, tkv)`` — the pruning-propagation message applied to one
+        stage's local cache slice: exit-commit tree row 0 into the model
+        cache, then compact the tree rows through the old→new
+        ``index_map`` (identity map + ``commit_on=False`` is the no-op).
+      * ``stage_prefill(stage_p, valid_row, kv, x, on, off) ->
+        (new_kv, x_out)`` — one stage's layers in chunk (prefill) mode
+        over a padded prompt lane [B, Pcap, d], writing participating
+        slots' model-cache rows [off, off + Pcap).
+
+    The lockstep ``make_pipedec_tick`` composes these inside its
+    ``shard_map`` body; ``serving.executor.AsyncPipelineExecutor`` jits
+    the very same functions once per free-running stage actor.  One
+    definition of the math is what makes the two schedules bit-identical
+    on greedy workloads — they differ only in WHEN each stage runs, not
+    in what it computes.
+    """
+    kinds = tf.unit_kinds(cfg)
+    assert kinds == ("attn",), "pipeline stages support attention stacks"
+    lps, _ = stage_layout(cfg, pcfg.n_stages)
+
+    def stage_apply(stage_p, valid_row, kv, tkv, x, positions, mask,
+                    write_idx, model_len, in_valid):
+        """Apply this stage's layers to its in-flight batched tree layer
+        ([B, w, d] activations; per-row metadata rides with the layer)."""
+        ctx = tf.Ctx(mode="tree", positions=positions,
+                     cache_len=jnp.asarray(model_len, jnp.int32),
+                     tree_write_index=jnp.asarray(write_idx, jnp.int32),
+                     tree_mask=mask)
+        xs = x  # [B, w, d]
+        new_tkv = []
+        for l in range(lps):
+            # per-layer param/cache buffers (lists over the in-stage dim)
+            unit_p = stage_p[l]
+            c = [kv[l]]
+            tc = [tkv[l]]
+            y, _, ntc, _ = tf._apply_unit(unit_p, cfg, kinds, xs, c, tc, ctx)
+            ok = valid_row[l] & in_valid                 # [B]
+            xs = jnp.where(ok[:, None, None], y, xs)
+            new_tkv.append(jax.tree.map(
+                lambda old, new, k=ok: jnp.where(
+                    k.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
+                tc[0], ntc[0]))
+        return xs, new_tkv
+
+    def stage_ctrl(kv, tkv, commit_on, commit_len, index_map):
+        """Commit-then-compact one stage's local caches (the pruning
+        propagation message; identity map + no commit is the no-op)."""
+        node0 = jnp.zeros_like(commit_len)
+        kv = [tf.commit_tree_nodes(cfg, kv[l], tkv[l], node0, commit_len,
+                                   commit_on)
+              for l in range(lps)]
+        tkv = [tf.remap_tree_cache_rows(tkv[l], index_map)
+               for l in range(lps)]
+        return kv, tkv
+
+    def stage_prefill(stage_p, valid_row, kv, x, on, off):
+        """Apply this stage's layers in CHUNK (prefill) mode over the
+        padded prompt lane ([B, Pcap, d]), writing each participating
+        slot's model-cache rows [off[b], off[b] + Pcap) — the same
+        per-layer math ``tf.prefill_chunk`` runs, partitioned stage by
+        stage.  A whole prompt that fits the lane is the off == 0
+        single-chunk case."""
+        cap = x.shape[1]
+        off = jnp.asarray(off, jnp.int32)
+        positions = off[:, None] + jnp.arange(cap, dtype=jnp.int32)[None]
+        ctx = tf.Ctx(mode="chunk", positions=positions, cache_len=off)
+        xs = x
+        new_kv = []
+        for l in range(lps):
+            y, nc, _, _ = tf._apply_unit(stage_p[l], cfg, kinds, xs,
+                                         [kv[l]], None, ctx)
+            ok = valid_row[l] & on                       # [B]
+            xs = jnp.where(ok[:, None, None], y, xs)
+            new_kv.append(jax.tree.map(
+                lambda old, new, k=ok: jnp.where(
+                    k.reshape((-1,) + (1,) * (old.ndim - 1)),
+                    new.astype(old.dtype), old),
+                kv[l], nc[0]))
+        return new_kv, xs
+
+    return stage_apply, stage_ctrl, stage_prefill
+
+
 def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                       prefill_cap: int = 0):
-    """Build the jittable one-timestep pipeline tick (slot-batched).
+    """Build the jittable one-timestep LOCKSTEP pipeline tick
+    (slot-batched): one ``shard_map`` dispatch advances every stage in
+    unison.  The per-stage math comes from ``make_stage_fns``; the async
+    executor runs those same functions free-running instead of calling
+    this tick.
 
     Inputs (global shapes; ``B`` = KV slots, B=1 = single-request):
       stage_p:    unit params [S, Lps, ...]        (stage-sharded)
@@ -295,58 +411,7 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
     """
     s_axis = "model"
     n_stages = pcfg.n_stages
-    kinds = tf.unit_kinds(cfg)
-    assert kinds == ("attn",), "pipeline tick supports attention stacks"
-    lps, _ = stage_layout(cfg, n_stages)
-
-    def local_stage(stage_p, valid_row, kv, tkv, x, positions, mask,
-                    write_idx, model_len, in_valid):
-        """Apply this stage's layers to its in-flight batched tree layer
-        ([B, w, d] activations; per-row metadata rides the ring)."""
-        ctx = tf.Ctx(mode="tree", positions=positions,
-                     cache_len=jnp.asarray(model_len, jnp.int32),
-                     tree_write_index=jnp.asarray(write_idx, jnp.int32),
-                     tree_mask=mask)
-        xs = x  # [B, w, d]
-        new_tkv = []
-        for l in range(lps):
-            # per-layer param/cache buffers (lists over the in-stage dim)
-            unit_p = stage_p[l]
-            c = [kv[l]]
-            tc = [tkv[l]]
-            y, _, ntc, _ = tf._apply_unit(unit_p, cfg, kinds, xs, c, tc, ctx)
-            ok = valid_row[l] & in_valid                 # [B]
-            xs = jnp.where(ok[:, None, None], y, xs)
-            new_tkv.append(jax.tree.map(
-                lambda old, new, k=ok: jnp.where(
-                    k.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
-                tc[0], ntc[0]))
-        return xs, new_tkv
-
-    def prefill_stage(stage_p, valid_row, kv, x, on, off):
-        """Apply this stage's layers in CHUNK (prefill) mode over the
-        padded prompt lane ([B, Pcap, d]), writing each participating
-        slot's model-cache rows [off[b], off[b] + Pcap) — the same
-        per-layer math ``tf.prefill_chunk`` runs, partitioned stage by
-        stage.  A whole prompt that fits the lane is the off == 0
-        single-chunk case."""
-        off = jnp.asarray(off, jnp.int32)
-        positions = off[:, None] + jnp.arange(prefill_cap,
-                                              dtype=jnp.int32)[None]
-        ctx = tf.Ctx(mode="chunk", positions=positions, cache_len=off)
-        xs = x
-        new_kv = []
-        for l in range(lps):
-            y, nc, _, _ = tf._apply_unit(stage_p[l], cfg, kinds, xs,
-                                         [kv[l]], None, ctx)
-            ok = valid_row[l] & on                       # [B]
-            xs = jnp.where(ok[:, None, None], y, xs)
-            new_kv.append(jax.tree.map(
-                lambda old, new, k=ok: jnp.where(
-                    k.reshape((-1,) + (1,) * (old.ndim - 1)),
-                    new.astype(old.dtype), old),
-                kv[l], nc[0]))
-        return new_kv, xs
+    stage_apply, stage_ctrl, stage_prefill = make_stage_fns(cfg, pcfg)
 
     def tick(stage_p, stage_valid, model_kv, tree_kv, ring, entry,
              kill=None, ctrl=None, pentry=None):
@@ -415,17 +480,8 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                 # most ticks costs one predicate check per stage.
                 def apply_ctrl(ops):
                     kv_, tkv_ = ops
-                    commit_on = cur["c_commit"][0]
-                    commit_len = cur["c_len"][0]
-                    node0 = jnp.zeros_like(commit_len)
-                    kv_ = [tf.commit_tree_nodes(cfg, kv_[l], tkv_[l],
-                                                node0, commit_len,
-                                                commit_on)
-                           for l in range(lps)]
-                    imap = cur["c_imap"][0]
-                    tkv_ = [tf.remap_tree_cache_rows(tkv_[l], imap)
-                            for l in range(lps)]
-                    return kv_, tkv_
+                    return stage_ctrl(kv_, tkv_, cur["c_commit"][0],
+                                      cur["c_len"][0], cur["c_imap"][0])
 
                 kv, tkv = jax.lax.cond(cur["c_active"][0], apply_ctrl,
                                        lambda ops: ops, (kv, tkv))
@@ -447,13 +503,13 @@ def make_pipedec_tick(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                 pon = cur["p_on"][0]
                 kv, p_x = jax.lax.cond(
                     jnp.any(pon),
-                    lambda kv_, px: prefill_stage(sp, sv, kv_, px, pon,
+                    lambda kv_, px: stage_prefill(sp, sv, kv_, px, pon,
                                                   cur["p_off"][0]),
                     lambda kv_, px: (kv_, px),
                     kv, cur["p_act"][0])
 
             # 4. compute: this stage's layers over the layer it holds
-            x, new_tkv = local_stage(
+            x, new_tkv = stage_apply(
                 sp, sv, kv, tkv, cur["act"][0], cur["positions"][0],
                 cur["mask"][0], cur["write_idx"][0], cur["model_len"][0],
                 cur["valid"][0])

@@ -17,6 +17,14 @@ the flight bookkeeping:
 
   PYTHONPATH=src python -m repro.launch.serve --mode pipedec-db \
       --executor sharded --overlap --requests 4
+
+``--executor async`` replaces the host-lockstep tick entirely:
+free-running per-stage actor threads (one per stage/device) plus a
+disaggregated draft actor, bit-identical greedy tokens to the lockstep
+backends:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode pipedec-db \
+      --executor async --stages 4 --requests 4
 """
 from __future__ import annotations
 
@@ -36,6 +44,9 @@ from repro.serving import Request, ServingEngine
 
 def build_bundle(arch: str, *, smoke: bool, seed: int, ckpt: str = "",
                  vocab_floor: int = 0):
+    """Init (or load from ``ckpt``) one arch and wrap it as a
+    ``ModelBundle`` with jitted prefill/decode/tree_verify.
+    """
     cfg = cfg_reg.get_config(arch, smoke=smoke)
     if vocab_floor and cfg.vocab_size < vocab_floor:
         cfg = dataclasses.replace(cfg, vocab_size=vocab_floor)
@@ -47,13 +58,19 @@ def build_bundle(arch: str, *, smoke: bool, seed: int, ckpt: str = "",
 
 
 def main(argv=None):
+    """CLI entry: build target+draft bundles, pick the executor backend
+    (``--executor local|sharded|async``), run the engine, print
+    per-request results and DB stats.
+    """
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["pp", "pipedec", "pipedec-db"],
                     default="pipedec")
-    ap.add_argument("--executor", choices=["local", "sharded"],
+    ap.add_argument("--executor", choices=["local", "sharded", "async"],
                     default="local",
                     help="pipedec-db compute backend (sharded = one "
-                         "pipeline stage per mesh device)")
+                         "pipeline stage per mesh device; async = "
+                         "free-running per-stage actor threads + a "
+                         "disaggregated draft actor, no host lockstep)")
     ap.add_argument("--overlap", action="store_true",
                     help="sharded executor only: steady-state overlapped "
                          "schedule (one ring tick per timestep with "
@@ -96,7 +113,16 @@ def main(argv=None):
     pcfg = PipeDecConfig(n_stages=args.stages, width=args.width,
                          branch=args.branch)
     executor = None
-    if args.mode == "pipedec-db" and args.executor == "sharded":
+    if args.mode == "pipedec-db" and args.executor == "async":
+        assert not args.paged, \
+            "--executor async has no paged path yet (use --executor " \
+            "sharded --paged)"
+        from repro.serving import AsyncPipelineExecutor
+        executor = AsyncPipelineExecutor(
+            target, draft, slots=args.slots, max_len=512,
+            tree_capacity=pcfg.tree_buffer_capacity,
+            capacity=pcfg.capacity, n_stages=args.stages)
+    elif args.mode == "pipedec-db" and args.executor == "sharded":
         from repro.serving import (OverlappedShardedExecutor,
                                    ShardedPipelineExecutor)
         cls = OverlappedShardedExecutor if args.overlap \
@@ -121,6 +147,8 @@ def main(argv=None):
                               size=8).astype(np.int32)
         engine.submit(Request(uid, prompt, args.new_tokens))
     results = engine.run()
+    if args.executor == "async" and executor is not None:
+        executor.shutdown()
     for uid, res in sorted(results.items()):
         extra = ""
         if res.stats is not None and hasattr(res.stats, "acceptance"):

@@ -42,6 +42,26 @@ every admission streams through the lane over several ticks
 ``separate_prefill_dispatches == 0`` at any prompt length, and the
 slot-recycle scenario reuses a slot under paging with a chunked prompt.
 
+``--async`` runs every workload on the ``AsyncPipelineExecutor`` as well
+(free-running per-stage actor threads + a disaggregated draft actor — no
+host lockstep), pinning it bit-identical to the same single-request
+reference, and adds three async-only scenarios:
+
+  * *kill latency*: with the stage gate paused, an entry is pushed and
+    its slot killed before the actors resume — the stale layer must die
+    at stage 0 (``stage_counters[0]["stale_rows"]`` > 0), i.e. before
+    even ONE hop, let alone a full ring revolution;
+  * *fail loudly*: a stage actor forced to raise must surface on the
+    main thread as ``AsyncExecutorError`` (original traceback attached)
+    within the executor timeout — the check prints ``SHARDED_CHECK
+    fail`` instead of hanging;
+  * *clean shutdown*: ``shutdown()`` joins every actor thread (none
+    leaked), twice (idempotent), and a repeat run is bit-deterministic.
+
+``--async`` composes with ``--overlap`` and ``--quant`` but not
+``--paged`` (the async backend has no paged path yet — it rejects the
+combination loudly).
+
 ``--quant`` additionally runs the whole workload on int8 bundles
 (``ModelBundle.quantize()``: per-out-channel int8 weights + int8 KV
 arena).  The strong pin is the same as fp32's, *within* the quantized
@@ -175,6 +195,10 @@ def _pruning_propagation_scenario(stages: int):
 
 
 def main(argv=None):
+    """Run every workload x executor combination plus the async
+    scenarios; print one machine-readable SHARDED_CHECK ok/fail
+    line (CI greps it).
+    """
     ap = argparse.ArgumentParser()
     ap.add_argument("--stages", type=int, default=8)
     ap.add_argument("--slots", type=int, default=3)
@@ -186,6 +210,12 @@ def main(argv=None):
                          "tick per timestep; PipeDecConfig.n_stages is "
                          "then --stages so the ring IS the flight "
                          "bookkeeping)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="also check the async free-running executor "
+                         "(per-stage actor threads + disaggregated draft; "
+                         "PipeDecConfig.n_stages is then --stages), plus "
+                         "its kill-latency, fail-loudly and "
+                         "clean-shutdown scenarios")
     ap.add_argument("--quant", action="store_true",
                     help="also run the workload on int8 bundles "
                          "(ModelBundle.quantize()): same bit-identity pin "
@@ -216,12 +246,15 @@ def main(argv=None):
     from repro.core.speculative import ModelBundle
     from repro.models import transformer as tf
     from repro.models.config import ModelConfig
-    from repro.serving import (LocalFusedExecutor,
+    from repro.serving import (AsyncExecutorError, AsyncPipelineExecutor,
+                               LocalFusedExecutor,
                                OverlappedShardedExecutor, Request,
                                ShardedPipelineExecutor, SpecPipeDBEngine)
 
     assert len(jax.devices()) >= args.stages, \
         f"need {args.stages} devices, have {len(jax.devices())}"
+    assert not (args.use_async and args.paged), \
+        "--async has no paged path yet; drop one of --async/--paged"
 
     layers = args.layers or args.stages
     target_cfg = ModelConfig(name="chk-target", family="dense",
@@ -235,8 +268,9 @@ def main(argv=None):
     draft = ModelBundle(tf.init_model(jax.random.PRNGKey(9), draft_cfg),
                         draft_cfg)
     # the overlapped ring length is pcfg.n_stages, so it must equal the
-    # mesh's stage count; the flush/local backends accept any pcfg
-    n_stages = args.stages if args.overlap else 4
+    # mesh's stage count; the flush/local backends accept any pcfg (and
+    # the async actor chain is likewise pcfg.n_stages long)
+    n_stages = args.stages if (args.overlap or args.use_async) else 4
     pcfg = PipeDecConfig(n_stages=n_stages, width=4, branch=2)
     max_len = 160
 
@@ -269,6 +303,11 @@ def main(argv=None):
             capacity=pcfg.capacity, n_stages=args.stages,
             prefill_cap=args.prefill_cap, paged=args.paged,
             page=args.page_size)
+    if args.use_async:
+        mk["sharded_async"] = lambda t, d: AsyncPipelineExecutor(
+            t, d, slots=args.slots, max_len=max_len,
+            tree_capacity=pcfg.tree_buffer_capacity,
+            capacity=pcfg.capacity, n_stages=args.stages)
 
     def check_workload(tgt, drf, reqs):
         single = PipeDecEngine(tgt, drf, pcfg, max_len=max_len)
@@ -339,6 +378,35 @@ def main(argv=None):
                 assert rate < 1.0, \
                     "gated ctrl must close on some ticks"
                 part[name]["ctrl_active_rate"] = round(rate, 4)
+            if name == "sharded_async":
+                # every entering layer steps every free-running stage
+                # actor exactly once, and the drained pipe consumed every
+                # message it was fed
+                assert ex.calls["stage_steps"] == \
+                    ex.calls["entry_msgs"] * args.stages, \
+                    "async: one stage step per entry per stage"
+                assert ex._consumed == ex._pushed, \
+                    "async: drained pipe must consume every message"
+                # admission on the async backend is separate-dispatch:
+                # one ModelBundle.prefill per model per request (the
+                # self-draft workload shares ONE bundle for both roles,
+                # so its counter sees both prefills)
+                per_model = len(reqs) * (2 if tgt is drf else 1)
+                for m in {id(tgt): tgt, id(drf): drf}.values():
+                    assert m.calls["prefill"] - \
+                        before[m].get("prefill", 0) == per_model, \
+                        "async: one separate prefill per admission"
+                ctr = ex.counters()
+                part[name]["max_draft_lead"] = ctr["max_draft_lead"]
+                part[name]["max_inbox_depth"] = max(
+                    s["max_depth"] for s in ctr["stages"])
+                part[name]["stale_rows"] = sum(
+                    s["stale_rows"] for s in ctr["stages"])
+                ex.shutdown()
+                import threading
+                assert not [t for t in threading.enumerate()
+                            if t.name.startswith("async-")], \
+                    "async: shutdown must join every actor thread"
         return part
 
     summary = {"stages": args.stages, "slots": args.slots,
@@ -376,6 +444,125 @@ def main(argv=None):
                 err_msg=f"slot-recycle ctrl leak uid={uid}")
         assert ex.calls["kill"] >= 2, "both retires must kill in-ring"
         return {"bit_identical": True, "kills": int(ex.calls["kill"])}
+
+    def check_recycle_async():
+        """The slot-recycle leg on the async backend: same A-retires/
+        B-reuses-the-slot workload as ``check_recycle``, with the retire's
+        ctrl-version bump neutralising A's in-flight ctrl messages at
+        whatever stage they sit."""
+        a = Request(0, np.arange(1, 4, dtype=np.int32), 2, arrival_t=0)
+        b = Request(1, (np.arange(5, 45, dtype=np.int32) % 100), 4,
+                    arrival_t=1)
+        single = PipeDecEngine(target, target, pcfg, max_len=max_len)
+        want = {r.uid: single.generate(r.prompt, r.max_new_tokens)[0]
+                for r in (a, b)}
+        ex = AsyncPipelineExecutor(
+            target, target, slots=1, max_len=max_len,
+            tree_capacity=pcfg.tree_buffer_capacity,
+            capacity=pcfg.capacity, n_stages=args.stages)
+        eng = SpecPipeDBEngine(target, target, pcfg, max_len=max_len,
+                               max_slots=1, executor=ex)
+        eng.submit(a)
+        eng.submit(b)
+        res = eng.run()
+        for uid, tokens in want.items():
+            np.testing.assert_array_equal(
+                res[uid].tokens, tokens,
+                err_msg=f"async slot-recycle ctrl leak uid={uid}")
+        kills = int(ex.calls["kill"])
+        assert kills >= 2, "both retires must kill in-flight state"
+        ex.shutdown()
+        return {"bit_identical": True, "kills": kills}
+
+    def check_async_kill_latency():
+        """The short-circuit pin: with the stage gate paused, an entry is
+        pushed and its slot killed before any actor touches it.  The
+        layer must then die at stage 0 — suppressed before even ONE hop,
+        where the lockstep ring can only invalidate one stage per tick
+        and a stale layer rides ``n_stages - 1`` further hops before its
+        exit is dropped."""
+        ex = mk["sharded_async"](target, draft)
+        try:
+            ex.pause()
+            row_on = np.zeros(args.slots, bool)
+            row_on[0] = True
+            _d, handles = ex.tick_rows(*ex.dead_entry, row_on)
+            ex.kill(0)
+            ex.resume()
+            ex.drain()
+            ctr = ex.counters()
+            stale0 = ctr["stages"][0]["stale_rows"]
+            assert stale0 >= 1, \
+                "kill must beat the paused layer to stage 0"
+            # ...and since rows go stale at processing time, every later
+            # stage suppressed it too — never a live write after the kill
+            assert all(s["stale_rows"] >= 1 for s in ctr["stages"])
+            assert handles[0].dead, "the flight's future must be dead"
+            assert ex.calls["stale_exits"] >= 1, \
+                "the stale exit must be dropped, not delivered"
+        finally:
+            ex.shutdown()
+        return {"stale_at_stage0": int(stale0),
+                "revolution_hops_saved": args.stages - 1}
+
+    def check_async_failfast():
+        """The fail-loudly pin: a stage actor forced to raise must
+        surface on the main thread as ``AsyncExecutorError`` carrying the
+        original traceback, well inside the executor timeout — never a
+        hang.  (The workload ``try`` below turns any such error into the
+        ``SHARDED_CHECK fail`` status line.)"""
+        import time as _time
+
+        ex = mk["sharded_async"](target, draft)
+        ex.timeout_s = 60.0
+
+        def boom(*a, **k):
+            raise RuntimeError("injected stage fault")
+
+        ex._apply_j = boom
+        row_on = np.zeros(args.slots, bool)
+        row_on[0] = True
+        t0 = _time.monotonic()
+        try:
+            ex.tick_rows(*ex.dead_entry, row_on)
+            ex.drain()
+        except AsyncExecutorError as e:
+            elapsed = _time.monotonic() - t0
+            assert "injected stage fault" in str(e), \
+                "original traceback must ride the host-side error"
+            assert elapsed < ex.timeout_s, "must fail fast, not time out"
+        else:
+            raise AssertionError(
+                "stage fault must surface as AsyncExecutorError")
+        finally:
+            ex.shutdown()
+        return {"propagates": True, "seconds": round(elapsed, 3)}
+
+    def check_async_shutdown(reqs):
+        """Clean-shutdown pin: ``shutdown()`` joins every actor thread
+        (none leaked), is idempotent, and a fresh executor re-running the
+        workload is bit-deterministic."""
+        import threading
+
+        def run_once():
+            ex = mk["sharded_async"](target, draft)
+            eng = SpecPipeDBEngine(target, draft, pcfg, max_len=max_len,
+                                   max_slots=args.slots, executor=ex)
+            for r in reqs:
+                eng.submit(r)
+            res = eng.run()
+            ex.shutdown()
+            ex.shutdown()    # idempotent
+            return {u: res[u].tokens for u in res}
+
+        a, b = run_once(), run_once()
+        leaked = [t.name for t in threading.enumerate()
+                  if t.name.startswith("async-")]
+        assert not leaked, f"leaked actor threads: {leaked}"
+        for u in a:
+            np.testing.assert_array_equal(
+                a[u], b[u], err_msg=f"async repeat-run uid={u}")
+        return {"deterministic": True, "no_leaked_threads": True}
 
     def check_quant_arena():
         """Byte-budget gate: the int8 arena must cost at most
@@ -461,6 +648,14 @@ def main(argv=None):
                 "propagation"
             summary["pruning_propagation"] = \
                 _pruning_propagation_scenario(args.stages)
+        if args.use_async:
+            asy = summary["independent_draft"]["sharded_async"]
+            assert asy["dispatches"].get("kill", 0) > 0, \
+                "miss-heavy workload must kill in-flight async layers"
+            summary["async_kill_latency"] = check_async_kill_latency()
+            summary["async_failfast"] = check_async_failfast()
+            summary["async_shutdown"] = check_async_shutdown(reqs_main)
+            summary["async_slot_recycle"] = check_recycle_async()
     except Exception as e:  # single loud line, non-zero exit — the CI
         # legs grep this instead of fishing assertion tracebacks
         import traceback
@@ -469,7 +664,7 @@ def main(argv=None):
         print(f"SHARDED_CHECK fail stages={args.stages} "
               f"slots={args.slots} requests={args.requests} "
               f"overlap={int(args.overlap)} quant={int(args.quant)} "
-              f"paged={int(args.paged)} "
+              f"paged={int(args.paged)} async={int(args.use_async)} "
               f"error={type(e).__name__}: {reason}")
         return 1
     summary["bit_identical"] = True
@@ -477,9 +672,18 @@ def main(argv=None):
     parts = [f"SHARDED_CHECK ok stages={args.stages}",
              f"slots={args.slots}", f"requests={args.requests}",
              f"overlap={int(args.overlap)}", f"quant={int(args.quant)}",
-             f"paged={int(args.paged)}", "bit_identical=1"]
+             f"paged={int(args.paged)}", f"async={int(args.use_async)}",
+             "bit_identical=1"]
     if args.paged:
         parts += [f"page_size={args.page_size}"]
+    if args.use_async:
+        asy = summary["independent_draft"]["sharded_async"]
+        parts += [
+            f"async_kills={asy['dispatches']['kill']}",
+            f"async_stale_at_stage0="
+            f"{summary['async_kill_latency']['stale_at_stage0']}",
+            f"async_max_draft_lead={asy['max_draft_lead']}",
+        ]
     if args.overlap:
         over = summary["independent_draft"]["sharded_overlapped"]
         lp = summary["long_prompt"]["sharded_overlapped"]

@@ -113,6 +113,9 @@ def _rglru_spec(name: str, leaf, cfg: ModelConfig, ms: int):
 
 
 def param_pspec(path, leaf, cfg: ModelConfig, mesh) -> P:
+    """PartitionSpec for one param leaf (tensor-parallel over 'model',
+    vocab-sharded tables, replicated norms/scalars).
+    """
     ms = _axis(mesh, "model")
     keys = [p.key for p in path if hasattr(p, "key")]
     name = keys[-1]
@@ -155,6 +158,9 @@ def param_pspec(path, leaf, cfg: ModelConfig, mesh) -> P:
 
 
 def params_shardings(params, cfg: ModelConfig, mesh):
+    """``NamedSharding`` pytree for a param pytree (see
+    ``param_pspec``).
+    """
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, cfg,
                                                            mesh)),
@@ -178,6 +184,9 @@ def zero1_pspec(path, leaf, cfg: ModelConfig, mesh) -> P:
 
 
 def zero1_shardings(params, cfg: ModelConfig, mesh):
+    """``NamedSharding`` pytree for optimizer state (see
+    ``zero1_pspec``).
+    """
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, zero1_pspec(path, leaf, cfg,
                                                            mesh)),
@@ -224,6 +233,9 @@ def cache_pspec(path, leaf, cfg: ModelConfig, mesh, *, batch: int,
 
 def cache_shardings(cache, cfg: ModelConfig, mesh, *, batch: int,
                     shard_seq: bool = False):
+    """``NamedSharding`` pytree for a KV-cache pytree (see
+    ``cache_pspec``).
+    """
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(
             mesh, cache_pspec(path, leaf, cfg, mesh, batch=batch,
@@ -232,6 +244,7 @@ def cache_shardings(cache, cfg: ModelConfig, mesh, *, batch: int,
 
 
 def batch_shardings(mesh, batch: int, ndim: int = 2):
+    """Batch-axis ``NamedSharding`` for activations/token arrays."""
     from repro.launch.mesh import batch_sharding_spec
     baxes = batch_sharding_spec(mesh, batch)
     spec = P(baxes, *([None] * (ndim - 1))) if baxes else P()
@@ -239,4 +252,5 @@ def batch_shardings(mesh, batch: int, ndim: int = 2):
 
 
 def replicated(mesh):
+    """Fully-replicated ``NamedSharding`` on ``mesh``."""
     return NamedSharding(mesh, P())

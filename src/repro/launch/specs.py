@@ -20,6 +20,9 @@ CACHE_DTYPE = jnp.bfloat16
 
 @dataclasses.dataclass(frozen=True)
 class InputShape:
+    """One named benchmark shape: sequence length, global batch and
+    kind (train | prefill | decode).
+    """
     name: str
     seq_len: int
     global_batch: int
@@ -44,16 +47,23 @@ def window_override(cfg: ModelConfig, shape: InputShape) -> int:
 
 
 def sds(shape, dtype):
+    """``jax.ShapeDtypeStruct`` shorthand."""
     return jax.ShapeDtypeStruct(tuple(shape), dtype)
 
 
 def param_specs(cfg: ModelConfig):
+    """Shape-only (eval_shape) param specs for ``cfg`` at the training
+    param dtype.
+    """
     return jax.eval_shape(
         lambda: tf.init_model(jax.random.PRNGKey(0), cfg, dtype=PARAM_DTYPE))
 
 
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
                 stacked: bool = True):
+    """Shape-only (eval_shape) KV-cache specs for ``cfg`` at the cache
+    dtype.
+    """
     return jax.eval_shape(
         lambda: tf.init_cache(cfg, batch, max_len, dtype=CACHE_DTYPE,
                               stacked=stacked))

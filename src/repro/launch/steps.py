@@ -21,6 +21,9 @@ def _enc_out(params, cfg: ModelConfig, batch):
 
 def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
                     *, window_override: int = -1, remat: bool = True):
+    """Build the jittable ``(params, opt_state, batch) -> (params,
+    opt_state, metrics)`` AdamW train step (optionally remat'd).
+    """
     opt_cfg = opt_cfg or AdamWConfig()
 
     def train_step(params, opt_state, batch):

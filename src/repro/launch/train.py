@@ -24,6 +24,9 @@ from repro.optim import AdamWConfig, adamw_init
 def train(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
           seed: int = 0, ckpt: str = "", log_every: int = 10,
           corpus_bytes: int = 1 << 18, remat: bool = False):
+    """Train ``cfg`` on the synthetic byte corpus for ``steps`` steps;
+    returns (params, losses) and optionally saves a checkpoint.
+    """
     assert cfg.vocab_size >= 260, "byte pipeline needs vocab >= 260"
     params = tf.init_model(jax.random.PRNGKey(seed), cfg)
     opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(10, steps // 20),
@@ -54,6 +57,7 @@ def train(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
 
 
 def main(argv=None):
+    """CLI entry: train one arch (``--smoke`` for the reduced config)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="pipedec-target")
     ap.add_argument("--smoke", action="store_true",

@@ -1,7 +1,13 @@
+"""Serving layer: the SpecPipe-DB continuous-batching engine, the
+``PipelineExecutor`` compute backends (local fused / sharded flush /
+overlapped / async free-running) and the KV-arena schedulers.
+"""
 from repro.serving.dynbatch import (DBStats, SpecPipeDBEngine,
                                     generate_with_executor)
 from repro.serving.engine import Request, Result, ServingEngine
-from repro.serving.executor import (DeferredLogits, DeferredPrefill,
+from repro.serving.executor import (AsyncExecutorError,
+                                    AsyncPipelineExecutor,
+                                    DeferredLogits, DeferredPrefill,
                                     LocalFusedExecutor,
                                     OverlappedShardedExecutor,
                                     PipelineExecutor,
@@ -9,7 +15,8 @@ from repro.serving.executor import (DeferredLogits, DeferredPrefill,
 from repro.serving.scheduler import (DynamicBatchScheduler, KVArena,
                                      PagedKVArena, SchedulerStats, SlotPool)
 
-__all__ = ["DBStats", "DeferredLogits", "DeferredPrefill",
+__all__ = ["AsyncExecutorError", "AsyncPipelineExecutor", "DBStats",
+           "DeferredLogits", "DeferredPrefill",
            "DynamicBatchScheduler", "KVArena",
            "LocalFusedExecutor", "OverlappedShardedExecutor",
            "PagedKVArena", "PipelineExecutor", "Request", "Result",

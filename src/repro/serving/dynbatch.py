@@ -23,7 +23,13 @@ is the steady-state schedule on the same deployment: the ring persists
 and stays full, the engine issues exactly ONE ring tick per executed
 global timestep, each ``Flight`` carries a *deferred* logits future the
 tick resolves at ``exit_t``, and misses/retirements kill the slot's
-in-flight layers in-ring (pruning propagation).  Outputs are
+in-flight layers in-ring (pruning propagation).
+``AsyncPipelineExecutor`` drops the host lockstep behind the same seam:
+free-running per-stage actor threads pull ring layers from bounded inbox
+queues and apply the very same per-stage step functions
+(``launch.pipeline.make_stage_fns``), a disaggregated draft actor
+speculates on its own device, and kill messages cancel stale in-flight
+layers at whatever stage they sit.  Outputs are
 bit-identical across all backends (and to the single-request engine)
 because only *where and when* the verify logits materialise changes,
 never *what* is computed — the same argument the paper makes for

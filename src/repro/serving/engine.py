@@ -44,6 +44,9 @@ from repro.core.speculative import ModelBundle, SamplingParams, select_token
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: prompt + budget, plus the DB-mode
+    admission knobs (arrival time, priority, deadline, sampling)."""
+
     uid: int
     prompt: np.ndarray
     max_new_tokens: int = 32
@@ -58,6 +61,9 @@ class Request:
 
 @dataclasses.dataclass
 class Result:
+    """Per-request outcome: generated tokens, wall-clock latency and the
+    engine's per-request stats object (mode-dependent)."""
+
     uid: int
     tokens: np.ndarray
     latency_s: float
@@ -65,6 +71,11 @@ class Result:
 
 
 class ServingEngine:
+    """Front door for batch serving: queue ``Request``s, pick a mode
+    (``pp`` autoregressive, ``pipedec`` single-request SpecPipe,
+    ``pipedec-db`` continuous batching) and ``run()`` them against the
+    selected ``PipelineExecutor`` backend."""
+
     def __init__(self, target: ModelBundle, draft: Optional[ModelBundle]
                  = None, *, mode: str = "pp", max_batch: int = 8,
                  max_len: int = 512,

@@ -51,16 +51,37 @@ Backends:
     backend — only *when* logits materialise changes, never what is
     computed.
 
+  * ``AsyncPipelineExecutor`` — the same schedule with the host lockstep
+    BROKEN: every stage is a free-running actor thread on its own device
+    pulling ring layers from a bounded inbox, applying the per-stage
+    step factored out of the lockstep tick
+    (``launch.pipeline.make_stage_fns``), and pushing to the next
+    stage's inbox — a fast stage never waits on a slow one and the
+    per-stage queue depth is uneven.  The draft is *disaggregated* onto
+    a dedicated actor that speculates against the committed prefix in
+    engine push order, feeding the dynamic token tree ahead of
+    verification; kill/version messages short-circuit stale in-flight
+    layers at whatever stage they sit instead of riding a full
+    revolution.  Per-slot FIFO message order reproduces the lockstep
+    schedule's per-stage arrival order exactly, so greedy outputs stay
+    bit-identical — only WHEN each stage runs changes.
+
 All backends expose ``calls`` (a Counter) as the dispatch-count hook: the
 equivalence tests assert ``calls["verify_rows"]`` == one batched dispatch
 per global timestep with pending entries (flush/local), and
 ``calls["pipeline_tick"]`` == one ring tick per executed global timestep
-(overlapped).
+(overlapped); the async backend counts entry/ctrl *messages* and
+per-stage steps instead (``calls["entry_msgs"]`` / ``calls["ctrl_msgs"]``
+/ ``calls["stage_steps"]``).
 """
 from __future__ import annotations
 
 import collections
 import functools
+import queue
+import threading
+import time
+import traceback
 from typing import Optional
 
 import jax
@@ -1039,3 +1060,772 @@ class OverlappedShardedExecutor(ShardedPipelineExecutor):
                                 write_idx, row_on, "drain_tick")
             n += 1
         return n
+
+
+# ---------------------------------------------------------------------------
+# Async free-running stages + disaggregated draft
+# ---------------------------------------------------------------------------
+
+class AsyncExecutorError(RuntimeError):
+    """A stage/draft actor raised (original traceback attached), or the
+    host timed out waiting on the async pipe.  Raised on the HOST thread
+    by every blocking executor operation so a failed actor can never
+    hang the engine — ``sharded_check`` converts it into a
+    ``SHARDED_CHECK fail`` status line."""
+
+
+class _Abort(Exception):
+    """Internal: another actor already failed; unwind this one quietly."""
+
+
+class _AsyncDeferredLogits(DeferredLogits):
+    """A ``DeferredLogits`` whose resolve *pumps* the exit queue: the
+    async pipe delivers exits whenever the last stage finishes, so the
+    engine blocks here (bounded, error-propagating) until this flight's
+    exit has been consumed."""
+
+    __slots__ = ("_ex",)
+
+    def __init__(self, slot: int, version: int, ex):
+        super().__init__(slot, version)
+        self._ex = ex
+
+    def resolve(self):
+        while self._value is None and not self.dead:
+            self._ex._pump()
+        return super().resolve()
+
+
+class _DraftVerifyResult:
+    """Future for one timestep's batched draft proposal logits
+    ([bucket, w, V]), filled by the draft actor.  ``__getitem__`` hands
+    the engine a per-slot ``resolve()``-able row (the lazy counterpart
+    of slicing the eager array), which ``PipeDecEngine.maybe_expand``
+    resolves right before expanding the tree."""
+
+    __slots__ = ("_ex", "_event", "_value")
+
+    def __init__(self, ex):
+        self._ex = ex
+        self._event = threading.Event()
+        self._value = None
+
+    def __getitem__(self, slot: int):
+        return _DeferredDraftRow(self, int(slot))
+
+    def wait(self):
+        deadline = time.monotonic() + self._ex.timeout_s
+        while not self._event.wait(0.05):
+            self._ex._check_errors()
+            if time.monotonic() > deadline:
+                raise AsyncExecutorError(
+                    f"timed out after {self._ex.timeout_s}s waiting for "
+                    f"the draft actor's verify")
+        return self._value
+
+
+class _DeferredDraftRow:
+    """One slot's row of a pending draft verify ([w, V] once resolved)."""
+
+    __slots__ = ("_all", "slot")
+
+    def __init__(self, all_, slot: int):
+        self._all, self.slot = all_, slot
+
+    def resolve(self):
+        return self._all.wait()[self.slot]
+
+
+class AsyncPipelineExecutor(PipelineExecutor):
+    """Free-running per-stage actors + a disaggregated draft actor — the
+    host lockstep of the overlapped schedule, broken.
+
+    Every stage ``k`` is a daemon thread pinned to its own device that
+    pulls messages from a bounded inbox, applies its compiled per-stage
+    step (``launch.pipeline.make_stage_fns`` — the SAME math the
+    lockstep tick composes inside its ``shard_map`` body), and pushes to
+    stage ``k+1``'s inbox; the last stage unembeds exits into an
+    unbounded exit queue the engine thread consumes.  A fast stage never
+    waits on a slow one, and per-stage queue depth is uneven
+    (``stage_counters`` records occupancy/idle per stage).  The draft
+    model lives on a dedicated actor with its own device and cache
+    ownership: verify/commit/remap/prefill jobs are applied in engine
+    push order, so speculation runs continuously ahead of the target's
+    in-flight verifications (``draft_lead()`` is the gauge).
+
+    Message protocol (all slot-batched, one message per engine timestep
+    lane):
+
+      * ``layer`` — the entering tree layer: tokens + per-row metadata +
+        a per-slot tree-version snapshot.  Stage 0 embeds; each stage
+        recomputes the row's liveness (``snapshot == current version``)
+        at *processing* time, so a ``kill`` short-circuits a stale layer
+        at whatever stage it currently sits (the stale rows stop writing
+        immediately) instead of riding a full revolution.
+      * ``ctrl`` — pruning propagation: exit-commit + prune index map
+        with a ctrl-version snapshot; pushed BEFORE the next entry so
+        per-stage FIFO order equals the lockstep schedule's per-stage
+        arrival order (ctrl trails every pre-prune layer, leads every
+        post-prune one).  A retire (``kill(drop_ctrl=True)``) bumps the
+        ctrl version, neutralising the slot's in-flight ctrl wherever it
+        sits; a miss does NOT (its earlier commits must finish
+        propagating).
+      * ``scatter`` — admission prefill: the host prefills the target on
+        its own device (the async backend uses the separate-dispatch
+        prefill; ``prefill_cap == 0``) and the per-stage cache rows ride
+        the pipe as one message, landing at each stage AFTER the
+        retired occupant's (suppressed) stale messages — FIFO gives the
+        recycle ordering for free.
+
+    Bit-identity argument: each stage processes one global message
+    sequence FIFO, which reproduces the lockstep schedule's per-stage
+    arrival order exactly; the per-stage compute is the same factored
+    function on the same batched rows; and stale-layer writes that the
+    version race suppresses earlier (or later) than the lockstep kill
+    mask would only ever land in rows a live tree rewrites before
+    attending.  Greedy tokens therefore match the lockstep executors
+    bit for bit — pinned by ``sharded_check --async`` in CI.
+
+    Failure semantics: an actor exception is recorded, flips a shared
+    ``failed`` event (unwinding the other actors), and re-raises on the
+    host thread as ``AsyncExecutorError`` from every blocking call
+    within ``timeout_s`` — the pipe fails loudly, never hangs.
+    ``shutdown()`` drains, stops and joins all actor threads
+    (idempotent; the executor restarts lazily on next use).
+    """
+
+    overlapped = True     # engine drives the deferred-logits schedule
+    prefill_cap = 0       # admission uses the separate-dispatch prefill
+
+    def __init__(self, target: ModelBundle, draft: ModelBundle, *,
+                 slots: int, max_len: int, tree_capacity: int,
+                 capacity: int, n_stages: Optional[int] = None,
+                 dtype=jnp.float32, inbox_depth: int = 8,
+                 timeout_s: float = 180.0, devices=None):
+        super().__init__(slots)
+        self.target, self.draft = target, draft
+        self.capacity, self.max_len = capacity, max_len
+        self.dtype = dtype
+        self.timeout_s = float(timeout_s)
+        self.inbox_depth = int(inbox_depth)
+        width = tree_capacity - capacity
+        assert width >= 1, "tree_capacity must include the width-w slack"
+        self.n_stages = int(n_stages or len(jax.devices()))
+        self.plcfg = pl.PipelineConfig(
+            n_stages=self.n_stages, width=width, tree_capacity=capacity,
+            max_len=max_len)
+        self.lps, self._padded = pl.stage_layout(target.cfg, self.n_stages)
+        devs = list(devices) if devices is not None else jax.devices()
+        # one stage per device (round-robin when the host has fewer
+        # devices than stages); the draft actor takes the next device
+        self._devices = [devs[k % len(devs)] for k in range(self.n_stages)]
+        self._draft_device = devs[self.n_stages % len(devs)]
+        self.arena = SlotPool(slots)
+
+        is_leaf = lambda x: x is None
+
+        def put_stage(tree, k):
+            return jax.tree_util.tree_map(
+                lambda t: None if t is None else
+                jax.device_put(t[k], self._devices[k]),
+                tree, is_leaf=is_leaf)
+
+        layers, valid = pl.stage_params(target.cfg, target.params,
+                                        self.n_stages)
+        model_kv, tree_kv = pl.init_stage_caches(target.cfg, self.plcfg,
+                                                 dtype, batch=slots)
+        valid = np.asarray(valid)
+        # per-stage actor state: param slices + cache slices committed to
+        # the stage's device (each list entry owned by ONE actor thread)
+        self._sp = [[put_stage(layers[l], k) for l in range(self.lps)]
+                    for k in range(self.n_stages)]
+        self._sv = [valid[k] for k in range(self.n_stages)]
+        self._kv = [[put_stage(model_kv[l], k) for l in range(self.lps)]
+                    for k in range(self.n_stages)]
+        self._tkv = [[put_stage(tree_kv[l], k) for l in range(self.lps)]
+                     for k in range(self.n_stages)]
+        # draft state, owned by the draft actor
+        self._d_cache = jax.device_put(draft.init_cache(slots, max_len),
+                                       self._draft_device)
+        self._d_tree = jax.device_put(
+            draft.init_tree_caches(slots, tree_capacity),
+            self._draft_device)
+
+        head = {k: target.params[k]
+                for k in ("embed", "final_norm", "lm_head")
+                if k in target.params}
+        self._embed_p = jax.device_put(head["embed"], self._devices[0])
+        self._head_last = jax.device_put(head, self._devices[-1])
+
+        stage_apply, stage_ctrl, _ = pl.make_stage_fns(target.cfg,
+                                                       self.plcfg)
+        cfg = target.cfg
+        self._apply_j = jax.jit(stage_apply)
+        self._ctrl_j = jax.jit(stage_ctrl)
+        self._embed_j = jax.jit(embed)
+        self._logits_j = jax.jit(lambda p, x: tf._logits(p, cfg, x))
+        self._scatter_j = jax.jit(self._scatter_stage_impl)
+
+        # per-slot versions: layer staleness (bumped on EVERY kill) vs
+        # ctrl staleness (bumped only on drop_ctrl retires — a miss must
+        # let the missed slot's in-flight commits finish propagating)
+        self._versions = np.zeros((slots,), np.int64)
+        self._ctrl_versions = np.zeros((slots,), np.int64)
+        self._handles = [collections.deque() for _ in range(slots)]
+        self._identity_imap = np.tile(
+            np.arange(capacity, dtype=np.int32), (slots, 1))
+        self._reset_ctrl()
+        w = self.plcfg.width
+        tcap = capacity + w
+        self.dead_entry = (
+            jnp.zeros((slots, w), jnp.int32),        # tokens
+            jnp.zeros((slots, w), jnp.int32),        # positions
+            jnp.zeros((slots, w, tcap), bool),       # masks
+            jnp.zeros((slots,), jnp.int32),          # model_len
+            jnp.full((slots,), capacity, jnp.int32),  # write_idx (parked)
+        )
+
+        # actor plumbing (threads start lazily on first use)
+        self._inboxes = [queue.Queue(maxsize=self.inbox_depth)
+                         for _ in range(self.n_stages)]
+        self._exit_q: queue.Queue = queue.Queue()
+        self._draft_q: queue.Queue = queue.Queue()
+        self._errors: list = []
+        self._failed = threading.Event()
+        self._gate = threading.Event()   # test hook: pause()/resume()
+        self._gate.set()
+        self._threads: list = []
+        self._started = False
+        self._seq = 0
+        self._pushed = self._consumed = 0
+        self._draft_pushed = self._draft_done = 0
+        self._draft_verified = 0
+        self._exit_layers_consumed = 0
+        self._max_draft_lead = 0
+        self._calls_lock = threading.Lock()
+        self.stage_counters = [
+            {"msgs": 0, "layers": 0, "stale_rows": 0, "ctrl_applied": 0,
+             "ctrl_skipped": 0, "busy_s": 0.0, "idle_s": 0.0,
+             "max_depth": 0}
+            for _ in range(self.n_stages)]
+
+    # -- small shared helpers -------------------------------------------
+    def _scatter_stage_impl(self, kv, src_k, slot):
+        """Write one prefilled request's rows for ONE stage: ``src_k``
+        leaves are [lps, rows, ...] (this stage's slice of the stacked
+        prefill), scattered into the stage's [slots, rows, ...] arena at
+        ``slot``."""
+        out = []
+        for l in range(self.lps):
+            out.append(jax.tree_util.tree_map(
+                lambda dst, s, l=l: None if dst is None else
+                jax.lax.dynamic_update_slice_in_dim(
+                    dst, s[l][None].astype(dst.dtype), slot, axis=0),
+                kv[l], src_k, is_leaf=lambda x: x is None))
+        return out
+
+    def _reset_ctrl(self) -> None:
+        self._ctrl_commit = np.zeros((self.slots,), bool)
+        self._ctrl_len = np.zeros((self.slots,), np.int32)
+        self._ctrl_imap = self._identity_imap.copy()
+        self._ctrl_active = False
+
+    def _count(self, key: str, n: int = 1) -> None:
+        with self._calls_lock:
+            self.calls[key] += n
+
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    # -- host-side error/timeout propagation ----------------------------
+    def _check_errors(self) -> None:
+        if self._errors:
+            who, tb = self._errors[0]
+            raise AsyncExecutorError(
+                f"async pipeline actor '{who}' failed:\n{tb}")
+
+    def _push(self, msg) -> None:
+        """Feed stage 0's bounded inbox (bounded wait, error-raising)."""
+        self._ensure_started()
+        deadline = time.monotonic() + self.timeout_s
+        while True:
+            self._check_errors()
+            try:
+                self._inboxes[0].put(msg, timeout=0.1)
+                break
+            except queue.Full:
+                if time.monotonic() > deadline:
+                    raise AsyncExecutorError(
+                        f"timed out after {self.timeout_s}s feeding the "
+                        f"stage-0 inbox (pipe stalled)")
+        self._pushed += 1
+
+    def _pump(self) -> None:
+        """Consume at least one message from the exit queue (bounded
+        wait, error-raising) — the engine thread's only exit-consumption
+        path, so handle bookkeeping is single-threaded."""
+        deadline = time.monotonic() + self.timeout_s
+        while True:
+            self._check_errors()
+            try:
+                msg = self._exit_q.get(timeout=0.1)
+            except queue.Empty:
+                if time.monotonic() > deadline:
+                    raise AsyncExecutorError(
+                        f"timed out after {self.timeout_s}s waiting for "
+                        f"a pipeline exit")
+                continue
+            self._consume_exit(msg)
+            return
+
+    def _pump_ready(self) -> None:
+        """Drain whatever exits are already delivered (non-blocking)."""
+        while True:
+            try:
+                msg = self._exit_q.get_nowait()
+            except queue.Empty:
+                return
+            self._consume_exit(msg)
+
+    def _consume_exit(self, msg) -> None:
+        self._consumed += 1
+        if msg[0] != "exit_layer":
+            return                       # ctrl/scatter/stop pass-through
+        _, _seq, logits, row_on, versions = msg
+        self._exit_layers_consumed += 1
+        for slot in np.nonzero(row_on)[0]:
+            s = int(slot)
+            if versions[s] != self._versions[s]:
+                # run-ahead exit of a flight killed after it left the
+                # last stage — its future is already dead; dropping the
+                # stale logits is the async analogue of the lockstep
+                # exit_valid mask
+                self._count("stale_exits")
+                continue
+            q = self._handles[s]
+            if not q:
+                raise AsyncExecutorError(
+                    f"ring exit for slot {s} with no outstanding flight")
+            h = q.popleft()
+            if h.version != int(versions[s]):
+                raise AsyncExecutorError(
+                    f"tree-version mismatch at ring exit: slot {s} "
+                    f"entered at version {h.version}, exited carrying "
+                    f"{int(versions[s])}")
+            h._value = logits[s]
+
+    # -- actor-side primitives (bounded, abort-aware) -------------------
+    def _aget(self, q):
+        while True:
+            if self._failed.is_set():
+                raise _Abort
+            try:
+                return q.get(timeout=0.2)
+            except queue.Empty:
+                continue
+
+    def _aput(self, q, msg) -> None:
+        while True:
+            if self._failed.is_set():
+                raise _Abort
+            try:
+                q.put(msg, timeout=0.2)
+                return
+            except queue.Full:
+                continue
+
+    def _wait_gate(self) -> None:
+        while not self._gate.wait(0.2):
+            if self._failed.is_set():
+                raise _Abort
+
+    def pause(self) -> None:
+        """Test hook: hold every stage actor BEFORE its next message, so
+        a test can stage messages + kills deterministically."""
+        self._gate.clear()
+
+    def resume(self) -> None:
+        self._gate.set()
+
+    # -- actor loops -----------------------------------------------------
+    def _ensure_started(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        self._threads = []
+        for k in range(self.n_stages):
+            t = threading.Thread(target=self._stage_loop, args=(k,),
+                                 name=f"async-stage-{k}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        t = threading.Thread(target=self._draft_loop, name="async-draft",
+                             daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _stage_loop(self, k: int) -> None:
+        ctr = self.stage_counters[k]
+        inbox = self._inboxes[k]
+        out = (self._inboxes[k + 1] if k + 1 < self.n_stages
+               else self._exit_q)
+        try:
+            while True:
+                t_idle = time.perf_counter()
+                msg = self._aget(inbox)
+                ctr["idle_s"] += time.perf_counter() - t_idle
+                ctr["max_depth"] = max(ctr["max_depth"],
+                                       inbox.qsize() + 1)
+                self._wait_gate()
+                t0 = time.perf_counter()
+                kind = msg[0]
+                if kind == "stop":
+                    self._aput(out, msg)
+                    return
+                if kind == "layer":
+                    msg = self._stage_layer(k, ctr, msg)
+                elif kind == "ctrl":
+                    self._stage_ctrl_msg(k, ctr, msg)
+                elif kind == "scatter":
+                    self._stage_scatter(k, msg)
+                ctr["msgs"] += 1
+                ctr["busy_s"] += time.perf_counter() - t0
+                self._aput(out, msg)
+        except _Abort:
+            pass
+        except BaseException:
+            self._errors.append((f"stage{k}", traceback.format_exc()))
+            self._failed.set()
+
+    def _stage_layer(self, k: int, ctr, msg):
+        (_, seq, x, positions, masks, model_len, write_idx, row_on,
+         versions) = msg
+        # liveness at PROCESSING time: a kill bumps the slot's version,
+        # so the stale layer stops writing at whatever stage it sits —
+        # no revolution wait
+        live = row_on & (versions == self._versions)
+        stale = int(np.count_nonzero(row_on & ~live))
+        if stale:
+            ctr["stale_rows"] += stale
+        if k == 0:
+            x = self._embed_j(self._embed_p, x)   # x carries tokens here
+        else:
+            x = jax.device_put(x, self._devices[k])
+        x, self._tkv[k] = self._apply_j(
+            self._sp[k], self._sv[k], self._kv[k], self._tkv[k], x,
+            positions, masks, write_idx, model_len, live)
+        ctr["layers"] += 1
+        self._count("stage_steps")
+        if k == self.n_stages - 1:
+            logits = self._logits_j(self._head_last, x)
+            return ("exit_layer", seq, logits, row_on, versions)
+        return ("layer", seq, x, positions, masks, model_len, write_idx,
+                row_on, versions)
+
+    def _stage_ctrl_msg(self, k: int, ctr, msg) -> None:
+        _, _seq, commit_on, commit_len, imap, cvers = msg
+        # ctrl liveness at processing time: only a retire bumps the ctrl
+        # version (the lockstep `clear` mask), so a recycled slot's
+        # trailing commits/prunes neutralise mid-flight while a missed
+        # slot's keep propagating
+        live = cvers == self._ctrl_versions
+        commit_on = commit_on & live
+        imap = np.where(live[:, None], imap, self._identity_imap)
+        if not commit_on.any() and np.array_equal(imap,
+                                                  self._identity_imap):
+            ctr["ctrl_skipped"] += 1     # fully neutralised: the no-op
+            return
+        self._kv[k], self._tkv[k] = self._ctrl_j(
+            self._kv[k], self._tkv[k], commit_on,
+            np.where(live, commit_len, 0), imap)
+        ctr["ctrl_applied"] += 1
+
+    def _stage_scatter(self, k: int, msg) -> None:
+        _, _seq, slot, src = msg
+        src_k = jax.tree_util.tree_map(
+            lambda t: None if t is None else t[k], src,
+            is_leaf=lambda x: x is None)
+        self._kv[k] = self._scatter_j(self._kv[k], src_k, np.int32(slot))
+
+    def _draft_loop(self) -> None:
+        try:
+            while True:
+                job = self._aget(self._draft_q)
+                kind = job[0]
+                if kind == "stop":
+                    return
+                if kind == "verify":
+                    self._draft_verify_job(job)
+                elif kind == "commit":
+                    _, ml, mask = job
+                    node0 = jnp.zeros((self.slots,), jnp.int32)
+                    self._d_cache = self.draft.commit_rows(
+                        self._d_cache, self._d_tree, node0, ml, mask)
+                elif kind == "remap":
+                    _, imaps = job
+                    self._d_tree = _remap_rows_jit(
+                        self._d_tree, jnp.asarray(imaps, jnp.int32))
+                elif kind == "remap_row":
+                    _, slot, imap = job
+                    d_row = remap_tree_caches(
+                        tf.slice_cache_rows(self._d_tree, slot, 1), imap,
+                        self.capacity)
+                    self._d_tree = tf.update_cache_rows(self._d_tree,
+                                                        d_row, slot)
+                elif kind == "prefill":
+                    _, slot, prompt = job
+                    d_view = tf.slice_cache_rows(self._d_cache, slot, 1)
+                    _, d_row = self.draft.prefill(prompt, d_view)
+                    self._d_cache = tf.update_cache_rows(self._d_cache,
+                                                         d_row, slot)
+                self._draft_done += 1
+        except _Abort:
+            pass
+        except BaseException:
+            self._errors.append(("draft", traceback.format_exc()))
+            self._failed.set()
+
+    def _draft_verify_job(self, job) -> None:
+        _, tokens, positions, masks, model_len, write_idx, row_on, box \
+            = job
+        nb = self._bucket(int(np.max(np.nonzero(row_on)[0])) + 1)
+        sl = lambda a: a[:nb]
+        d_all, self._d_tree = self.draft.tree_verify_rows(
+            sl(tokens), sl(positions), sl(masks), self._d_cache,
+            sl(model_len), self._d_tree, sl(write_idx), bucket=nb)
+        self._count("verify_rows")
+        self._draft_verified += 1
+        lead = self._draft_verified - self._exit_layers_consumed
+        self._max_draft_lead = max(self._max_draft_lead, lead)
+        box._value = d_all
+        box._event.set()
+
+    def _submit_draft(self, job) -> None:
+        self._ensure_started()
+        self._draft_q.put(job)
+        self._draft_pushed += 1
+
+    # -- PipelineExecutor seam ------------------------------------------
+    def prefill(self, slot: int, prompt):
+        """Separate-dispatch admission prefill (the async pipe has no
+        prefill lane): the target prefills on the host's device and the
+        per-stage cache rows ride the pipe as ONE scatter message —
+        FIFO-ordered after the retired occupant's stale messages and
+        before the new occupant's first entry; the draft prefill is a
+        job on the draft actor, in the same engine push order."""
+        t_cache = self.target.init_cache(1, self.max_len)
+        t_logits, t_cache = self.target.prefill(prompt, t_cache)
+        src = self._stage_src(t_cache["stack"][0])
+        self._push(("scatter", self._next_seq(), int(slot), src))
+        self._submit_draft(("prefill", int(slot),
+                            np.asarray(prompt)))
+        return t_logits
+
+    def _stage_src(self, stacked_cache):
+        """Host-side reshape of a freshly prefilled stacked model cache
+        ([reps, 1, rows, ...] leaves) into per-stage slices
+        ([S, lps, rows, ...]) for the scatter message."""
+        reps = tf.layout(self.target.cfg)[1]
+        pad = self._padded - reps
+
+        def f(leaf):
+            if leaf is None:
+                return None
+            src = np.asarray(leaf)[:, 0]             # [reps, rows, ...]
+            if pad:
+                src = np.concatenate(
+                    [src, np.zeros((pad, *src.shape[1:]), src.dtype)], 0)
+            return src.reshape(self.n_stages, self.lps, *src.shape[1:])
+
+        return jax.tree_util.tree_map(f, stacked_cache,
+                                      is_leaf=lambda x: x is None)
+
+    def tick_rows(self, tokens, positions, masks, model_len, write_idx,
+                  row_on):
+        """One engine timestep: push the queued ctrl message (if any),
+        then the entering layer message + the draft verify job.  Returns
+        ``(d_all, handles)`` like the overlapped backend — ``handles``
+        are blocking ``DeferredLogits``, ``d_all`` a lazy draft-verify
+        future (``None`` when nothing enters).  Empty timesteps push
+        NOTHING: the async pipe has no dead ticks to pay."""
+        self._ensure_started()
+        self._check_errors()
+        self._pump_ready()
+        row_on_np = np.asarray(row_on).astype(bool).copy()
+        if self._ctrl_active:
+            self._push(("ctrl", self._next_seq(),
+                        self._ctrl_commit.copy(), self._ctrl_len.copy(),
+                        self._ctrl_imap.copy(),
+                        self._ctrl_versions.copy()))
+            self._count("ctrl_msgs")
+            self._reset_ctrl()
+        handles = {}
+        d_all = None
+        if row_on_np.any():
+            vers = self._versions.copy()
+            for slot in np.nonzero(row_on_np)[0]:
+                h = _AsyncDeferredLogits(int(slot), int(vers[slot]), self)
+                self._handles[int(slot)].append(h)
+                handles[int(slot)] = h
+            tok = np.asarray(tokens, np.int32).copy()
+            pos = np.asarray(positions, np.int32).copy()
+            msk = np.asarray(masks, bool).copy()
+            ml = np.asarray(model_len, np.int32).copy()
+            wi = np.asarray(write_idx, np.int32).copy()
+            self._push(("layer", self._next_seq(), tok, pos, msk, ml, wi,
+                        row_on_np, vers))
+            self._count("entry_msgs")
+            d_all = _DraftVerifyResult(self)
+            self._submit_draft(("verify", tok, pos, msk, ml, wi,
+                                row_on_np, d_all))
+        self._count("pipeline_tick")
+        return d_all, handles
+
+    def verify_rows(self, tokens, positions, masks, model_len, write_idx,
+                    row_on):
+        """Standard seam, async semantics: (handles, d_all) with
+        blocking deferred futures."""
+        d_all, handles = self.tick_rows(tokens, positions, masks,
+                                        model_len, write_idx, row_on)
+        return handles, d_all
+
+    def commit_rows(self, model_len, commit_mask) -> None:
+        """Queue the target-side exit commit into the next ctrl message
+        (it must trail the in-flight layers stage by stage); the draft
+        commit is a job on the draft actor in the same push order."""
+        mask = np.asarray(commit_mask).copy()
+        ml = np.asarray(model_len).astype(np.int32)
+        self._ctrl_commit |= mask
+        self._ctrl_len = np.where(mask, ml, self._ctrl_len)
+        if mask.any():
+            self._ctrl_active = True
+        self._submit_draft(("commit", ml.copy(), mask))
+        self._count("commit_rows")
+
+    def remap_row(self, slot: int, index_map) -> None:
+        imap = np.asarray(index_map, np.int32)
+        self._ctrl_imap[slot] = imap
+        self._ctrl_active = True
+        self._submit_draft(("remap_row", int(slot), imap.copy()))
+
+    def remap_rows(self, index_maps, row_mask) -> None:
+        rm = np.asarray(row_mask)
+        if not rm.any():
+            return
+        imaps = np.asarray(index_maps, np.int32)
+        self._ctrl_imap = np.where(rm[:, None], imaps, self._ctrl_imap)
+        self._ctrl_active = True
+        self._submit_draft(("remap", imaps.copy()))
+        self._count("remap_rows")
+
+    def kill(self, slot: int, *, drop_ctrl: bool = False) -> None:
+        """Invalidate the slot's in-flight layers WHEREVER they sit:
+        bumping the version makes every stage's next liveness check
+        suppress the stale rows immediately — the short-circuit the
+        lockstep ring can only apply one tick at a time.  Outstanding
+        futures die; ``drop_ctrl=True`` (retire) additionally cancels
+        the slot's queued ctrl and neutralises its in-flight ctrl
+        messages via the ctrl-version bump (a miss keeps them — its
+        earlier commits must finish propagating)."""
+        self._versions[slot] += 1
+        for h in self._handles[slot]:
+            h.dead = True
+        self._handles[slot].clear()
+        if drop_ctrl:
+            self._ctrl_commit[slot] = False
+            self._ctrl_len[slot] = 0
+            self._ctrl_imap[slot] = self._identity_imap[slot]
+            self._ctrl_versions[slot] += 1
+        self._count("kill")
+
+    def drain(self) -> int:
+        """Block until every pushed message has come out the far end and
+        the draft actor's job queue is empty (bounded, error-raising).
+        Leaves the pipe idle and every future resolved."""
+        if not self._started:
+            return 0
+        n = 0
+        while self._consumed < self._pushed:
+            self._pump()
+            n += 1
+        deadline = time.monotonic() + self.timeout_s
+        while self._draft_done < self._draft_pushed:
+            self._check_errors()
+            if time.monotonic() > deadline:
+                raise AsyncExecutorError(
+                    f"timed out after {self.timeout_s}s draining the "
+                    f"draft actor")
+            time.sleep(0.002)
+        if any(self._handles):
+            raise AsyncExecutorError(
+                "drained pipe left unresolved flights — exit/handle "
+                "bookkeeping out of sync")
+        self._count("drain")
+        return n
+
+    def shutdown(self) -> None:
+        """Drain the pipe, stop the actors and join their threads
+        (idempotent; a later use restarts the actors lazily).  After a
+        failure the drain is skipped and the threads are released via
+        the shared abort event."""
+        if not self._started:
+            return
+        self._gate.set()
+        if not self._errors:
+            try:
+                self.drain()
+            except AsyncExecutorError:
+                pass
+        stop = ("stop", self._next_seq())
+        for q in (self._inboxes[0], self._draft_q):
+            try:
+                q.put(stop, timeout=1.0)
+            except queue.Full:
+                self._failed.set()
+        deadline = time.monotonic() + min(self.timeout_s, 30.0)
+        while not self._failed.is_set():
+            try:
+                msg = self._exit_q.get(timeout=0.1)
+            except queue.Empty:
+                if self._errors or time.monotonic() > deadline:
+                    break
+                continue
+            if msg[0] == "stop":
+                break
+            self._consume_exit(msg)
+        self._failed.set()               # release any blocked actor
+        for t in self._threads:
+            t.join(timeout=10.0)
+        alive = [t.name for t in self._threads if t.is_alive()]
+        self._threads = []
+        self._started = False
+        self._failed = threading.Event()
+        if alive:
+            raise AsyncExecutorError(
+                f"actor threads failed to join: {alive}")
+
+    # -- introspection ---------------------------------------------------
+    def draft_lead(self) -> int:
+        """How many verify jobs the disaggregated draft has completed
+        ahead of the target exits the engine has consumed — the
+        speculation run-ahead depth."""
+        return self._draft_verified - self._exit_layers_consumed
+
+    def counters(self) -> dict:
+        """Snapshot of the per-stage actor counters (msgs processed,
+        layer steps, stale rows suppressed, ctrl applied/skipped, busy
+        and idle seconds, max inbox depth) plus the draft-lead gauges
+        and message totals — what the async demo prints."""
+        return {
+            "stages": [dict(c) for c in self.stage_counters],
+            "draft_lead": self.draft_lead(),
+            "max_draft_lead": self._max_draft_lead,
+            "pushed": self._pushed,
+            "consumed": self._consumed,
+        }
+
+    def _draft_cache(self):
+        return self._d_cache
+
+    def _draft_tree(self):
+        return self._d_tree

@@ -26,7 +26,8 @@ import pytest
 from repro.core.pipedec import PipeDecConfig, PipeDecEngine
 from repro.core.speculative import ModelBundle
 from repro.models import transformer as tf
-from repro.serving import (OverlappedShardedExecutor, Request,
+from repro.serving import (AsyncExecutorError, AsyncPipelineExecutor,
+                           OverlappedShardedExecutor, Request,
                            ShardedPipelineExecutor, SpecPipeDBEngine,
                            generate_with_executor)
 
@@ -67,6 +68,14 @@ def _sharded(bundles, slots, n_stages=1, cls=ShardedPipelineExecutor,
 def _overlapped(bundles, slots):
     return _sharded(bundles, slots, cls=OverlappedShardedExecutor,
                     pcfg=PCFG1)
+
+
+def _async(bundles, slots, pcfg=PCFG):
+    # the async backend round-robins stage actors over the available
+    # devices, so a 3-stage actor chain runs fine on the 1-device test
+    # process (unlike the lockstep mesh executors)
+    return _sharded(bundles, slots, cls=AsyncPipelineExecutor,
+                    n_stages=pcfg.n_stages, pcfg=pcfg)
 
 
 def test_sharded_executor_bitmatches_local_and_single(bundles):
@@ -162,7 +171,7 @@ def test_sharded_8stage_acceptance_pin_subprocess():
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.sharded_check", "--stages",
-         "8", "--requests", "4", "--overlap"],
+         "8", "--requests", "4", "--overlap", "--async"],
         capture_output=True, text=True, timeout=1800, env=env, cwd=REPO)
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
     lines = proc.stdout.strip().splitlines()
@@ -199,6 +208,22 @@ def test_sharded_8stage_acceptance_pin_subprocess():
     # leak into the recycled slot's next occupant
     assert summary["slot_recycle"]["bit_identical"]
     assert summary["slot_recycle"]["kills"] >= 2
+    # async free-running backend: bit-identical on the same workloads
+    # (miss-heavy, self-draft, long-prompt, slot-recycle), with a kill
+    # observed to cancel an in-flight layer at stage 0 — before a full
+    # ring revolution — plus fail-loudly and clean-shutdown pins
+    for wl in ("independent_draft", "self_draft", "long_prompt"):
+        asy = summary[wl]["sharded_async"]
+        assert asy["dispatches"]["stage_steps"] == \
+            asy["dispatches"]["entry_msgs"] * 8
+    assert summary["independent_draft"]["sharded_async"][
+        "dispatches"]["kill"] > 0
+    assert summary["async_kill_latency"]["stale_at_stage0"] >= 1
+    assert summary["async_kill_latency"]["revolution_hops_saved"] == 7
+    assert summary["async_failfast"]["propagates"]
+    assert summary["async_shutdown"]["deterministic"]
+    assert summary["async_shutdown"]["no_leaked_threads"]
+    assert summary["async_slot_recycle"]["bit_identical"]
 
 
 def test_overlapped_bitmatches_flush_and_single(bundles):
@@ -296,6 +321,115 @@ def test_overlapped_stale_flight_cannot_commit(bundles):
     h.dead = True
     with pytest.raises(RuntimeError, match="stale"):
         h.resolve()
+
+
+def test_async_bitmatches_lockstep_and_single(bundles):
+    """The async free-running backend (3 stage actors + a draft actor on
+    the 1-device test process): staggered arrivals + slot churn must
+    bit-match the flush sharded backend and the single-request engine —
+    same tree policy, radically different schedule."""
+    target, draft = bundles
+    reqs = _mk_reqs(11, 4, arrivals=[0, 1, 4, 6], max_new=[4, 5, 3, 4])
+    single = PipeDecEngine(target, draft, PCFG, max_len=MAX_LEN)
+    want = {r.uid: single.generate(r.prompt, r.max_new_tokens)[0]
+            for r in reqs}
+
+    outs = {}
+    execs = {"flush": _sharded(bundles, 2), "async": _async(bundles, 2)}
+    for name, ex in execs.items():
+        eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                               max_slots=2, executor=ex)
+        for r in reqs:
+            eng.submit(r)
+        outs[name] = eng.run()
+    ex = execs["async"]
+    try:
+        for uid, tokens in want.items():
+            np.testing.assert_array_equal(
+                outs["flush"][uid].tokens, tokens,
+                err_msg=f"flush vs single uid={uid}")
+            np.testing.assert_array_equal(
+                outs["async"][uid].tokens, tokens,
+                err_msg=f"async vs single uid={uid}")
+        # every entry message stepped every free-running stage exactly
+        # once, and the drained pipe consumed all its messages
+        assert ex.calls["stage_steps"] == \
+            ex.calls["entry_msgs"] * PCFG.n_stages
+        assert ex._consumed == ex._pushed
+    finally:
+        ex.shutdown()
+
+
+def test_async_kill_short_circuits_in_flight_layer(bundles):
+    """Kill latency: with the stage gate paused, a pushed layer whose
+    slot is killed must die at stage 0 — before even ONE hop, where the
+    lockstep ring invalidates one stage per tick and a stale layer rides
+    ``n_stages - 1`` more hops before its exit drops."""
+    ex = _async(bundles, 2)
+    try:
+        ex.pause()
+        row_on = np.zeros(2, bool)
+        row_on[0] = True
+        _d, handles = ex.tick_rows(*ex.dead_entry, row_on)
+        ex.kill(0)
+        ex.resume()
+        ex.drain()
+        ctr = ex.counters()
+        assert ctr["stages"][0]["stale_rows"] >= 1, \
+            "kill must beat the paused layer to stage 0"
+        assert all(s["stale_rows"] >= 1 for s in ctr["stages"])
+        assert handles[0].dead
+        assert ex.calls["stale_exits"] >= 1
+    finally:
+        ex.shutdown()
+
+
+def test_async_actor_exception_propagates(bundles):
+    """Fail loudly, never hang: a stage actor that raises must surface
+    on the host thread as ``AsyncExecutorError`` carrying the original
+    traceback (within the executor timeout)."""
+    ex = _async(bundles, 2)
+    ex.timeout_s = 60.0
+    ex._apply_j = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("injected stage fault"))
+    row_on = np.zeros(2, bool)
+    row_on[0] = True
+    try:
+        with pytest.raises(AsyncExecutorError,
+                           match="injected stage fault"):
+            ex.tick_rows(*ex.dead_entry, row_on)
+            ex.drain()
+    finally:
+        ex.shutdown()
+
+
+def test_async_shutdown_clean_and_deterministic(bundles):
+    """Clean shutdown: every actor thread joins (none leaked), shutdown
+    is idempotent, and a fresh executor re-running the workload is
+    bit-deterministic."""
+    import threading
+
+    target, draft = bundles
+    reqs = _mk_reqs(13, 3, arrivals=[0, 1, 3], max_new=[4, 3, 4])
+
+    def run_once():
+        ex = _async(bundles, 2)
+        eng = SpecPipeDBEngine(target, draft, PCFG, max_len=MAX_LEN,
+                               max_slots=2, executor=ex)
+        for r in reqs:
+            eng.submit(r)
+        res = eng.run()
+        ex.shutdown()
+        ex.shutdown()   # idempotent
+        return {u: res[u].tokens for u in res}
+
+    a, b = run_once(), run_once()
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("async-")]
+    assert not leaked, f"leaked actor threads: {leaked}"
+    for u in a:
+        np.testing.assert_array_equal(a[u], b[u],
+                                      err_msg=f"repeat run uid={u}")
 
 
 def test_devices_not_polluted_by_sharded_check():
